@@ -1,0 +1,54 @@
+"""It.7 measurement: qwen3_1_7b × decode_32k roofline under the three serving
+postures — bf16 baseline (paper-faithful float serving), W8A8 weights, and
+W8A8 + int8 KV cache.  Writes hillclimb_decode.json and prints the table.
+
+Run:  PYTHONPATH=src python -m benchmarks.hillclimb_decode
+"""
+from __future__ import annotations
+
+import json
+
+
+def main():
+    import dataclasses as dc
+
+    import jax
+
+    from benchmarks import roofline as RL
+    from repro.configs import get_config
+    from repro.configs.base import SHAPE_BY_NAME
+
+    results = {}
+    for name, w8a8, kv in (
+        ("bf16 + bf16 KV (baseline)", False, "bf16"),
+        ("W8A8 + bf16 KV", True, "bf16"),
+        ("W8A8 + int8 KV", True, "int8"),
+    ):
+        # patch the registry config's cache dtype for this run
+        import repro.configs.qwen3_1_7b as qmod
+
+        orig = qmod.CONFIG
+        qmod.CONFIG = dc.replace(orig, kv_cache_dtype=kv)
+        try:
+            r = RL.roofline_cell("qwen3_1_7b", "decode_32k", w8a8=w8a8)
+        finally:
+            qmod.CONFIG = orig
+        results[name] = r
+        t = r["terms"]
+        print(
+            f"{name:28s} comp={t['t_comp_s']*1e3:8.3f}ms mem={t['t_mem_s']*1e3:8.3f}ms "
+            f"coll={t['t_coll_s']*1e3:8.3f}ms bound={r['bottleneck'][2:-2]} roofline={r['roofline_fraction']:.4f}",
+            flush=True,
+        )
+    base = results["bf16 + bf16 KV (baseline)"]["terms"]["t_mem_s"]
+    best = results["W8A8 + int8 KV"]["terms"]["t_mem_s"]
+    print(f"\ndominant (memory) term: {base*1e3:.3f}ms -> {best*1e3:.3f}ms  ({base/best:.2f}x)")
+    with open("hillclimb_decode.json", "w") as f:
+        json.dump({k: {kk: vv for kk, vv in v.items() if kk != "probes"} for k, v in results.items()}, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    import os
+
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    main()

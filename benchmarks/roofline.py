@@ -1,0 +1,330 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip (394 int8), 819 GB/s HBM,
+~50 GB/s/link ICI; single pod = 256 chips.
+
+Methodology — why probes: every stack here is lowered with ``lax.scan`` over
+layers/microbatches/attention chunks, and XLA's ``cost_analysis()`` counts a
+while-loop body ONCE regardless of trip count.  The full-config dry-run
+therefore proves compile/fit (memory_analysis is correct: buffers are reused
+across iterations), but FLOP/byte totals must be reconstructed.  We lower
+UNROLLED probes of the same config at L=1 and L=2 layers (single microbatch,
+single attention chunk) on the production mesh and take differences:
+
+    per_layer   = cost(L=2) − cost(L=1)        (incl. its collectives)
+    fixed       = cost(L=1) − per_layer        (embed, logits, loss)
+    total       = fixed + per_layer · L_full · microbatches [+ optimizer]
+
+The optimizer is added analytically (elementwise AdamW: ~12 flop, ~24 B HBM
+per param, no collectives — grads are already reduced inside the probe's
+backward).  Collective bytes come from parsing the probe's partitioned HLO,
+so they are per-participant values.
+
+Terms per (arch × shape), single-pod mesh:
+    T_comp = FLOPs_per_device / peak
+    T_mem  = HBM_bytes_per_device / HBM_bw
+    T_coll = collective_bytes_per_device / link_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+from typing import Dict, Optional
+
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+
+def model_flops(cfg, sc, n_params_active: int, n_params_total: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active non-embed
+    params, D = tokens processed by the step."""
+    if sc.kind == "train":
+        tokens = sc.global_batch * sc.seq_len
+        return 6.0 * n_params_active * tokens
+    if sc.kind == "prefill":
+        tokens = sc.global_batch * sc.seq_len
+        return 2.0 * n_params_active * tokens
+    return 2.0 * n_params_active * sc.global_batch  # decode: one token/seq
+
+
+def count_params(cfg) -> Dict[str, int]:
+    """Exact param counts from the abstract param tree."""
+    import jax
+
+    from repro.models import model as M
+
+    specs = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    total = 0
+    embed = 0
+    expert = 0
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    for path, leaf in flat:
+        names = [str(getattr(k, "key", "")) for k in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if names[0] in ("embed",) or names[-1] == "lm_head":
+            embed += n
+        if "moe" in names and names[-1] in ("w_gate", "w_up", "w_down"):
+            expert += n
+    nonembed = total - embed
+    active = nonembed
+    if cfg.moe is not None:
+        active = nonembed - expert + expert * cfg.moe.top_k // cfg.moe.n_experts
+    return {"total": total, "non_embed": nonembed, "active_non_embed": active, "expert": expert}
+
+
+def analytic_memory_bytes(cfg, sc, counts, *, w8a8: bool = False, chips: int = CHIPS, model_axis: int = 16) -> Dict[str, float]:
+    """Analytic minimum per-device HBM traffic (bytes) for one step.
+
+    The CPU-HLO ``bytes accessed`` is an unfused upper bound (every elementwise
+    op round-trips HBM); on TPU, XLA fuses those chains, so the *floor* is:
+
+      weights/pass : bf16 (or int8 when w8a8) × the device's model-axis shard
+                     (N/16) — FSDP gathers over `data` land in HBM once/pass
+      activations  : (8·d + 4·d_ff_active)·2B per token per layer, batch-sharded
+      KV cache     : full local slice read per decode step; written at prefill
+      train extras : ×M microbatches ×3 passes (fwd/bwd/remat), f32 grad
+                     accumulate r/w, AdamW 24 B/param — all /chips (FSDP+TP)
+    """
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.launch import specs as S
+    from repro.models import model as M
+
+    n_total = counts["total"]
+    wb = 1 if w8a8 else 2
+    w_pass = wb * n_total / model_axis  # per-device weight bytes per pass
+    d = cfg.d_model
+    d_ff_active = cfg.d_ff
+    if cfg.moe is not None:
+        d_ff_active = cfg.moe.top_k * cfg.moe.d_ff_expert + (cfg.moe.d_ff_shared or 0)
+    act_unit = (8 * d + 4 * d_ff_active) * 2  # bytes per token per layer
+    L = layer_multiplier(cfg)
+
+    if sc.kind == "train":
+        m = sc.microbatches
+        tokens_local = sc.global_batch * sc.seq_len / 16  # data-sharded
+        act = L * tokens_local * act_unit  # per device, summed over microbatches
+        w = 3 * m * 2 * n_total / model_axis  # bf16 fwd+bwd+remat passes
+        grads = m * 2 * 4 * n_total / chips  # f32 accumulate r/w
+        opt = 24 * n_total / chips
+        logits = 2 * tokens_local * 4 * M.padded_vocab(cfg) / sc.seq_len * 0  # folded into act
+        return {"mem_min_bytes": w + act + grads + opt}
+    cache = S.cache_specs(cfg, sc.global_batch, sc.seq_len, src_len=min(sc.seq_len, 4096) if cfg.family == "encdec" else 0)
+    cache_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)) / chips
+    if sc.kind == "prefill":
+        tokens_local = sc.global_batch * sc.seq_len / 16
+        act = L * tokens_local * act_unit
+        return {"mem_min_bytes": 2 * w_pass + act + cache_bytes}
+    # decode: every weight + the full local cache slice per token step
+    return {"mem_min_bytes": w_pass + cache_bytes + L * sc.global_batch / 16 * act_unit}
+
+
+def probe_config(cfg, n_layers: int):
+    """Unrolled, probe-sized variant of a full config (dims unchanged)."""
+    import dataclasses as dc
+
+    kw = dict(scan_layers=False, n_layers=n_layers, remat_policy="none")
+    if cfg.family == "encdec":
+        kw["n_encoder_layers"] = n_layers
+    if cfg.hybrid is not None:
+        hy = dc.replace(cfg.hybrid, n_groups=n_layers, tail_ssm_layers=0)
+        kw["hybrid"] = hy
+        kw["n_layers"] = n_layers * (cfg.hybrid.ssm_per_group + 1)
+    return dc.replace(cfg, **kw)
+
+
+def layer_multiplier(cfg) -> float:
+    """How many probe-'layers' the full config has."""
+    if cfg.hybrid is not None:
+        hy = cfg.hybrid
+        return hy.n_groups + hy.tail_ssm_layers / (hy.ssm_per_group + 1)
+    return float(cfg.n_layers)
+
+
+def probe_cell(arch: str, shape_name: str, *, multi_pod: bool = False, w8a8: bool = False) -> Dict:
+    """Lower L=1 and L=2 unrolled probes; return per-layer + fixed costs."""
+    import dataclasses as dc
+
+    from repro.configs import get_config
+    from repro.configs.base import SHAPE_BY_NAME
+    from repro.launch import dryrun as DR
+
+    cfg = get_config(arch)
+    sc = SHAPE_BY_NAME[shape_name]
+    if sc.kind == "train":
+        # one microbatch per probe; scale by microbatches afterwards
+        sc_probe = dc.replace(sc, global_batch=sc.global_batch // sc.microbatches, microbatches=1)
+    else:
+        sc_probe = sc
+    chunk = min(sc_probe.seq_len, 32768 if sc.kind != "train" else sc_probe.seq_len)
+
+    out = {}
+    for L in (1, 2):
+        pcfg = probe_config(cfg, L)
+        res = _lower_with_cfg(pcfg, arch, sc_probe, multi_pod=multi_pod, q_chunk=chunk, kv_chunk=chunk, w8a8=w8a8)
+        hlo = res["compiled"].as_text()
+        cost = res["compiled"].cost_analysis()
+        coll = DR.collective_bytes_from_hlo(hlo)
+        out[L] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll_bytes": float(sum(v for k, v in coll.items() if k != "count")),
+            "coll_count": int(coll["count"]),
+        }
+    per_layer = {k: out[2][k] - out[1][k] for k in out[1]}
+    fixed = {k: out[1][k] - per_layer[k] for k in out[1]}
+    return {"per_layer": per_layer, "fixed": fixed, "probe": out}
+
+
+def _lower_with_cfg(pcfg, arch, sc, *, multi_pod, q_chunk, kv_chunk, w8a8=False):
+    """dryrun.lower_cell but with an explicit (probe) config."""
+    from repro.distributed.sharding import use_mesh
+    from repro.launch import specs as S
+    from repro.launch import steps
+    from repro.launch.mesh import make_production_mesh
+
+    import jax
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with use_mesh(mesh):
+        p_specs = S.params_specs(pcfg)
+        if w8a8 and sc.kind != "train":
+            from repro.core.convert import convert_params_w8a8
+
+            p_specs = jax.eval_shape(convert_params_w8a8, p_specs)
+        p_sh = S.params_shardings(p_specs, mesh)
+        if sc.kind == "train":
+            fn = steps.make_grad_step(pcfg, sc, q_chunk=q_chunk, kv_chunk=kv_chunk)
+            b_specs = S.train_batch_specs(pcfg, sc)
+            b_sh = S.batch_shardings(b_specs, mesh)
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(p_specs, b_specs)
+        elif sc.kind == "prefill":
+            b_specs, c_specs = S.prefill_input_specs(pcfg, sc)
+            b_sh = S.batch_shardings(b_specs, mesh)
+            c_sh = S.cache_shardings(c_specs, mesh)
+            fn = steps.make_prefill_step(pcfg, q_chunk=q_chunk, kv_chunk=kv_chunk)
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh, c_sh), donate_argnums=(2,))
+            lowered = jitted.lower(p_specs, b_specs, c_specs)
+        else:
+            toks, pos, c_specs = S.decode_input_specs(pcfg, sc)
+            c_sh = S.cache_shardings(c_specs, mesh)
+            t_sh = S.batch_shardings({"tokens": toks, "pos": pos}, mesh)
+            fn = steps.make_decode_step(pcfg)
+            jitted = jax.jit(fn, in_shardings=(p_sh, t_sh["tokens"], t_sh["pos"], c_sh), donate_argnums=(3,))
+            lowered = jitted.lower(p_specs, toks, pos, c_specs)
+        return {"compiled": lowered.compile(), "lowered": lowered}
+
+
+def roofline_cell(arch: str, shape_name: str, *, multi_pod: bool = False, w8a8: bool = False) -> Dict:
+    """Full roofline record for one cell."""
+    from repro.configs import get_config
+    from repro.configs.base import SHAPE_BY_NAME
+    from repro.launch.specs import skip_reason
+
+    cfg = get_config(arch)
+    sc = SHAPE_BY_NAME[shape_name]
+    skip = skip_reason(cfg, sc)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "status": "skip", "reason": skip}
+
+    counts = count_params(cfg)
+    probes = probe_cell(arch, shape_name, multi_pod=multi_pod, w8a8=w8a8)
+    lm = layer_multiplier(cfg)
+    mm = sc.microbatches if sc.kind == "train" else 1
+
+    per_dev = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        per_dev[key] = max(0.0, probes["fixed"][key] * mm + probes["per_layer"][key] * lm * mm)
+    if sc.kind == "train":
+        # AdamW analytic add-on: ~12 flop + ~24 HBM bytes per param (per-device
+        # share: params are FSDP+TP sharded across all chips)
+        n_dev = counts["total"] / CHIPS
+        per_dev["flops"] += 12 * n_dev
+        per_dev["bytes"] += 24 * n_dev
+    per_dev.update(analytic_memory_bytes(cfg, sc, counts, w8a8=w8a8))
+
+    t_comp = per_dev["flops"] / PEAK_BF16
+    t_mem_hlo = per_dev["bytes"] / HBM_BW  # unfused upper bound (CPU HLO)
+    t_mem = per_dev["mem_min_bytes"] / HBM_BW  # fused analytic floor
+    t_coll = per_dev["coll_bytes"] / ICI_BW
+    terms = {"t_comp_s": t_comp, "t_mem_s": t_mem, "t_coll_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+
+    mf = model_flops(cfg, sc, counts["active_non_embed"], counts["total"])
+    hlo_total_flops = per_dev["flops"] * CHIPS
+    useful = mf / hlo_total_flops if hlo_total_flops else 0.0
+    # roofline fraction: model-useful FLOPs per second vs fleet peak,
+    # at the bound implied by the dominant term
+    mfu_bound = (mf / step_time) / (CHIPS * PEAK_BF16) if step_time else 0.0
+
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok", "multi_pod": multi_pod, "w8a8": w8a8,
+        "params": counts,
+        "per_device": per_dev,
+        "terms": {**{k: round(v, 6) for k, v in terms.items()}, "t_mem_hlo_upper_s": round(t_mem_hlo, 6)},
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "useful_flops_ratio": round(useful, 4),
+        "roofline_fraction": round(mfu_bound, 4),
+        "probes": probes,
+    }
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--w8a8", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs import ARCH_IDS
+    from repro.configs.base import SHAPES
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or not args.shape) else [args.shape]
+    results = []
+    for a in archs:
+        for s in shapes:
+            try:
+                r = roofline_cell(a, s, w8a8=args.w8a8)
+            except Exception as e:
+                import traceback
+
+                r = {"arch": a, "shape": s, "status": "fail", "error": f"{type(e).__name__}: {e}",
+                     "trace": traceback.format_exc()[-1500:]}
+            results.append(r)
+            if r["status"] == "ok":
+                t = r["terms"]
+                print(
+                    f"{a:24s} {s:12s} comp={t['t_comp_s']:.4f}s mem={t['t_mem_s']:.4f}s "
+                    f"coll={t['t_coll_s']:.4f}s bound={r['bottleneck'][2:-2]:4s} "
+                    f"useful={r['useful_flops_ratio']:.2f} roofline={r['roofline_fraction']:.3f}",
+                    flush=True,
+                )
+            else:
+                print(f"{a:24s} {s:12s} {r['status'].upper()} {r.get('error', r.get('reason', ''))[:140]}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+    return 0
+
+
+if __name__ == "__main__":
+    import os
+
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    sys.exit(main())

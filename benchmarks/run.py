@@ -1,0 +1,208 @@
+"""Benchmark harness — one entry per paper figure/table + system-level extras.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  fig1_fc_two_mul        — Fig 1 pattern: reference runtime vs fused compile
+  fig2_fc_relu_one_mul   — Fig 2
+  fig3_conv              — Fig 3
+  fig4_int8_tanh         — Fig 4 (derived: max int8 ULP error vs fp32 tanh)
+  fig5_fp16_tanh         — Fig 5
+  fig6_fp16_sigmoid      — Fig 6
+  tbl_rescale_decompose  — §3.1 decomposition (derived: worst rel. error)
+  sys_w8a8_decode        — reduced-arch decode step: bf16 vs W8A8+int8-KV
+  sys_grad_compress      — int8 cross-pod gradient all-reduce (derived: wire-
+                           bytes ratio vs f32)
+
+Run:  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _timeit(fn, *args, repeat: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn(*args)
+    return (time.perf_counter() - t0) / repeat * 1e6  # us
+
+
+def row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _fc_pattern(activation, two_mul, act_builder=None):
+    from repro.core import patterns, pqir, quant
+
+    rng = np.random.default_rng(0)
+    scale_w = 0.02 if act_builder is not None else 0.1  # keep preacts in the
+    w = rng.normal(size=(256, 256)).astype(np.float32) * scale_w  # act range
+    b = rng.normal(size=(256,)).astype(np.float32) * 0.1
+    scale_y = (patterns.TANH_INPUT_ABSMAX / 127.0) if act_builder else 0.1
+    p = quant.quantize_linear_layer(w, b, 0.05, scale_y)
+    gb = pqir.GraphBuilder("bench")
+    xi = gb.add_input("x", "int8", (None, 256))
+    if act_builder is not None:
+        y = act_builder(gb, xi, p, "fc0")
+        out_dtype = "uint8" if act_builder is patterns.fc_fp16_sigmoid else "int8"
+    else:
+        y = patterns.fc_layer(gb, xi, p, "fc0", two_mul=two_mul, activation=activation)
+        out_dtype = "int8"
+    gb.add_output(y, out_dtype, (None, 256))
+    model = gb.build()
+    xq = rng.integers(-128, 128, (64, 256)).astype(np.int8)
+    return model, xq, y, w, b
+
+
+def bench_pattern(name, activation=None, two_mul=True, act_builder=None, derived_fn=None):
+    from repro.core.compile import compile_model
+    from repro.core.runtime import ReferenceRuntime
+
+    model, xq, yname, w, b = _fc_pattern(activation, two_mul, act_builder)
+    rt = ReferenceRuntime(model)
+    cm = compile_model(model)
+    ref_out = rt.run({"x": xq})[yname]
+    fused_out = cm.run({"x": xq})[yname]
+    exact = np.array_equal(ref_out, fused_out)
+    us_ref = _timeit(lambda: rt.run({"x": xq}))
+    us_fused = _timeit(lambda: cm.run({"x": xq}))
+    derived = f"fused_us={us_fused:.1f};speedup={us_ref / us_fused:.2f}x;bitexact={exact}"
+    if derived_fn is not None:
+        derived += ";" + derived_fn(model, xq, ref_out, w, b)
+    row(name, us_ref, derived)
+
+
+def _tanh_err(model, xq, out, w, b):
+    ref = np.tanh(xq.astype(np.float32) * 0.05 @ w + b)
+    err = np.abs(out.astype(np.float32) / 127.0 - ref).max()
+    return f"max_err_vs_fp32={err:.4f}"
+
+
+def _sigmoid_err(model, xq, out, w, b):
+    ref = 1.0 / (1.0 + np.exp(-(xq.astype(np.float32) * 0.05 @ w + b)))
+    err = np.abs(out.astype(np.float32) / 255.0 - ref).max()
+    return f"max_err_vs_fp32={err:.4f}"
+
+
+def bench_fig3_conv():
+    from repro.core import patterns, pqir, quant
+    from repro.core.compile import compile_model
+    from repro.core.runtime import ReferenceRuntime
+
+    rng = np.random.default_rng(1)
+    w = rng.integers(-128, 128, (16, 8, 3, 3)).astype(np.int8)
+    b = rng.integers(-100, 100, (16,)).astype(np.int32)
+    r = quant.decompose_multiplier(0.002)
+    gb = pqir.GraphBuilder("bench_conv")
+    xi = gb.add_input("x", "int8", (None, 8, 16, 16))
+    y = patterns.conv_layer(gb, xi, w, b, r, "c0", pads=(1, 1, 1, 1))
+    gb.add_output(y, "int8", (None, 16, 16, 16))
+    model = gb.build()
+    xq = rng.integers(-128, 128, (8, 8, 16, 16)).astype(np.int8)
+    rt = ReferenceRuntime(model)
+    cm = compile_model(model)
+    exact = np.array_equal(rt.run({"x": xq})[y], cm.run({"x": xq})[y])
+    us_ref = _timeit(lambda: rt.run({"x": xq}), repeat=5)
+    us_fused = _timeit(lambda: cm.run({"x": xq}))
+    row("fig3_conv", us_ref, f"fused_us={us_fused:.1f};speedup={us_ref / us_fused:.2f}x;bitexact={exact}")
+
+
+def bench_rescale_table():
+    from repro.core import quant
+
+    rng = np.random.default_rng(2)
+    worst = 0.0
+    for m in np.concatenate([[0.25, 1 / 3, 1.0, 2**-20], rng.uniform(1e-5, 50.0, 5000)]):
+        r = quant.decompose_multiplier(float(m))
+        worst = max(worst, abs(r.realized - m) / m)
+    us = _timeit(lambda: quant.decompose_multiplier(0.123456), repeat=200)
+    anchors = quant.decompose_multiplier(1 / 3)
+    row(
+        "tbl_rescale_decompose",
+        us,
+        f"worst_rel_err={worst:.2e};anchor_1/3=({anchors.quant_scale},{anchors.shift});max_exact_int={quant.MAX_EXACT_FLOAT_INT}",
+    )
+
+
+def bench_w8a8_decode():
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core.convert import convert_params_w8a8
+    from repro.models import model as M
+
+    cfg = get_config("qwen3_1_7b", reduced=True)
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    pq = convert_params_w8a8(params)
+    B, S = 4, 64
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)).astype(np.int32))
+    pos = jnp.full((B,), S // 2, jnp.int32)
+
+    d16 = jax.jit(lambda p, t, ps, c: M.decode_step(p, t, ps, c, cfg, compute_dtype=jnp.float32))
+    d8 = jax.jit(lambda p, t, ps, c: M.decode_step(p, t, ps, c, cfg8, compute_dtype=jnp.float32))
+    c16 = M.init_cache(cfg, B, S)
+    c8 = M.init_cache(cfg8, B, S)
+    l16, _ = d16(params, toks, pos, c16)
+    l8, _ = d8(pq, toks, pos, c8)
+    agree = float((jnp.argmax(l16, -1) == jnp.argmax(l8, -1)).mean())
+    us16 = _timeit(lambda: jax.block_until_ready(d16(params, toks, pos, c16)), repeat=10)
+    us8 = _timeit(lambda: jax.block_until_ready(d8(pq, toks, pos, c8)), repeat=10)
+    # derived: HBM bytes that matter on TPU — weight + cache footprint ratio
+    import jax.tree_util as jtu
+
+    bytes_of = lambda t: sum(x.size * x.dtype.itemsize for x in jtu.tree_leaves(t))
+    ratio = bytes_of(params) / bytes_of(pq)
+    row("sys_w8a8_decode", us16, f"w8a8_us={us8:.1f};argmax_agree={agree:.2f};weight_bytes_ratio={ratio:.2f}x")
+
+
+def bench_grad_compress():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.optim.grad_compress import _compress_leaf
+
+    # single-device emulation of the wire format economics
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.normal(size=(1024, 1024)).astype(np.float32))
+    res = jnp.zeros_like(g)
+
+    def one(g, res):
+        g_eff = g + res
+        s = jnp.abs(g_eff).max() / 127.0 + 1e-20
+        q = jnp.clip(jnp.rint(g_eff / s), -128, 127)
+        return (s * q), g_eff - s * q
+
+    fn = jax.jit(one)
+    fn(g, res)
+    us = _timeit(lambda: jax.block_until_ready(fn(g, res)), repeat=10)
+    deq, _ = fn(g, res)
+    err = float(jnp.abs(deq - g).max() / jnp.abs(g).max())
+    row("sys_grad_compress", us, f"wire_bytes_ratio=4.00x_vs_f32;one_round_rel_err={err:.4f}")
+
+
+def main() -> None:
+    from repro.core import patterns
+
+    print("name,us_per_call,derived")
+    bench_pattern("fig1_fc_two_mul", activation=None, two_mul=True)
+    bench_pattern("fig2_fc_relu_one_mul", activation="Relu", two_mul=False)
+    bench_fig3_conv()
+    bench_pattern("fig4_int8_tanh", act_builder=patterns.fc_int8_tanh, derived_fn=_tanh_err)
+    bench_pattern("fig5_fp16_tanh", act_builder=patterns.fc_fp16_tanh, derived_fn=_tanh_err)
+    bench_pattern("fig6_fp16_sigmoid", act_builder=patterns.fc_fp16_sigmoid, derived_fn=_sigmoid_err)
+    bench_rescale_table()
+    bench_w8a8_decode()
+    bench_grad_compress()
+
+
+if __name__ == "__main__":
+    main()

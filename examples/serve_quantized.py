@@ -1,0 +1,76 @@
+"""End-to-end serving driver: batched requests through the continuous-batching
+engine, comparing three quantization postures of the SAME model:
+
+    bf16 weights + bf16 KV cache   (baseline)
+    bf16 weights + int8 KV cache   (paper scheme on the cache)
+    W8A8 weights + int8 KV cache   (fully pre-quantized serving)
+
+Run:  PYTHONPATH=src python examples/serve_quantized.py [--arch minicpm_2b]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.convert import convert_params_w8a8
+from repro.models import model as M
+from repro.serving.engine import EngineConfig, Request, ServeEngine
+
+
+def run_engine(params, cfg, prompts, new_tokens, slots):
+    ecfg = EngineConfig(slots=slots, max_len=int(max(len(p) for p in prompts)) + new_tokens + 8)
+    eng = ServeEngine(params, cfg, ecfg)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=new_tokens) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.monotonic()
+    eng.run_until_drained()
+    dt = time.monotonic() - t0
+    toks = sum(len(r.generated) for r in reqs)
+    return reqs, toks / dt, eng.metrics
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm_2b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (args.prompt_len,)).astype(np.int32) for _ in range(args.requests)]
+
+    results = {}
+    r_base, tput, m = run_engine(params, cfg, prompts, args.new_tokens, args.slots)
+    results["bf16/bf16-kv"] = (r_base, tput, m)
+
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    r_kv8, tput, m = run_engine(params, cfg8, prompts, args.new_tokens, args.slots)
+    results["bf16/int8-kv"] = (r_kv8, tput, m)
+
+    pq = convert_params_w8a8(params)
+    r_w8, tput, m = run_engine(pq, cfg8, prompts, args.new_tokens, args.slots)
+    results["w8a8/int8-kv"] = (r_w8, tput, m)
+
+    base = results["bf16/bf16-kv"][0]
+    print(f"\n{args.arch} — {args.requests} requests × {args.new_tokens} new tokens, {args.slots} slots")
+    print(f"{'config':16s} {'tok/s':>8s} {'vs-baseline token agreement':>30s}")
+    for name, (reqs, tput, m) in results.items():
+        match = np.mean([
+            np.mean([a == b for a, b in zip(x.generated, y.generated)]) for x, y in zip(reqs, base)
+        ])
+        print(f"{name:16s} {tput:8.1f} {match:29.1%}")
+    print("\n(int8 KV and W8A8 cut cache and weight HBM traffic 2× each — on CPU "
+        "wall-clock is emulation-bound; the roofline table in EXPERIMENTS.md "
+        "§Perf quantifies the TPU effect.)")
+
+
+if __name__ == "__main__":
+    main()

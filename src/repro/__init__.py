@@ -1,0 +1,4 @@
+"""repro — pre-quantized model codification (Hanebutte et al. 2021) as a
+production JAX framework: quantizer toolchain, PQ-IR artifact, TPU compiler
+with Pallas kernels, 10-arch model zoo, multi-pod pjit distribution."""
+__version__ = "1.0.0"

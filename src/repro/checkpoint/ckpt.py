@@ -1,0 +1,110 @@
+"""Sharded, atomic, elastic checkpoints (numpy container format).
+
+Layout:  <dir>/step_<N>/
+            manifest.json          — tree structure, shapes, dtypes, step
+            leaf_<i>.npy           — one file per pytree leaf
+         <dir>/LATEST              — atomic pointer (written last)
+
+Fault-tolerance properties:
+  * atomic: leaves + manifest land in a temp dir, then a single rename +
+    LATEST pointer update — a crash mid-save never corrupts the previous
+    checkpoint;
+  * elastic restore: leaves are loaded host-side and ``jax.device_put`` with
+    the *target* mesh's NamedSharding — the destination mesh/device-count can
+    differ from the source (re-sharding is free at load);
+  * self-describing: restore needs no model code, only the manifest.
+
+(Scale note: at 1000+-node scale the leaf files would be written per-shard by
+each data-parallel leader with a distributed barrier; the container format and
+manifest stay identical — see DESIGN.md §5.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _paths_and_leaves(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    """Atomically save a pytree as step_<step>."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    paths, leaves = _paths_and_leaves(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        for i, leaf in enumerate(leaves):
+            np.save(os.path.join(tmp, f"leaf_{i}.npy"), np.asarray(leaf))
+        manifest = {
+            "step": step,
+            "paths": paths,
+            "treedef": str(treedef),
+            "num_leaves": len(leaves),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # LATEST pointer last — readers never see a partial checkpoint
+    latest_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(str(step))
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    try:
+        with open(os.path.join(ckpt_dir, "LATEST")) as f:
+            return int(f.read().strip())
+    except (FileNotFoundError, ValueError):
+        return None
+
+
+def restore(
+    ckpt_dir: str,
+    target_tree: Any,
+    *,
+    step: Optional[int] = None,
+    shardings: Any = None,
+) -> Tuple[Any, int, dict]:
+    """Restore into the structure of ``target_tree``; optionally place leaves
+    with ``shardings`` (a matching pytree of NamedSharding — may describe a
+    DIFFERENT mesh than the one that saved: elastic restart)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = [np.load(os.path.join(d, f"leaf_{i}.npy")) for i in range(manifest["num_leaves"])]
+    treedef = jax.tree_util.tree_structure(target_tree)
+    if treedef.num_leaves != len(leaves):
+        raise ValueError(f"checkpoint has {len(leaves)} leaves; target expects {treedef.num_leaves}")
+    if shardings is not None:
+        flat_sh = treedef.flatten_up_to(shardings)
+        leaves = [
+            jax.device_put(l, s) if s is not None else jax.numpy.asarray(l)
+            for l, s in zip(leaves, flat_sh)
+        ]
+    else:
+        leaves = [jax.numpy.asarray(l) for l in leaves]
+    return treedef.unflatten(leaves), step, manifest.get("extra", {})

@@ -1,0 +1,19 @@
+"""repro.core — the paper's contribution: pre-quantized model codification.
+
+Quantizer side:  quant / calibrate / toolchain / export  (hardware-agnostic)
+Artifact:        pqir (ONNX-dialect, standard ops only, scales embedded)
+Compiler side:   runtime (reference oracle) / compile (JAX+Pallas TPU backend)
+"""
+from . import calibrate, patterns, pqir, quant, runtime, toolchain  # noqa: F401
+from .pqir import Graph, GraphBuilder, Model, Node, TensorInfo  # noqa: F401
+from .quant import (  # noqa: F401
+    MAX_EXACT_FLOAT_INT,
+    QuantizedLinearParams,
+    Rescale,
+    decompose_multiplier,
+    dequantize,
+    quantize,
+    quantize_bias,
+    quantize_linear_layer,
+)
+from .runtime import ReferenceRuntime, run_model  # noqa: F401

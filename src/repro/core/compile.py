@@ -1,0 +1,456 @@
+"""The hardware-specific compilation stage: PQ-IR → fused JAX/Pallas executable.
+
+This is the *other side* of the paper's co-design contract.  The quantizer
+emitted a standard-ops-only artifact; this compiler recognizes the paper's
+patterns and lowers them onto TPU-native fused kernels:
+
+  {MatMulInteger → Add → Cast → Mul (→ Mul) → [Relu] → QuantizeLinear(1,0)}
+      ⇒ one fused int8 MXU kernel (repro.kernels.qmatmul)
+  {ConvInteger → Add → Cast → Mul (→ Mul) → [Relu] → QuantizeLinear(1,0)}
+      ⇒ XLA int8 conv + fused epilogue (repro.kernels.ops.quantized_conv2d)
+  {DequantizeLinear → [Cast f16] → Tanh|Sigmoid → [Cast f32] → QuantizeLinear}
+      on an int8 tensor
+      ⇒ exact 256-entry VMEM LUT (repro.kernels.qact_lut), built with
+        reference-runtime semantics (incl. the fp16 casts) ⇒ bit-exact.
+
+Anything unmatched falls back to a generic jnp op mirror, so *every* valid
+artifact compiles.  Conformance: integer paths are bit-exact vs
+:mod:`repro.core.runtime`; float fallbacks are allclose.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from ..kernels.qact_lut import build_lut
+from .pqir import DTYPES, Graph, Model, Node
+
+# ---------------------------------------------------------------------------
+# light dtype inference (enough to validate fusion preconditions)
+# ---------------------------------------------------------------------------
+
+
+def infer_dtypes(graph: Graph) -> Dict[str, str]:
+    dt: Dict[str, str] = {t.name: t.dtype for t in graph.inputs}
+    for name, arr in graph.initializers.items():
+        dt[name] = str(arr.dtype)
+    for node in graph.toposorted():
+        o = node.outputs[0]
+        t = node.op_type
+        if t in ("MatMulInteger", "ConvInteger"):
+            dt[o] = "int32"
+        elif t == "QuantizeLinear":
+            dt[o] = dt.get(node.inputs[2], "int8") if len(node.inputs) > 2 else "int8"
+        elif t == "DequantizeLinear":
+            dt[o] = "float32"
+        elif t == "Cast":
+            dt[o] = node.attrs["to"]
+        elif t in ("Shape",):
+            dt[o] = "int64"
+        else:
+            dt[o] = dt.get(node.inputs[0], "float32")
+        for extra in node.outputs[1:]:
+            dt[extra] = dt[o]
+    return dt
+
+
+# ---------------------------------------------------------------------------
+# generic jnp op mirror (fallback path)
+# ---------------------------------------------------------------------------
+
+_JOPS: Dict[str, Callable] = {}
+
+
+def _jop(name):
+    def deco(fn):
+        _JOPS[name] = fn
+        return fn
+
+    return deco
+
+
+@_jop("MatMulInteger")
+def _j_matmuli(node, ins):
+    a, b = ins[0], ins[1]
+    a32 = a.astype(jnp.int32) - (ins[2].astype(jnp.int32) if len(ins) > 2 and ins[2] is not None else 0)
+    b32 = b.astype(jnp.int32) - (ins[3].astype(jnp.int32) if len(ins) > 3 and ins[3] is not None else 0)
+    return [jax.lax.dot_general(a32, b32, (((a32.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.int32)]
+
+
+@_jop("ConvInteger")
+def _j_convi(node, ins):
+    x, w = ins[0], ins[1]
+    pads = tuple(node.attrs.get("pads", (0, 0, 0, 0)))
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int8) if x.dtype != jnp.uint8 else x.astype(jnp.int32),
+        w.astype(jnp.int8),
+        window_strides=tuple(node.attrs.get("strides", (1, 1))),
+        padding=((pads[0], pads[2]), (pads[1], pads[3])),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=int(node.attrs.get("group", 1)),
+        preferred_element_type=jnp.int32,
+    )
+    return [acc]
+
+
+@_jop("QuantizeLinear")
+def _j_ql(node, ins):
+    x, scale = ins[0], ins[1]
+    zp = ins[2] if len(ins) > 2 else jnp.zeros((), jnp.int8)
+    info = jnp.iinfo(zp.dtype)
+    y = jnp.rint(x.astype(jnp.float32) / scale.astype(jnp.float32)) + zp.astype(jnp.float32)
+    return [jnp.clip(y, info.min, info.max).astype(zp.dtype)]
+
+
+@_jop("DequantizeLinear")
+def _j_dql(node, ins):
+    x, scale = ins[0], ins[1]
+    zp = ins[2].astype(jnp.int32) if len(ins) > 2 else 0
+    return [(x.astype(jnp.int32) - zp).astype(jnp.float32) * scale.astype(jnp.float32)]
+
+
+@_jop("Cast")
+def _j_cast(node, ins):
+    return [ins[0].astype(DTYPES[node.attrs["to"]])]
+
+
+for _name, _fn in {
+    "Mul": lambda node, ins: [ins[0] * ins[1]],
+    "Add": lambda node, ins: [ins[0] + ins[1]],
+    "Sub": lambda node, ins: [ins[0] - ins[1]],
+    "Div": lambda node, ins: [ins[0] // ins[1] if jnp.issubdtype(ins[0].dtype, jnp.integer) else ins[0] / ins[1]],
+    "Relu": lambda node, ins: [jnp.maximum(ins[0], jnp.zeros((), ins[0].dtype))],
+    "Tanh": lambda node, ins: [jnp.tanh(ins[0]).astype(ins[0].dtype)],
+    "Sigmoid": lambda node, ins: [jax.nn.sigmoid(ins[0].astype(jnp.float32)).astype(ins[0].dtype)],
+    "Erf": lambda node, ins: [jax.lax.erf(ins[0].astype(jnp.float32)).astype(ins[0].dtype)],
+    "Sqrt": lambda node, ins: [jnp.sqrt(ins[0])],
+    "Pow": lambda node, ins: [jnp.power(ins[0], ins[1])],
+    "Clip": lambda node, ins: [jnp.clip(ins[0], ins[1] if len(ins) > 1 else None, ins[2] if len(ins) > 2 else None)],
+    "Softmax": lambda node, ins: [jax.nn.softmax(ins[0].astype(jnp.float32), axis=int(node.attrs.get("axis", -1))).astype(ins[0].dtype)],
+    "MatMul": lambda node, ins: [ins[0] @ ins[1]],
+    "Reshape": lambda node, ins: [ins[0].reshape(tuple(int(s) for s in np.asarray(ins[1])))],
+    "Transpose": lambda node, ins: [jnp.transpose(ins[0], node.attrs.get("perm"))],
+    "Flatten": lambda node, ins: [ins[0].reshape((int(np.prod(ins[0].shape[: int(node.attrs.get("axis", 1))])) if int(node.attrs.get("axis", 1)) else 1, -1))],
+    "Concat": lambda node, ins: [jnp.concatenate(ins, axis=int(node.attrs["axis"]))],
+    "Gather": lambda node, ins: [jnp.take(ins[0], ins[1].astype(jnp.int32), axis=int(node.attrs.get("axis", 0)))],
+    "GlobalAveragePool": lambda node, ins: [ins[0].mean(axis=(2, 3), keepdims=True).astype(ins[0].dtype)],
+    "ReduceMean": lambda node, ins: [ins[0].mean(axis=tuple(node.attrs.get("axes")) if node.attrs.get("axes") else None, keepdims=bool(node.attrs.get("keepdims", 1))).astype(ins[0].dtype)],
+}.items():
+    _JOPS[_name] = _fn
+
+
+@_jop("Gemm")
+def _j_gemm(node, ins):
+    a, b = ins[0], ins[1]
+    if node.attrs.get("transA", 0):
+        a = a.T
+    if node.attrs.get("transB", 0):
+        b = b.T
+    y = float(node.attrs.get("alpha", 1.0)) * (a @ b)
+    if len(ins) > 2 and ins[2] is not None:
+        y = y + float(node.attrs.get("beta", 1.0)) * ins[2]
+    return [y.astype(ins[0].dtype)]
+
+
+@_jop("MaxPool")
+def _j_maxpool(node, ins):
+    x = ins[0]
+    kh, kw = node.attrs["kernel_shape"]
+    sh, sw = tuple(node.attrs.get("strides", (kh, kw)))
+    pads = tuple(node.attrs.get("pads", (0, 0, 0, 0)))
+    init = -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min
+    y = jax.lax.reduce_window(
+        x, init, jax.lax.max, (1, 1, kh, kw), (1, 1, sh, sw),
+        ((0, 0), (0, 0), (pads[0], pads[2]), (pads[1], pads[3])),
+    )
+    return [y]
+
+
+@_jop("AveragePool")
+def _j_avgpool(node, ins):
+    x = ins[0].astype(jnp.float32)
+    kh, kw = node.attrs["kernel_shape"]
+    sh, sw = tuple(node.attrs.get("strides", (kh, kw)))
+    pads = tuple(node.attrs.get("pads", (0, 0, 0, 0)))
+    y = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 1, kh, kw), (1, 1, sh, sw),
+        ((0, 0), (0, 0), (pads[0], pads[2]), (pads[1], pads[3])),
+    ) / (kh * kw)
+    return [y.astype(ins[0].dtype)]
+
+
+# ---------------------------------------------------------------------------
+# fusion
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Step:
+    fn: Callable
+    inputs: List[str]  # graph-tensor inputs (non-initializer)
+    outputs: List[str]
+    kind: str  # "fused_qlinear" | "fused_qconv" | "fused_lut" | "generic"
+
+
+_NP_ACT = {"Tanh": np.tanh, "Sigmoid": lambda x: (1.0 / (1.0 + np.exp(-x.astype(np.float32)))).astype(x.dtype)}
+
+
+class Compiler:
+    def __init__(self, model: Model, *, backend: str = "ref", fuse: bool = True) -> None:
+        model.validate()
+        self.model = model
+        self.graph = model.graph
+        self.backend = backend
+        self.fuse = fuse
+        self.inits = {k: v for k, v in self.graph.initializers.items()}
+        self.dtypes = infer_dtypes(self.graph)
+        self.consumers = self.graph.consumers()
+        self.out_names = {t.name for t in self.graph.outputs}
+        self.steps: List[Step] = []
+        self.stats = {"fused_qlinear": 0, "fused_qconv": 0, "fused_lut": 0, "generic": 0}
+
+    # -- helpers ------------------------------------------------------------
+    def _single_consumer(self, tensor: str) -> Optional[Node]:
+        if tensor in self.out_names:
+            return None
+        cons = self.consumers.get(tensor, [])
+        return cons[0] if len(cons) == 1 else None
+
+    def _init_val(self, name: str) -> Optional[np.ndarray]:
+        return self.inits.get(name)
+
+    # -- chain matchers -------------------------------------------------------
+    def _match_qlinear(self, node: Node):
+        """Match MatMulInteger/ConvInteger → [Add] → Cast → Mul [→ Mul] →
+        [Relu] → QuantizeLinear(scale=1, zp=0).  Returns (step, consumed)."""
+        is_conv = node.op_type == "ConvInteger"
+        x_name, w_name = node.inputs[0], node.inputs[1]
+        w = self._init_val(w_name)
+        if w is None or len(node.inputs) > 2:
+            return None
+        cur = node.outputs[0]
+        chain = [node]
+        nxt = self._single_consumer(cur)
+        bias = None
+        if nxt is not None and nxt.op_type == "Add":
+            other = nxt.inputs[1] if nxt.inputs[0] == cur else nxt.inputs[0]
+            b = self._init_val(other)
+            if b is not None:
+                bias = b
+                chain.append(nxt)
+                cur = nxt.outputs[0]
+                nxt = self._single_consumer(cur)
+        if nxt is None or nxt.op_type != "Cast" or nxt.attrs.get("to") != "float32":
+            return None
+        chain.append(nxt)
+        cur = nxt.outputs[0]
+        nxt = self._single_consumer(cur)
+        muls = []
+        while nxt is not None and nxt.op_type == "Mul" and len(muls) < 2:
+            other = nxt.inputs[1] if nxt.inputs[0] == cur else nxt.inputs[0]
+            mv = self._init_val(other)
+            if mv is None:
+                break
+            muls.append(np.asarray(mv, np.float32))
+            chain.append(nxt)
+            cur = nxt.outputs[0]
+            nxt = self._single_consumer(cur)
+        if not muls:
+            return None
+        relu = False
+        if nxt is not None and nxt.op_type == "Relu":
+            relu = True
+            chain.append(nxt)
+            cur = nxt.outputs[0]
+            nxt = self._single_consumer(cur)
+        if nxt is None or nxt.op_type != "QuantizeLinear":
+            return None
+        scale = self._init_val(nxt.inputs[1])
+        zp = self._init_val(nxt.inputs[2]) if len(nxt.inputs) > 2 else np.zeros((), np.int8)
+        if scale is None or zp is None or float(scale) != 1.0 or int(np.asarray(zp)) != 0:
+            return None
+        chain.append(nxt)
+        out_name = nxt.outputs[0]
+        out_dtype = DTYPES[str(np.asarray(zp).dtype)]
+
+        two_mul = len(muls) == 2
+        qs = jnp.asarray(muls[0])
+        qsh = jnp.asarray(muls[1]) if two_mul else jnp.asarray(np.float32(1.0))
+        wj = jnp.asarray(w)
+        bj = None if bias is None else jnp.asarray(np.asarray(bias).reshape(-1).astype(np.int32))
+        backend = self.backend
+        if is_conv:
+            attrs = node.attrs
+
+            def fn(x, _w=wj, _b=bj, _qs=qs, _qsh=qsh):
+                return [
+                    kops.quantized_conv2d(
+                        x, _w, _b, _qs, _qsh,
+                        strides=tuple(attrs.get("strides", (1, 1))),
+                        pads=tuple(attrs.get("pads", (0, 0, 0, 0))),
+                        out_dtype=out_dtype, relu=relu, two_mul=two_mul,
+                    )
+                ]
+
+            kind = "fused_qconv"
+        else:
+
+            def fn(x, _w=wj, _b=bj, _qs=qs, _qsh=qsh):
+                return [
+                    kops.quantized_matmul(
+                        x, _w, _b, _qs, _qsh,
+                        out_dtype=out_dtype, relu=relu, two_mul=two_mul, backend=backend,
+                    )
+                ]
+
+            kind = "fused_qlinear"
+        return Step(fn, [x_name], [out_name], kind), chain
+
+    def _match_lut(self, node: Node):
+        """Match DequantizeLinear(int8) → [Cast f16] → Tanh|Sigmoid →
+        [Cast f32] → QuantizeLinear."""
+        if node.op_type != "DequantizeLinear":
+            return None
+        x_name = node.inputs[0]
+        if self.dtypes.get(x_name) != "int8":
+            return None
+        in_scale = self._init_val(node.inputs[1])
+        in_zp = self._init_val(node.inputs[2]) if len(node.inputs) > 2 else np.zeros((), np.int8)
+        if in_scale is None or int(np.asarray(in_zp)) != 0:
+            return None
+        chain = [node]
+        cur = node.outputs[0]
+        nxt = self._single_consumer(cur)
+        compute_dtype = "float32"
+        if nxt is not None and nxt.op_type == "Cast" and nxt.attrs.get("to") == "float16":
+            compute_dtype = "float16"
+            chain.append(nxt)
+            cur = nxt.outputs[0]
+            nxt = self._single_consumer(cur)
+        if nxt is None or nxt.op_type not in _NP_ACT:
+            return None
+        act = nxt.op_type
+        chain.append(nxt)
+        cur = nxt.outputs[0]
+        nxt = self._single_consumer(cur)
+        if compute_dtype == "float16":
+            if nxt is None or nxt.op_type != "Cast" or nxt.attrs.get("to") != "float32":
+                return None
+            chain.append(nxt)
+            cur = nxt.outputs[0]
+            nxt = self._single_consumer(cur)
+        if nxt is None or nxt.op_type != "QuantizeLinear":
+            return None
+        out_scale = self._init_val(nxt.inputs[1])
+        out_zp = self._init_val(nxt.inputs[2]) if len(nxt.inputs) > 2 else np.zeros((), np.int8)
+        if out_scale is None or int(np.asarray(out_zp)) != 0:
+            return None
+        chain.append(nxt)
+        out_name = nxt.outputs[0]
+        out_dtype = str(np.asarray(out_zp).dtype)
+
+        lut = build_lut(_NP_ACT[act], float(in_scale), float(out_scale), out_dtype, compute_dtype)
+        lut_j = jnp.asarray(lut)
+        backend = self.backend
+
+        def fn(x, _lut=lut_j):
+            return [kops.quantized_activation(x, _lut, backend=backend)]
+
+        return Step(fn, [x_name], [out_name], "fused_lut"), chain
+
+    # -- main ---------------------------------------------------------------
+    def compile(self) -> "CompiledModel":
+        order = self.graph.toposorted()
+        consumed = set()
+        for node in order:
+            if id(node) in consumed:
+                continue
+            if self.fuse:
+                m = None
+                if node.op_type in ("MatMulInteger", "ConvInteger"):
+                    m = self._match_qlinear(node)
+                elif node.op_type == "DequantizeLinear":
+                    m = self._match_lut(node)
+                if m is not None:
+                    step, chain = m
+                    for n in chain:
+                        consumed.add(id(n))
+                    self.steps.append(step)
+                    self.stats[step.kind] += 1
+                    continue
+            self.steps.append(self._generic_step(node))
+            self.stats["generic"] += 1
+        return CompiledModel(self.model, self.steps, self.stats)
+
+    def _generic_step(self, node: Node) -> Step:
+        fn_impl = _JOPS.get(node.op_type)
+        if fn_impl is None:
+            raise NotImplementedError(f"compiler has no lowering for op {node.op_type!r}")
+        graph_inputs = []
+        slots = []  # per node-input: ("env", idx) or ("const", array)
+        for name in node.inputs:
+            if not name:
+                slots.append(("none", None))
+            elif name in self.inits:
+                slots.append(("const", jnp.asarray(self.inits[name])))
+            else:
+                slots.append(("env", len(graph_inputs)))
+                graph_inputs.append(name)
+
+        def fn(*args, _impl=fn_impl, _node=node, _slots=slots):
+            ins = []
+            for kind, v in _slots:
+                if kind == "none":
+                    ins.append(None)
+                elif kind == "const":
+                    ins.append(v)
+                else:
+                    ins.append(args[v])
+            return _impl(_node, ins)
+
+        return Step(fn, graph_inputs, list(node.outputs), "generic")
+
+
+class CompiledModel:
+    """A compiled artifact: jitted end-to-end executable + fusion report."""
+
+    def __init__(self, model: Model, steps: List[Step], stats: Dict[str, int]) -> None:
+        self.model = model
+        self.steps = steps
+        self.stats = stats
+        self.input_names = [t.name for t in model.graph.inputs]
+        self.output_names = [t.name for t in model.graph.outputs]
+        self._jitted = jax.jit(self._execute)
+
+    def _execute(self, feeds: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        env = dict(feeds)
+        for step in self.steps:
+            outs = step.fn(*[env[n] for n in step.inputs])
+            for name, v in zip(step.outputs, outs):
+                env[name] = v
+        return {o: env[o] for o in self.output_names}
+
+    def run(self, feeds: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        res = self._jitted({k: jnp.asarray(v) for k, v in feeds.items()})
+        return {k: np.asarray(v) for k, v in res.items()}
+
+    def __call__(self, **feeds) -> Dict[str, np.ndarray]:
+        return self.run(feeds)
+
+    def lower(self, feeds: Dict[str, jax.ShapeDtypeStruct]):
+        return self._jitted.lower(feeds)
+
+
+def compile_model(model: Model, *, backend: str = "ref", fuse: bool = True) -> CompiledModel:
+    """Compile a PQ-IR artifact for the TPU backend.
+
+    backend: "pallas" (real TPU lowering), "interpret" (Pallas interpreter —
+    CPU-validatable), "ref" (pure-jnp fused ops; what the dry-run lowers).
+    """
+    return Compiler(model, backend=backend, fuse=fuse).compile()

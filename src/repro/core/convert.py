@@ -1,0 +1,88 @@
+"""Model-zoo W8A8 conversion — the paper's technique as a first-class serving
+feature for all 10 architectures.
+
+``convert_params_w8a8(params)`` walks the param tree and replaces every large
+GEMM weight with the pre-quantized representation ``{"q8": int8, "s": f32
+per-out-channel scales}``; :func:`repro.models.layers.linear` (and the MoE
+expert einsums) then compute the paper's MatMulInteger → rescale chain with
+int8 operands on the MXU.  Decode is bandwidth-bound, so halving weight bytes
+is a direct attack on the dominant roofline term (EXPERIMENTS.md §Perf).
+
+Deliberately kept in higher precision (DESIGN.md §4): MoE routers, norms,
+LoRA/decay side-channels (rwkv6), embeddings, and the logits readout.
+``export_arch_quant_manifest`` emits the artifact-side record of every
+quantized tensor with its §3.1 integer scale+shift decomposition, so the
+conversion is *codified*, not implicit.
+"""
+from __future__ import annotations
+
+from typing import Dict, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import decompose_multiplier
+
+# weight leaves (by path-leaf name) that convert to W8A8
+W8A8_NAMES: Set[str] = {
+    "wq", "wk", "wv", "wo", "wr", "wg",
+    "w_gate", "w_up", "w_down",
+    "shared_w_gate", "shared_w_up", "shared_w_down",
+    "q_down", "q_up", "kv_down", "kv_up",
+    "in_proj", "out_proj",
+    "cm_wk", "cm_wv", "cm_wr",
+}
+
+
+def _quantize_leaf(w: jax.Array) -> Dict[str, jax.Array]:
+    """Symmetric per-out-channel int8.  Only the contraction dim (-2) is
+    reduced; leading stack dims (layer scan, expert, hybrid group) keep their
+    own scales, so scanned slices see ({"q8": (in,out)}, {"s": (out,)})."""
+    wf = w.astype(jnp.float32)
+    absmax = jnp.abs(wf).max(axis=w.ndim - 2)
+    s = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.rint(wf / jnp.expand_dims(s, w.ndim - 2)), -128, 127).astype(jnp.int8)
+    return {"q8": q, "s": s}
+
+
+def convert_params_w8a8(params) -> dict:
+    def conv(path, leaf):
+        names = [str(getattr(k, "key", "")) for k in path]
+        if names[-1] in W8A8_NAMES and leaf.ndim >= 2:
+            return _quantize_leaf(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(conv, params, is_leaf=lambda x: not isinstance(x, dict))
+
+
+def export_arch_quant_manifest(params_q) -> dict:
+    """Codify the conversion: every quantized tensor with its per-channel
+    scale stats and the §3.1 (Quant_scale, shift) decomposition of a unit
+    rescale — the hardware-facing record the artifact would embed."""
+    entries = []
+
+    def walk(path, leaf):
+        if isinstance(leaf, dict) or not hasattr(leaf, "shape"):
+            return leaf
+        return leaf
+
+    flat = jax.tree_util.tree_flatten_with_path(params_q)[0]
+    seen = set()
+    for path, leaf in flat:
+        names = [str(getattr(k, "key", "")) for k in path]
+        if names[-1] == "s" and len(names) >= 2 and names[-2] not in seen:
+            base = "/".join(names[:-1])
+            s = np.asarray(leaf, np.float64).ravel()
+            r = decompose_multiplier(float(np.median(s)))
+            entries.append(
+                {
+                    "tensor": base,
+                    "channels": int(s.size),
+                    "scale_min": float(s.min()),
+                    "scale_max": float(s.max()),
+                    "quant_scale_median": r.quant_scale,
+                    "quant_shift_bits_median": r.shift,
+                }
+            )
+    return {"format": "pq-w8a8/v1", "tensors": entries}

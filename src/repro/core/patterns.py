@@ -1,0 +1,172 @@
+"""Builders for the paper's canonical pre-quantized ONNX patterns (Figs 1–6).
+
+Each builder emits exactly the operator sequence shown in the paper into a
+:class:`repro.core.pqir.GraphBuilder`:
+
+* Fig 1 — FC, rescale as **two** Mul ops (integer Quant_scale + 2**-N shift)
+* Fig 2 — FC + ReLU, rescale as **one** Mul op
+* Fig 3 — Conv2D, rescale as one Mul op
+* Fig 4 — FC + int8 Tanh (rescale maps accumulator onto tanh's input range,
+  y_scale maps int8 onto tanh's output range)
+* Fig 5 — FC + fp16 Tanh (mixed int8/fp16 flow)
+* Fig 6 — FC + fp16 Sigmoid (output uint8, sigmoid ≥ 0)
+
+The rounding/clipping stage is always ``QuantizeLinear(scale=1, zero_point=0)``
+whose *zero_point dtype selects the output dtype* — exactly the paper's usage.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .pqir import GraphBuilder
+from .quant import QuantizedLinearParams, Rescale
+
+# Default activation-range conventions for the Fig.4–6 patterns.
+TANH_INPUT_ABSMAX = 4.0  # |tanh(4)| ≈ 0.9993: "full input range of tanh"
+SIGMOID_INPUT_ABSMAX = 8.0
+
+
+def emit_rescale(
+    gb: GraphBuilder,
+    x: str,
+    rescale: Rescale,
+    prefix: str,
+    *,
+    two_mul: bool = True,
+) -> str:
+    """Cast(int32→f32) then the §3.1 codification: 2 Muls (integer scale +
+    right-shift) or 1 Mul (plain fp32 multiplier)."""
+    f = gb.op("Cast", [x], out_hint=f"{prefix}_f32", to="float32")
+    if two_mul:
+        qs = gb.add_initializer(f"{prefix}_quant_scale", np.float32(rescale.quant_scale))
+        sh = gb.add_initializer(f"{prefix}_quant_shift", np.float32(rescale.quant_shift))
+        f = gb.op("Mul", [f, qs], out_hint=f"{prefix}_scaled")
+        f = gb.op("Mul", [f, sh], out_hint=f"{prefix}_shifted")
+    else:
+        m = gb.add_initializer(f"{prefix}_quant_multiplier", np.float32(rescale.multiplier))
+        f = gb.op("Mul", [f, m], out_hint=f"{prefix}_scaled")
+    return f
+
+
+def emit_round_clip(gb: GraphBuilder, x: str, prefix: str, out_dtype: str = "int8") -> str:
+    """QuantizeLinear(scale=1, zp=0) — pure rounding+clipping; zp dtype picks
+    the output dtype (int8 vs uint8), per the paper."""
+    one = gb.add_initializer(f"{prefix}_ql_scale", np.float32(1.0))
+    zp = gb.add_initializer(f"{prefix}_ql_zp", np.zeros((), dtype=out_dtype))
+    return gb.op("QuantizeLinear", [x, one, zp], out_hint=f"{prefix}_q")
+
+
+def fc_layer(
+    gb: GraphBuilder,
+    x: str,
+    p: QuantizedLinearParams,
+    prefix: str,
+    *,
+    two_mul: bool = True,
+    activation: Optional[str] = None,
+) -> str:
+    """Fig 1 (activation=None, two_mul=True) / Fig 2 (activation="Relu",
+    two_mul=False) fully-connected pattern.  Returns the int8/uint8 output
+    tensor name."""
+    w = gb.add_initializer(f"{prefix}_weight_q", p.weight_q)
+    acc = gb.op("MatMulInteger", [x, w], out_hint=f"{prefix}_acc")
+    if p.bias_q is not None:
+        b = gb.add_initializer(f"{prefix}_bias_q", p.bias_q)
+        acc = gb.op("Add", [acc, b], out_hint=f"{prefix}_biased")
+    f = emit_rescale(gb, acc, p.rescale, prefix, two_mul=two_mul)
+    if activation is not None:
+        f = gb.op(activation, [f], out_hint=f"{prefix}_{activation.lower()}")
+    return emit_round_clip(gb, f, prefix, p.out_dtype)
+
+
+def conv_layer(
+    gb: GraphBuilder,
+    x: str,
+    weight_q: np.ndarray,
+    bias_q: Optional[np.ndarray],
+    rescale: Rescale,
+    prefix: str,
+    *,
+    strides=(1, 1),
+    pads=(0, 0, 0, 0),
+    two_mul: bool = False,
+    activation: Optional[str] = None,
+    out_dtype: str = "int8",
+) -> str:
+    """Fig 3 convolution pattern.  ``weight_q`` is (M, C, kH, kW) int8;
+    ``bias_q`` is int32 (M,), added broadcast as (1, M, 1, 1)."""
+    w = gb.add_initializer(f"{prefix}_weight_q", weight_q)
+    acc = gb.op("ConvInteger", [x, w], out_hint=f"{prefix}_acc", strides=list(strides), pads=list(pads))
+    if bias_q is not None:
+        b = gb.add_initializer(f"{prefix}_bias_q", bias_q.reshape(1, -1, 1, 1).astype(np.int32))
+        acc = gb.op("Add", [acc, b], out_hint=f"{prefix}_biased")
+    f = emit_rescale(gb, acc, rescale, prefix, two_mul=two_mul)
+    if activation is not None:
+        f = gb.op(activation, [f], out_hint=f"{prefix}_{activation.lower()}")
+    return emit_round_clip(gb, f, prefix, out_dtype)
+
+
+def _dql(gb: GraphBuilder, x: str, scale: float, prefix: str) -> str:
+    s = gb.add_initializer(f"{prefix}_dq_scale", np.float32(scale))
+    zp = gb.add_initializer(f"{prefix}_dq_zp", np.zeros((), dtype="int8"))
+    return gb.op("DequantizeLinear", [x, s, zp], out_hint=f"{prefix}_deq")
+
+
+def _ql(gb: GraphBuilder, x: str, scale: float, prefix: str, out_dtype: str) -> str:
+    s = gb.add_initializer(f"{prefix}_q_scale", np.float32(scale))
+    zp = gb.add_initializer(f"{prefix}_q_zp", np.zeros((), dtype=out_dtype))
+    return gb.op("QuantizeLinear", [x, s, zp], out_hint=f"{prefix}_req")
+
+
+def fc_int8_tanh(
+    gb: GraphBuilder,
+    x: str,
+    p: QuantizedLinearParams,
+    prefix: str,
+    *,
+    input_absmax: float = TANH_INPUT_ABSMAX,
+) -> str:
+    """Fig 4: int8 tanh.  The FC rescale maps the accumulator onto the full
+    int8-quantized tanh input range [−input_absmax, +input_absmax]; y_scale
+    maps int8 onto tanh's output range (−1, 1)."""
+    q = fc_layer(gb, x, p, prefix, two_mul=True)
+    deq = _dql(gb, q, input_absmax / 127.0, prefix)
+    t = gb.op("Tanh", [deq], out_hint=f"{prefix}_tanh")
+    return _ql(gb, t, 1.0 / 127.0, prefix, "int8")
+
+
+def fc_fp16_tanh(
+    gb: GraphBuilder,
+    x: str,
+    p: QuantizedLinearParams,
+    prefix: str,
+    *,
+    input_absmax: float = TANH_INPUT_ABSMAX,
+) -> str:
+    """Fig 5: mixed int8/fp16 tanh flow (Cast→f16, Tanh in f16, Cast→f32)."""
+    q = fc_layer(gb, x, p, prefix, two_mul=True)
+    deq = _dql(gb, q, input_absmax / 127.0, prefix)
+    h = gb.op("Cast", [deq], out_hint=f"{prefix}_f16", to="float16")
+    t = gb.op("Tanh", [h], out_hint=f"{prefix}_tanh16")
+    f = gb.op("Cast", [t], out_hint=f"{prefix}_back32", to="float32")
+    return _ql(gb, f, 1.0 / 127.0, prefix, "int8")
+
+
+def fc_fp16_sigmoid(
+    gb: GraphBuilder,
+    x: str,
+    p: QuantizedLinearParams,
+    prefix: str,
+    *,
+    input_absmax: float = SIGMOID_INPUT_ABSMAX,
+) -> str:
+    """Fig 6: mixed int8/fp16 sigmoid; single-Mul rescale; **uint8** output
+    (sigmoid is always positive)."""
+    q = fc_layer(gb, x, p, prefix, two_mul=False)
+    deq = _dql(gb, q, input_absmax / 127.0, prefix)
+    h = gb.op("Cast", [deq], out_hint=f"{prefix}_f16", to="float16")
+    s = gb.op("Sigmoid", [h], out_hint=f"{prefix}_sig16")
+    f = gb.op("Cast", [s], out_hint=f"{prefix}_back32", to="float32")
+    return _ql(gb, f, 1.0 / 255.0, prefix, "uint8")

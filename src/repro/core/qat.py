@@ -1,0 +1,51 @@
+"""Quantization-aware training: fake-quant with straight-through estimator.
+
+The co-design loop (DESIGN.md §2): train with fake-quant in JAX → calibrate →
+export a pre-quantized artifact → the hardware compiler consumes it.  The
+fake-quant forward matches the artifact semantics (symmetric, round-half-even,
+saturate) so QAT "sees" serving-time numerics.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_quant(x: jax.Array, scale, *, qmin: int = -128, qmax: int = 127, axis: Optional[int] = None) -> jax.Array:
+    """quantize→dequantize with STE gradients (identity inside the clip range)."""
+    s = jnp.asarray(scale, jnp.float32)
+    if axis is not None and s.ndim:
+        shape = [1] * x.ndim
+        shape[axis] = -1
+        s = s.reshape(shape)
+    xf = x.astype(jnp.float32)
+    q = jnp.clip(jnp.rint(xf / s), qmin, qmax)
+    deq = (q * s).astype(x.dtype)
+    # STE: forward = deq, backward = identity (with clip-range gating)
+    gate = ((xf >= qmin * s) & (xf <= qmax * s)).astype(x.dtype)
+    return x * gate + jax.lax.stop_gradient(deq - x * gate)
+
+
+def fake_quant_weight_per_channel(w: jax.Array, *, axis: int = -1) -> jax.Array:
+    """Per-output-channel symmetric weight fake-quant (scale from |w|max)."""
+    red = tuple(i for i in range(w.ndim) if i != (axis % w.ndim))
+    absmax = jax.lax.stop_gradient(jnp.abs(w.astype(jnp.float32)).max(axis=red, keepdims=True))
+    s = jnp.maximum(absmax / 127.0, 1e-12)
+    xf = w.astype(jnp.float32)
+    q = jnp.clip(jnp.rint(xf / s), -128, 127)
+    deq = (q * s).astype(w.dtype)
+    return w + jax.lax.stop_gradient(deq - w)
+
+
+def fake_quant_activation(x: jax.Array) -> jax.Array:
+    """Dynamic per-tensor activation fake-quant (absmax scale)."""
+    absmax = jax.lax.stop_gradient(jnp.abs(x.astype(jnp.float32)).max())
+    s = jnp.maximum(absmax / 127.0, 1e-12)
+    return fake_quant(x, s)
+
+
+def qat_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """A linear layer as QAT sees it: int8-faithful weights and activations."""
+    return fake_quant_activation(x) @ fake_quant_weight_per_channel(w)

@@ -1,0 +1,81 @@
+"""W8A8 serving-side quantized layers for the model zoo.
+
+``QuantizedLinear`` holds exactly what the artifact embeds (int8 weights,
+int32 bias, integer scale + shift) and computes with the same integer
+semantics as the compiled kernels — this is the paper's technique running as
+a *first-class feature* inside the big-model serving path, not just the MLP
+examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from .quant import Rescale, decompose_multiplier
+
+
+@dataclasses.dataclass
+class QuantizedLinear:
+    """Static (pre-quantized) linear: y_q = requant(x_q @ W_q + B_q)."""
+
+    weight_q: jax.Array  # (in, out) int8
+    bias_q: Optional[jax.Array]  # (out,) int32
+    quant_scale: jax.Array  # (out,) f32 integer-valued
+    quant_shift: jax.Array  # (out,) f32 = 2^-N
+    scale_x: float
+    scale_y: float
+    out_dtype: str = "int8"
+
+    def __call__(self, x_q: jax.Array, *, backend: str = "ref") -> jax.Array:
+        return kops.quantized_matmul(
+            x_q, self.weight_q, self.bias_q, self.quant_scale, self.quant_shift,
+            out_dtype=jnp.int8 if self.out_dtype == "int8" else jnp.uint8,
+            backend=backend,
+        )
+
+
+def prepare_quantized_linear(
+    w: np.ndarray,  # (in, out) f32
+    b: Optional[np.ndarray],
+    scale_x: float,
+    scale_y: float,
+    *,
+    per_channel: bool = True,
+) -> QuantizedLinear:
+    """Quantizer-side preparation (per-channel §3 math + §3.1 decomposition)."""
+    w = np.asarray(w, np.float32)
+    if per_channel:
+        absmax = np.maximum(np.abs(w).max(axis=0), 1e-12)
+        scale_w = absmax / 127.0
+    else:
+        scale_w = np.full((w.shape[1],), max(float(np.abs(w).max()), 1e-12) / 127.0, np.float32)
+    w_q = np.clip(np.rint(w / scale_w), -128, 127).astype(np.int8)
+    b_q = None
+    if b is not None:
+        b_q = np.clip(np.rint(b / (scale_w * scale_x)), -(2**31), 2**31 - 1).astype(np.int32)
+    mults = scale_w * scale_x / scale_y
+    resc = [decompose_multiplier(float(m)) for m in mults]
+    qs = np.array([r.quant_scale for r in resc], np.float32)
+    qsh = np.array([r.quant_shift for r in resc], np.float32)
+    return QuantizedLinear(
+        weight_q=jnp.asarray(w_q),
+        bias_q=None if b_q is None else jnp.asarray(b_q),
+        quant_scale=jnp.asarray(qs),
+        quant_shift=jnp.asarray(qsh),
+        scale_x=float(scale_x),
+        scale_y=float(scale_y),
+    )
+
+
+def dynamic_quantize(x: jax.Array):
+    """Per-tensor dynamic activation quantization (serving fallback when no
+    static calibration is available)."""
+    absmax = jnp.abs(x.astype(jnp.float32)).max()
+    s = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.rint(x.astype(jnp.float32) / s), -128, 127).astype(jnp.int8)
+    return q, s

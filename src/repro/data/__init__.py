@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, Pipeline  # noqa: F401

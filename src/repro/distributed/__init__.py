@@ -1,0 +1,2 @@
+from . import sharding  # noqa: F401
+from .sharding import shard, sharding_for, spec_for, use_mesh  # noqa: F401

@@ -1,0 +1,141 @@
+"""Logical-axis sharding rules (MaxText-style) for the production meshes.
+
+Physical mesh axes:
+  * ``pod``   — pure data parallelism across pods (gradient all-reduce over DCN)
+  * ``data``  — FSDP: batch for activations, weight/optimizer sharding for params
+  * ``model`` — tensor parallelism: heads / d_ff / vocab / expert-internal dims
+
+Every tensor annotates *logical* axes; rules map them to physical axes with a
+divisibility check — if a dim doesn't divide the physical axis size the rule
+falls back to the next candidate (or replication).  This is what lets one
+rule-set serve all 10 architectures (8-head gemma2 and 48-head mixtral alike)
+without per-arch sharding code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered physical-axis candidates (first that divides wins).
+# () means "replicate".  Tuples inside candidates mean "shard over both axes".
+DEFAULT_RULES: dict = {
+    # activations
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (),
+    "seq_shard": (("model",),),  # sequence parallelism (hillclimb option)
+    "embed_act": (),  # activation d_model: replicated across model (TP gathers)
+    "heads_act": (("model",),),
+    "kv_heads_act": (("model",),),
+    "mlp_act": (("model",),),
+    "vocab_act": (("model",),),
+    "expert_act": (("model",),),
+    # params: FSDP over data on one dim, TP over model on another
+    "embed": (("data",),),
+    "embed_fsdp": (("data",),),
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "mlp": (("model",),),
+    "vocab": (("model",),),
+    "expert": (("model",),),
+    "expert_fsdp": (("data",),),
+    # never sharded
+    "layers": (),
+    "norm": (),
+    "state": (),
+    "cap": (),
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict = DEFAULT_RULES
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate a mesh + rules for logical sharding annotations.  Also enters
+    the mesh context so collectives/pjit resolve axis names."""
+    prev_mesh, prev_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    _CTX.rules = {**DEFAULT_RULES, **(rules or {})}
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev_mesh, prev_rules
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _resolve_axis(logical: Optional[str], dim: int, mesh: Mesh, rules: dict, used: set):
+    """First candidate whose axes all exist, are unused, and divide ``dim``."""
+    if logical is None:
+        return None
+    for cand in rules.get(logical, ()):
+        axes = cand if isinstance(cand, tuple) else (cand,)
+        if not axes:
+            continue
+        if any(a not in mesh.shape or a in used for a in axes):
+            continue
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % total == 0:
+            used.update(axes)
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def spec_for(shape: Sequence[int], logical_axes: Sequence[Optional[str]], mesh: Optional[Mesh] = None, rules: Optional[dict] = None) -> P:
+    """Resolve logical axes to a PartitionSpec with divisibility fallback."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P()
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set = set()
+    parts = [_resolve_axis(la, d, mesh, rules, used) for d, la in zip(shape, logical_axes)]
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def sharding_for(shape: Sequence[int], logical_axes: Sequence[Optional[str]], mesh: Optional[Mesh] = None, rules: Optional[dict] = None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(shape, logical_axes, mesh, rules))
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate an intermediate with a logical sharding constraint.
+    No-op outside a mesh context (keeps single-device smoke tests clean)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(tree, logical_fn, mesh: Optional[Mesh] = None):
+    """Build a sharding pytree for ``tree`` where ``logical_fn(path, leaf)``
+    returns the logical axes tuple for each leaf."""
+    mesh = mesh or _CTX.mesh
+
+    def per_leaf(path, leaf):
+        axes = logical_fn(path, leaf)
+        return sharding_for(leaf.shape, axes, mesh)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, tree)

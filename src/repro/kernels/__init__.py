@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the pre-quantized compute hot spots.
+
+qmatmul   — fused MatMulInteger + bias + §3.1 integer rescale + requant
+qact_lut  — int8 tanh/sigmoid as exact 256-entry VMEM LUT
+ops       — jit'd public wrappers (padding, uint8 folding, backend dispatch)
+ref       — pure-jnp oracles (bit-exact contract for every kernel)
+"""
+from . import ops, qact_lut, qmatmul, ref  # noqa: F401
+from .ops import quantized_activation, quantized_conv2d, quantized_matmul  # noqa: F401

@@ -1,0 +1,153 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle here (so kernels stay tile-pure):
+  * arbitrary leading batch dims (flattened into M),
+  * shape padding to tile multiples (zero padding is exact for int matmul),
+  * uint8 activations — folded to int8 by the compiler identity
+        x_u8 @ W = (x_s8 + 128) @ W = x_s8 @ W + 128·colsum(W)
+    i.e. a bias correction computed once at compile time, keeping the MXU on
+    its signed-int8 fast path (a HW/SW co-design move the artifact's
+    *expressiveness* makes possible: the compiler sees the true dtypes),
+  * scalar vs per-channel rescale broadcasting,
+  * backend dispatch: pallas (TPU) / pallas-interpret (CPU validation) /
+    pure-jnp reference (dry-run lowering).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import qact_lut as _qact
+from . import qmatmul as _qmm
+from . import ref as _ref
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def fold_uint8_input(w_q: jax.Array, bias_q: Optional[jax.Array]):
+    """Return the bias correction that converts a uint8-activation matmul into
+    a signed-int8 one: bias' = bias + 128 * sum_k W[k, :]."""
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
+    corr = 128 * colsum
+    return corr if bias_q is None else bias_q.astype(jnp.int32) + corr
+
+
+def quantized_matmul(
+    x_q: jax.Array,  # (..., K) int8 or uint8
+    w_q: jax.Array,  # (K, N) int8
+    bias_q: Optional[jax.Array],  # (N,) int32
+    quant_scale,  # python float/int, or (N,) array — integer values as FLOAT
+    quant_shift,  # python float, or (N,) array — 2**-N
+    *,
+    out_dtype=jnp.int8,
+    relu: bool = False,
+    two_mul: bool = True,
+    backend: str = "ref",  # "pallas" | "interpret" | "ref"
+    bm: int = _qmm.BM,
+    bk: int = _qmm.BK,
+    bn: int = _qmm.BN,
+) -> jax.Array:
+    """Fused pre-quantized matmul over arbitrary leading dims."""
+    orig_shape = x_q.shape
+    k, n = w_q.shape
+    assert orig_shape[-1] == k, (orig_shape, w_q.shape)
+
+    if x_q.dtype == jnp.uint8:
+        bias_q = fold_uint8_input(w_q, bias_q)
+        x_q = (x_q.astype(jnp.int32) - 128).astype(jnp.int8)
+
+    qs = jnp.asarray(quant_scale, jnp.float32)
+    qsh = jnp.asarray(quant_shift, jnp.float32)
+
+    if backend == "ref":
+        return _ref.qmatmul_ref(
+            x_q, w_q, bias_q, qs, qsh, out_dtype=out_dtype, relu=relu, two_mul=two_mul
+        ).reshape(orig_shape[:-1] + (n,))
+
+    x2 = x_q.reshape(-1, k)
+    m = x2.shape[0]
+    mp, kp, np_ = _round_up(max(m, 1), bm), _round_up(k, bk), _round_up(n, bn)
+    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    w2 = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
+    b2 = jnp.zeros((1, np_), jnp.int32) if bias_q is None else jnp.pad(
+        bias_q.reshape(1, n).astype(jnp.int32), ((0, 0), (0, np_ - n))
+    )
+    qs2 = jnp.pad(jnp.broadcast_to(qs.reshape(1, -1), (1, n)), ((0, 0), (0, np_ - n)), constant_values=1.0)
+    qsh2 = jnp.pad(jnp.broadcast_to(qsh.reshape(1, -1), (1, n)), ((0, 0), (0, np_ - n)), constant_values=1.0)
+    out = _qmm.qmatmul(
+        x2, w2, b2, qs2, qsh2,
+        out_dtype=out_dtype, relu=relu, two_mul=two_mul,
+        bm=bm, bk=bk, bn=bn, interpret=(backend == "interpret"),
+    )
+    return out[:m, :n].reshape(orig_shape[:-1] + (n,))
+
+
+def quantized_activation(
+    x_q: jax.Array,  # (...,) int8
+    lut: jax.Array | np.ndarray,  # (256,) int8/uint8
+    *,
+    backend: str = "ref",
+    one_hot: bool = False,
+) -> jax.Array:
+    """int8 LUT activation over arbitrary shape."""
+    lut = jnp.asarray(lut)
+    if backend == "ref":
+        return _ref.qact_lut_ref(x_q, lut)
+    orig_shape = x_q.shape
+    n = orig_shape[-1]
+    x2 = x_q.reshape(-1, n)
+    m = x2.shape[0]
+    bm = min(512, m) if m % min(512, m) == 0 else m
+    out = _qact.qact_lut(x2, lut, block=bm, one_hot=one_hot, interpret=(backend == "interpret"))
+    return out.reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "relu", "two_mul", "strides", "pads"))
+def quantized_conv2d(
+    x_q: jax.Array,  # (N, C, H, W) int8/uint8
+    w_q: jax.Array,  # (M, C, kH, kW) int8
+    bias_q: Optional[jax.Array],  # (M,) int32
+    quant_scale,
+    quant_shift,
+    *,
+    strides=(1, 1),
+    pads=(0, 0, 0, 0),
+    out_dtype=jnp.int8,
+    relu: bool = False,
+    two_mul: bool = True,
+) -> jax.Array:
+    """ConvInteger + epilogue.  Lowers to XLA's int8 conv (which maps onto the
+    MXU via implicit im2col on TPU); the epilogue matches the artifact chain
+    bit-for-bit.  Symmetric quantization ⇒ zero padding is exact."""
+    if x_q.dtype == jnp.uint8:
+        # Same signed-offset fold as matmul: correction = 128 * sum over C,kh,kw.
+        corr = 128 * jnp.sum(w_q.astype(jnp.int32), axis=(1, 2, 3))
+        bias_q = corr if bias_q is None else bias_q.astype(jnp.int32) + corr
+        x_q = (x_q.astype(jnp.int32) - 128).astype(jnp.int8)
+    acc = jax.lax.conv_general_dilated(
+        x_q.astype(jnp.int8),
+        w_q.astype(jnp.int8),
+        window_strides=tuple(strides),
+        padding=((pads[0], pads[2]), (pads[1], pads[3])),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.int32,
+    )
+    if bias_q is not None:
+        acc = acc + bias_q.reshape(1, -1, 1, 1).astype(jnp.int32)
+    f = acc.astype(jnp.float32)
+    qs = jnp.asarray(quant_scale, jnp.float32)
+    qsh = jnp.asarray(quant_shift, jnp.float32)
+    f = f * (qs.reshape(1, -1, 1, 1) if qs.ndim else qs)
+    if two_mul:
+        f = f * (qsh.reshape(1, -1, 1, 1) if qsh.ndim else qsh)
+    if relu:
+        f = jnp.maximum(f, 0.0)
+    r = jnp.rint(f)
+    info = jnp.iinfo(out_dtype)
+    return jnp.clip(r, info.min, info.max).astype(out_dtype)

@@ -1,0 +1,81 @@
+"""int8 activation as an exact 256-entry VMEM lookup table (Pallas TPU kernel).
+
+TPU-native adaptation of the paper's §6 activation flows (DESIGN.md §3): the
+artifact codifies ``QuantizeLinear → DequantizeLinear → [Cast f16] →
+Tanh/Sigmoid → [Cast f32] → QuantizeLinear``.  Because the chain's input is
+int8, it is a pure function of 256 possible values — the compiler evaluates
+the chain once with *reference-runtime semantics* (including the fp16 casts of
+Figs 5/6) into a 256-entry table, making the kernel bit-exact against the
+reference interpreter by construction while eliminating all transcendental
+work on-chip.
+
+The table lives permanently in VMEM (256 B); the lookup is a VPU gather
+(``jnp.take``).  On hardware generations where Mosaic lacks a fast dynamic
+gather, set ``one_hot=True`` to lower the lookup as an int8 one-hot matmul on
+the MXU (`one_hot(idx)·lut`), which is mathematically identical.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def build_lut(fn, in_scale: float, out_scale: float, out_dtype: str = "int8", compute_dtype: str = "float32") -> np.ndarray:
+    """Evaluate DQL→[cast]→fn→[cast]→QL over all 256 int8 codes with numpy
+    reference semantics.  ``fn`` maps a float array to a float array."""
+    codes = np.arange(-128, 128, dtype=np.int32)
+    x = codes.astype(np.float32) * np.float32(in_scale)
+    if compute_dtype == "float16":
+        y = fn(x.astype(np.float16)).astype(np.float16).astype(np.float32)
+    else:
+        y = fn(x.astype(np.float32)).astype(np.float32)
+    q = np.rint(y / np.float32(out_scale))
+    info = np.iinfo(out_dtype)
+    return np.clip(q, info.min, info.max).astype(out_dtype)
+
+
+def _lut_kernel(x_ref, lut_ref, o_ref, *, one_hot: bool):
+    idx = x_ref[...].astype(jnp.int32) + 128
+    if one_hot:
+        # MXU path: one-hot int8 matmul against the 256-entry table.
+        oh = (idx[..., None] == jax.lax.iota(jnp.int32, 256)).astype(jnp.int8)
+        flat = oh.reshape(-1, 256)
+        vals = jax.lax.dot_general(
+            flat, lut_ref[...].astype(jnp.int8).reshape(256, 1),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32,
+        )
+        o_ref[...] = vals.reshape(idx.shape).astype(o_ref.dtype)
+    else:
+        o_ref[...] = jnp.take(lut_ref[...], idx).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "one_hot", "interpret"))
+def qact_lut(
+    x_q: jax.Array,  # (M, N) int8
+    lut: jax.Array,  # (256,) int8/uint8
+    *,
+    block: int = 512,
+    one_hot: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Apply an int8→int8/uint8 LUT activation.  Rows must be a multiple of
+    ``block`` or smaller than it (wrapper in ops.py pads)."""
+    m, n = x_q.shape
+    bm = min(block, m)
+    assert m % bm == 0, (m, bm)
+    kernel = functools.partial(_lut_kernel, one_hot=one_hot)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), lut.dtype),
+        interpret=interpret,
+    )(x_q, lut)

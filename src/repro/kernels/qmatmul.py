@@ -1,0 +1,118 @@
+"""Fused pre-quantized matmul Pallas TPU kernel.
+
+One kernel realizes the paper's entire Fig.1/2 pattern:
+
+    MatMulInteger (int8×int8 → int32, on the MXU)
+      → Add int32 bias
+      → Cast f32 → Mul quant_scale → Mul quant_shift   (§3.1 integer rescale)
+      → optional ReLU
+      → QuantizeLinear(scale=1, zp=0)                   (round-half-even + clip)
+
+TPU mapping (DESIGN.md §3): the int8×int8→int32 product drives the MXU at its
+double-rate int8 throughput; the rescale epilogue runs on the VPU over the
+int32 accumulator while it is still resident in VMEM — the Cast/Mul/Mul/QL
+chain of the artifact never round-trips to HBM.  Grid is (M/bm, N/bn, K/bk)
+with a VMEM int32 accumulator scratch carried across the k dimension
+(innermost, sequential on TPU).
+
+Tile constraints: int8 operands want (32, 128)-aligned tiles, the int32
+accumulator (8, 128); the default 128/256/128 blocks satisfy both and keep the
+MXU busy (128×128 systolic array).  Shape padding is handled by
+:mod:`repro.kernels.ops`, zero padding being exact for integer matmul.
+
+Bit-exactness: the epilogue performs the *same f32 operations in the same
+order* as the ONNX-dialect ops, so results match the reference runtime
+bit-for-bit (asserted over shape/dtype sweeps in tests/test_kernels_qmatmul.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default MXU-aligned tile sizes.
+BM, BK, BN = 128, 256, 128
+
+
+def _epilogue(acc, bias, qscale, qshift, *, relu: bool, two_mul: bool, out_dtype):
+    """The artifact's rescale chain, op-for-op (order matters for bit-exactness)."""
+    acc = acc + bias  # int32 + int32
+    f = acc.astype(jnp.float32)
+    f = f * qscale
+    if two_mul:
+        f = f * qshift
+    if relu:
+        f = jnp.maximum(f, 0.0)
+    r = jnp.rint(f)  # round half to even, as ONNX QuantizeLinear
+    info = jnp.iinfo(out_dtype)
+    return jnp.clip(r, info.min, info.max).astype(out_dtype)
+
+
+def _qmatmul_kernel(x_ref, w_ref, b_ref, qs_ref, qsh_ref, o_ref, acc_ref, *, relu, two_mul, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # int8 × int8 → int32 on the MXU.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[...] = _epilogue(
+            acc_ref[...], b_ref[...], qs_ref[...], qsh_ref[...],
+            relu=relu, two_mul=two_mul, out_dtype=out_dtype,
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("out_dtype", "relu", "two_mul", "bm", "bk", "bn", "interpret"),
+)
+def qmatmul(
+    x_q: jax.Array,  # (M, K) int8
+    w_q: jax.Array,  # (K, N) int8
+    bias_q: jax.Array,  # (1, N) int32
+    quant_scale: jax.Array,  # (1, N) f32 — integer values stored as FLOAT
+    quant_shift: jax.Array,  # (1, N) f32 — 2**-N
+    *,
+    out_dtype=jnp.int8,
+    relu: bool = False,
+    two_mul: bool = True,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused pre-quantized matmul.  All dims must already be tile-multiples
+    (see :func:`repro.kernels.ops.quantized_matmul` for the padded wrapper)."""
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (x_q.shape, w_q.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+
+    kernel = functools.partial(_qmatmul_kernel, relu=relu, two_mul=two_mul, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, bias_q, quant_scale, quant_shift)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (and the dry-run lowering path).
+
+These implement the artifact's op chain exactly — int32 accumulation, f32
+rescale in codified order, round-half-even, clip — so that
+``kernel(interpret=True) == ref == reference_runtime`` bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmatmul_ref(
+    x_q: jax.Array,  # (..., M, K) int8/uint8
+    w_q: jax.Array,  # (K, N) int8
+    bias_q: jax.Array | None,  # (N,) or (1, N) int32
+    quant_scale: jax.Array,  # scalar or (N,) f32
+    quant_shift: jax.Array,  # scalar or (N,) f32
+    *,
+    out_dtype=jnp.int8,
+    relu: bool = False,
+    two_mul: bool = True,
+) -> jax.Array:
+    """MatMulInteger → Add → Cast → Mul(→Mul) → [Relu] → QuantizeLinear."""
+    acc = jax.lax.dot_general(
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        dimension_numbers=(((x_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    if bias_q is not None:
+        acc = acc + bias_q.reshape((1,) * (acc.ndim - 1) + (-1,)).astype(jnp.int32)
+    f = acc.astype(jnp.float32)
+    f = f * quant_scale.reshape((1,) * (f.ndim - 1) + (-1,)) if quant_scale.ndim else f * quant_scale
+    if two_mul:
+        f = f * (quant_shift.reshape((1,) * (f.ndim - 1) + (-1,)) if quant_shift.ndim else quant_shift)
+    if relu:
+        f = jnp.maximum(f, 0.0)
+    r = jnp.rint(f)
+    info = jnp.iinfo(out_dtype)
+    return jnp.clip(r, info.min, info.max).astype(out_dtype)
+
+
+def qact_lut_ref(x_q: jax.Array, lut: jax.Array) -> jax.Array:
+    """256-entry LUT gather oracle."""
+    return jnp.take(lut, x_q.astype(jnp.int32) + 128)

@@ -1,0 +1,1 @@
+from . import mesh, specs, steps  # noqa: F401

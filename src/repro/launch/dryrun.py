@@ -1,0 +1,211 @@
+import os
+
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape) cell
+on the production meshes (16×16 single-pod, 2×16×16 multi-pod) with 512
+placeholder host devices, then dump memory/cost/collective analysis.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2_2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out out.json]
+
+A cell PASSES when .lower().compile() succeeds; memory_analysis() proves it
+fits; cost_analysis() + HLO collective byte counts feed EXPERIMENTS.md
+§Roofline.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from ..configs import ARCH_IDS, get_config  # noqa: E402
+from ..configs.base import SHAPE_BY_NAME, SHAPES  # noqa: E402
+from ..distributed.sharding import use_mesh  # noqa: E402
+from . import specs as S  # noqa: E402
+from . import steps  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "s64": 8, "u64": 8, "pred": 1, "f64": 8, "s16": 2, "u16": 2, "f8e4m3": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _tensor_bytes(shape_str: str) -> int:
+    """Total bytes of all tensors in an HLO type string like
+    'f32[128,256]' or '(bf16[4,8], s32[2])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes of every collective op in the (SPMD-partitioned) HLO.
+
+    Byte counts are per-participant (the HLO is the per-device program after
+    GSPMD partitioning), so `sum / chips` in the roofline denominator is NOT
+    applied again — see benchmarks/roofline.py.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],]+)\s+(\w[\w\-]*)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            out[base] += _tensor_bytes(m.group(1))
+            out["count"] += 1
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False, q_chunk: int = 1024, kv_chunk: int = 1024, w8a8: bool = False):
+    """Lower + compile one cell.  Returns a result dict (see dryrun_cell)."""
+    cfg = get_config(arch)
+    sc = SHAPE_BY_NAME[shape_name]
+    skip = S.skip_reason(cfg, sc)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "status": "skip", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with use_mesh(mesh):
+        p_specs = S.params_specs(cfg)
+        if w8a8 and sc.kind != "train":
+            from ..core.convert import convert_params_w8a8
+
+            p_specs = jax.eval_shape(convert_params_w8a8, p_specs)
+        p_sh = S.params_shardings(p_specs, mesh)
+        if sc.kind == "train":
+            from ..optim import adamw
+
+            o_specs = jax.eval_shape(adamw.init, p_specs)
+            o_sh = S.params_shardings(o_specs["m"], mesh)
+            o_sh = {"m": o_sh, "v": o_sh, "step": None}
+            b_specs = S.train_batch_specs(cfg, sc)
+            b_sh = S.batch_shardings(b_specs, mesh)
+            fn = steps.make_train_step(cfg, sc, q_chunk=q_chunk, kv_chunk=kv_chunk)
+            jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh), donate_argnums=(0, 1))
+            lowered = jitted.lower(p_specs, o_specs, b_specs)
+        elif sc.kind == "prefill":
+            b_specs, c_specs = S.prefill_input_specs(cfg, sc)
+            b_sh = S.batch_shardings(b_specs, mesh)
+            c_sh = S.cache_shardings(c_specs, mesh)
+            fn = steps.make_prefill_step(cfg, q_chunk=q_chunk, kv_chunk=kv_chunk)
+            jitted = jax.jit(fn, in_shardings=(p_sh, b_sh, c_sh), donate_argnums=(2,))
+            lowered = jitted.lower(p_specs, b_specs, c_specs)
+        else:  # decode
+            toks, pos, c_specs = S.decode_input_specs(cfg, sc)
+            c_sh = S.cache_shardings(c_specs, mesh)
+            t_sh = S.batch_shardings({"tokens": toks, "pos": pos}, mesh)
+            fn = steps.make_decode_step(cfg)
+            jitted = jax.jit(fn, in_shardings=(p_sh, t_sh["tokens"], t_sh["pos"], c_sh), donate_argnums=(3,))
+            lowered = jitted.lower(p_specs, toks, pos, c_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "multi_pod": multi_pod, "lowered": lowered, "compiled": compiled,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+    }
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False, w8a8: bool = False) -> Dict:
+    """Full dry-run for one cell: compile + memory/cost/collective analysis."""
+    try:
+        res = lower_cell(arch, shape_name, multi_pod=multi_pod, w8a8=w8a8)
+    except Exception as e:  # a failure here is a bug in our sharding config
+        return {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "status": "fail", "error": f"{type(e).__name__}: {e}",
+            "trace": traceback.format_exc()[-2000:],
+        }
+    if res["status"] != "ok":
+        return res
+    compiled = res.pop("compiled")
+    lowered = res.pop("lowered")
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    res.update(
+        {
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            "cost": {
+                "flops": cost.get("flops"),
+                "bytes_accessed": cost.get("bytes accessed"),
+                "transcendentals": cost.get("transcendentals"),
+            },
+            "collectives": coll,
+        }
+    )
+    return res
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--w8a8", action="store_true", help="pre-quantized W8A8 serving params")
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                r = dryrun_cell(a, s, multi_pod=mp, w8a8=args.w8a8)
+                results.append(r)
+                tag = "POD2" if mp else "POD1"
+                status = r["status"].upper()
+                extra = ""
+                if r["status"] == "ok":
+                    gb = (r["memory"]["temp_bytes"] or 0) / 2**30
+                    extra = f" flops={r['cost']['flops']:.3e} temp={gb:.2f}GiB coll={r['collectives']['count']} t={r['t_compile_s']}s"
+                elif r["status"] == "fail":
+                    extra = " " + r["error"][:200]
+                print(f"[{tag}] {a:24s} {s:12s} {status}{extra}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    bad = [r for r in results if r["status"] == "fail"]
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,116 @@
+"""Jit-able train / prefill / decode step builders (shared by the real
+launchers and the dry-run).
+
+train_step: gradient accumulation via lax.scan over microbatches (bounds
+activation memory), remat per config, AdamW + schedule, optional QAT
+(fake-quant forward), optional int8 cross-pod gradient compression.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core import qat as qatlib
+from ..models import model as M
+from ..optim import adamw, schedule as schedlib
+
+
+def _qat_params(params: dict, enabled: bool):
+    if not enabled:
+        return params
+
+    def maybe_fq(path, leaf):
+        names = [str(getattr(k, "key", "")) for k in path]
+        if leaf.ndim >= 2 and names[-1] not in ("router",) and leaf.dtype in (jnp.float32, jnp.bfloat16):
+            return qatlib.fake_quant_weight_per_channel(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(maybe_fq, params)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    sc: ShapeConfig,
+    *,
+    compute_dtype=jnp.bfloat16,
+    adamw_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+    sched: str = "warmup_cosine",
+    sched_kwargs: Optional[dict] = None,
+    qat: bool = False,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+):
+    skw = sched_kwargs or dict(peak_lr=3e-4, warmup_steps=100, total_steps=10_000)
+    if sched == "wsd" and "stable_steps" not in skw:
+        skw = dict(peak_lr=skw.get("peak_lr", 3e-4), warmup_steps=100, stable_steps=8_000, decay_steps=1_900)
+    sched_fn = functools.partial(schedlib.SCHEDULES[sched], **skw)
+    n_micro = max(1, sc.microbatches)
+
+    def loss(params, mb):
+        p = _qat_params(params, qat)
+        return M.loss_fn(p, mb, cfg, compute_dtype=compute_dtype, q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(params, opt_state, batch: Dict):
+        def reshape_mb(x):
+            return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+        mbs = jax.tree.map(reshape_mb, batch)
+
+        def micro(carry, mb):
+            gsum, lsum = carry
+            (l, aux), g = grad_fn(params, mb)
+            gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return (gsum, lsum + l), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(micro, (g0, jnp.zeros((), jnp.float32)), mbs)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        lr = sched_fn(opt_state["step"])
+        new_params, new_opt, om = adamw.update(grads, opt_state, params, lr, adamw_cfg)
+        metrics = {"loss": lsum / n_micro, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_grad_step(
+    cfg: ModelConfig,
+    sc: ShapeConfig,
+    *,
+    compute_dtype=jnp.bfloat16,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+):
+    """loss+grad only (no optimizer, no microbatch scan) — used by the
+    roofline probes so per-layer costs can be separated cleanly."""
+
+    def loss(params, mb):
+        return M.loss_fn(params, mb, cfg, compute_dtype=compute_dtype, q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def grad_step(params, batch):
+        (l, aux), g = grad_fn(params, batch)
+        return l, g
+
+    return grad_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16, q_chunk: int = 1024, kv_chunk: int = 1024):
+    def prefill_step(params, batch, cache):
+        return M.prefill(params, batch, cfg, cache, compute_dtype=compute_dtype, q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16):
+    def decode_step(params, tokens, pos, cache):
+        return M.decode_step(params, tokens, pos, cache, cfg, compute_dtype=compute_dtype)
+
+    return decode_step

@@ -1,0 +1,115 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_1_7b --steps 50 \
+        --batch 8 --seq 256 [--qat] [--ckpt-dir /tmp/ckpt] [--schedule wsd]
+
+On a single CPU host this runs reduced configs end-to-end (the quickstart /
+examples path); on a TPU fleet the same script runs full configs under
+``make_production_mesh()`` — the step function, sharding rules, checkpointing
+and restart logic are identical.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..configs.base import ShapeConfig
+from ..data.pipeline import DataConfig, Pipeline
+from ..distributed.fault_tolerance import CheckpointManager, CheckpointManagerConfig, StragglerMonitor
+from ..distributed.sharding import use_mesh
+from ..models import model as M
+from ..optim import adamw
+from . import steps as steps_lib
+
+
+def train(
+    arch: str,
+    *,
+    steps: int = 20,
+    batch: int = 8,
+    seq: int = 128,
+    microbatches: int = 1,
+    reduced: bool = True,
+    qat: bool = False,
+    schedule: str = "warmup_cosine",
+    ckpt_dir: Optional[str] = None,
+    ckpt_interval: int = 50,
+    mesh=None,
+    compute_dtype=jnp.float32,
+    seed: int = 0,
+    log_every: int = 5,
+    resume: bool = True,
+):
+    cfg = get_config(arch, reduced=reduced)
+    sc = ShapeConfig("custom", "train", seq, batch, microbatches=microbatches)
+    pipe = Pipeline(cfg, DataConfig(seed=seed))
+    step_fn = steps_lib.make_train_step(
+        cfg, sc, compute_dtype=compute_dtype, sched=schedule, qat=qat,
+        sched_kwargs=dict(peak_lr=1e-3, warmup_steps=max(2, steps // 10), total_steps=steps),
+        q_chunk=min(seq, 512), kv_chunk=min(seq, 512),
+    )
+    manager = None
+    if ckpt_dir:
+        manager = CheckpointManager(CheckpointManagerConfig(ckpt_dir, interval_steps=ckpt_interval))
+    monitor = StragglerMonitor()
+
+    with use_mesh(mesh):
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        params = M.init_params(jax.random.PRNGKey(seed), cfg)
+        opt = adamw.init(params)
+        start = 0
+        if manager and resume and manager.has_checkpoint():
+            (params, opt), start, _ = manager.restore((params, opt))
+            start += 1
+            print(f"[train] resumed from step {start - 1}")
+        history = []
+        for step in range(start, steps):
+            monitor.start_step()
+            data = pipe.batch(step, batch, seq)
+            params, opt, metrics = jitted(params, opt, {k: jnp.asarray(v) for k, v in data.items()})
+            mm = monitor.end_step(step)
+            loss = float(metrics["loss"])
+            history.append(loss)
+            if step % log_every == 0 or step == steps - 1:
+                print(
+                    f"[train] {arch} step {step:4d} loss {loss:.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} lr {float(metrics['lr']):.2e} "
+                    f"dt {mm['step_time_s']:.2f}s",
+                    flush=True,
+                )
+            if manager:
+                manager.maybe_save(step, (params, opt))
+                if manager.preempted:
+                    break
+    return params, opt, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--full", action="store_true", help="full (non-reduced) config")
+    ap.add_argument("--qat", action="store_true")
+    ap.add_argument("--schedule", default="warmup_cosine", choices=["warmup_cosine", "wsd"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    train(
+        args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+        microbatches=args.microbatches, reduced=not args.full, qat=args.qat,
+        schedule=args.schedule, ckpt_dir=args.ckpt_dir, seed=args.seed,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: composable JAX blocks covering the 10 assigned architectures."""
+from . import attention, layers, mamba2, model, moe, rwkv6, transformer  # noqa: F401

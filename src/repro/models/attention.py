@@ -1,0 +1,461 @@
+"""Attention: GQA (+qk_norm, softcap, sliding window, local/global), MLA,
+cross-attention, chunked (flash-style) computation, and bf16/int8 KV caches.
+
+Conventions
+-----------
+* q is kept grouped as (B, S, Hkv, G, Dh) — G = n_heads // n_kv_heads — so GQA
+  never materializes repeated K/V.
+* Train/prefill use :func:`chunked_attention`: a lax.scan over KV chunks inside
+  a lax.scan over Q chunks with online softmax — O(S·chunk) memory, the pure-lax
+  flash-attention analogue the dry-run lowers (a Pallas flash kernel would slot
+  in here on real TPU; DESIGN.md §5).
+* int8 KV cache implements the paper's symmetric scheme on the cache: per
+  (batch, head) scales chosen at prefill, round-half-even, saturate — the
+  decode path dequantizes on read (DESIGN.md §4: MLA/GQA cache quantization).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from .layers import apply_rope, linear, param, rmsnorm, softcap_fn
+
+NEG_INF = -2.0**30  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    hd = cfg.hd()
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": param(ks[0], (cfg.d_model, cfg.n_heads * hd), dtype=dtype),
+        "wk": param(ks[1], (cfg.d_model, cfg.n_kv_heads * hd), dtype=dtype),
+        "wv": param(ks[2], (cfg.d_model, cfg.n_kv_heads * hd), dtype=dtype),
+        "wo": param(ks[3], (cfg.n_heads * hd, cfg.d_model), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "q_down": param(ks[0], (cfg.d_model, cfg.q_lora_rank), dtype=dtype),
+        "q_norm": jnp.ones((cfg.q_lora_rank,), dtype),
+        "q_up": param(ks[1], (cfg.q_lora_rank, cfg.n_heads * qk_head), dtype=dtype),
+        "kv_down": param(ks[2], (cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_head_dim), dtype=dtype),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), dtype),
+        "kv_up": param(
+            ks[3],
+            (cfg.kv_lora_rank, cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim)),
+            dtype=dtype,
+        ),
+        "wo": param(ks[4], (cfg.n_heads * cfg.v_head_dim, cfg.d_model), dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, kv_pos, *, window, bidirectional):
+    """(..., Sq, Skv) boolean validity.  ``window`` is a traced int32 scalar
+    (0 = unlimited) so local/global alternation can live inside one scanned
+    layer body."""
+    d = q_pos[..., :, None] - kv_pos[..., None, :]
+    if bidirectional:
+        m = jnp.ones(d.shape, bool)
+    else:
+        m = d >= 0
+    m = m & jnp.where(window > 0, d < window, True)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, Hkv, G, Dh)
+    k: jax.Array,  # (B, Skv, Hkv, Dh)
+    v: jax.Array,  # (B, Skv, Hkv, Dh)
+    q_pos: jax.Array,  # (Sq,) int32
+    kv_pos: jax.Array,  # (Skv,) int32
+    *,
+    scale: float,
+    window,  # int32 scalar array (0 = none)
+    softcap: Optional[float] = None,
+    bidirectional: bool = False,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    b, sq, hkv, g, dh = q.shape
+    skv = k.shape[1]
+    dv = v.shape[-1]  # may differ from dh (MLA: v_head_dim != qk dim)
+
+    def _div(s, c):  # largest divisor of s that is ≤ c
+        c = min(c, s)
+        while s % c:
+            c -= 1
+        return c
+
+    q_chunk = _div(sq, q_chunk)
+    kv_chunk = _div(skv, kv_chunk)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+
+    qc = q.reshape(b, nq, q_chunk, hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(b, nk, kv_chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, kv_chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(nq, q_chunk)
+    kp = kv_pos.reshape(nk, kv_chunk)
+
+    def q_step(_, qi):
+        q_i, qp_i = qi  # (B, qc, Hkv, G, Dh), (qc,)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            k_j, v_j, kp_j = ki
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i.astype(jnp.float32), k_j.astype(jnp.float32)) * scale
+            s = softcap_fn(s, softcap)
+            valid = _mask(qp_i, kp_j, window=window, bidirectional=bidirectional)
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            corr = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_j.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, dv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kp))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]  # (B,Hkv,G,qc,Dh)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B,qc,Hkv,G,Dh)
+
+    _, outs = jax.lax.scan(q_step, None, (qc, qp))  # (nq, B, qc, Hkv, G, Dv)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hkv, g, dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, Hkv, G, Dh)
+    k: jax.Array,  # (B, T, Hkv, Dh)
+    v: jax.Array,
+    cur_pos: jax.Array,  # (B,) int32 — position of the new token
+    kv_pos: jax.Array,  # (T,)
+    *,
+    scale: float,
+    window,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = softcap_fn(s, softcap)
+    kv_pos_b = jnp.broadcast_to(kv_pos if kv_pos.ndim == 2 else kv_pos[None, :], (q.shape[0], k.shape[1]))
+    d = cur_pos[:, None] - kv_pos_b  # (B, T)
+    valid = (d >= 0) & (kv_pos_b >= 0) & jnp.where(window > 0, d < window, True)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (bf16 | int8 per the paper's symmetric scheme)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    batch: int
+    max_len: int
+    n_kv_heads: int
+    head_dim: int
+    dtype: str  # "bf16" | "int8"
+
+
+def init_kv_cache(spec: KVCacheSpec) -> dict:
+    shape = (spec.batch, spec.max_len, spec.n_kv_heads, spec.head_dim)
+    if spec.dtype == "int8":
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.ones((spec.batch, spec.n_kv_heads), jnp.float32),
+            "v_scale": jnp.ones((spec.batch, spec.n_kv_heads), jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, jnp.bfloat16), "v": jnp.zeros(shape, jnp.bfloat16)}
+
+
+def _quantize_kv(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Symmetric int8 quantization of (B, S, H, D) with per-(B, H) scales —
+    round-half-even + saturate, the paper's QuantizeLinear semantics."""
+    q = jnp.rint(x.astype(jnp.float32) / scale[:, None, :, None])
+    return jnp.clip(q, -128, 127).astype(jnp.int8)
+
+
+def write_prefill_kv(cache: dict, k: jax.Array, v: jax.Array) -> dict:
+    """Write a full prefill of K/V at positions [0, S)."""
+    if "k_scale" in cache:
+        k_scale = jnp.abs(k.astype(jnp.float32)).max(axis=(1, 3)) / 127.0 + 1e-8
+        v_scale = jnp.abs(v.astype(jnp.float32)).max(axis=(1, 3)) / 127.0 + 1e-8
+        kq, vq = _quantize_kv(k, k_scale), _quantize_kv(v, v_scale)
+        return {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, 0, 0)),
+            "k_scale": k_scale,
+            "v_scale": v_scale,
+        }
+    return {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+    }
+
+
+def write_decode_kv(cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array) -> dict:
+    """Insert one token's K/V at per-batch position ``pos`` (B,)."""
+    b = k.shape[0]
+
+    def upd(buf, val):
+        # per-batch dynamic position: vmap a length-1 dynamic_update_slice
+        def one(buf_b, val_b, p):
+            return jax.lax.dynamic_update_slice(buf_b, val_b, (p, 0, 0))
+
+        return jax.vmap(one)(buf, val, pos)
+
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq = _quantize_kv(k, cache["k_scale"])
+        vq = _quantize_kv(v, cache["v_scale"])
+        out["k"], out["v"] = upd(cache["k"], kq), upd(cache["v"], vq)
+    else:
+        out["k"], out["v"] = upd(cache["k"], k.astype(cache["k"].dtype)), upd(cache["v"], v.astype(cache["v"].dtype))
+    return out
+
+
+def read_kv(cache: dict) -> Tuple[jax.Array, jax.Array]:
+    if "k_scale" in cache:
+        k = cache["k"].astype(jnp.float32) * cache["k_scale"][:, None, :, None]
+        v = cache["v"].astype(jnp.float32) * cache["v_scale"][:, None, :, None]
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    return cache["k"], cache["v"]
+
+
+# ---------------------------------------------------------------------------
+# full attention blocks
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x, n_heads, hd):
+    return x.reshape(x.shape[:-1] + (n_heads, hd))
+
+
+def gqa_attention(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    pos: jax.Array,  # (S,) for train/prefill, (B,) current positions for decode
+    cfg: ModelConfig,
+    *,
+    window,  # int32 scalar array; 0 = none
+    cache: Optional[dict] = None,
+    mode: str = "train",  # train | prefill | decode
+    bidirectional: bool = False,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[dict]]:
+    b, s, _ = x.shape
+    hd = cfg.hd()
+    hkv = cfg.n_kv_heads
+    g = cfg.n_heads // hkv
+    q = _split_heads(linear(x, p["wq"]), cfg.n_heads, hd)  # (B,S,H,Dh)
+    k = _split_heads(linear(x, p["wk"]), hkv, hd)
+    v = _split_heads(linear(x, p["wv"]), hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], eps=cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], eps=cfg.norm_eps)
+    rope_pos = pos[None, :] if mode != "decode" else pos[:, None]  # (B or 1, S)
+    q = apply_rope(q, jnp.broadcast_to(rope_pos, (b, s)), cfg.rope_theta)
+    k = apply_rope(k, jnp.broadcast_to(rope_pos, (b, s)), cfg.rope_theta)
+    q = shard(q.reshape(b, s, hkv, g, hd), "batch", None, "kv_heads_act", None, None)
+    k = shard(k, "batch", None, "kv_heads_act", None)
+    v = shard(v, "batch", None, "kv_heads_act", None)
+    scale = hd**-0.5
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        t_cache = cache["k"].shape[1]
+        if cfg.attn_type == "swa" and cfg.window and t_cache <= cfg.window:
+            # ring buffer: cache holds only the last `window` tokens.  Slot i
+            # currently stores position p_i = pos − ((pos − i) mod T); slots
+            # never written yet resolve to p_i < 0 and are masked out.
+            new_cache = write_decode_kv(cache, k, v, pos % t_cache)
+            idx = jnp.arange(t_cache, dtype=jnp.int32)
+            kv_pos = pos[:, None] - jnp.mod(pos[:, None] - idx[None, :], t_cache)
+        else:
+            new_cache = write_decode_kv(cache, k, v, pos)
+            kv_pos = jnp.arange(t_cache, dtype=jnp.int32)
+        kf, vf = read_kv(new_cache)
+        out = decode_attention(q, kf, vf, pos, kv_pos, scale=scale, window=window, softcap=cfg.attn_softcap)
+    else:
+        if cache is not None:
+            t_cache = cache["k"].shape[1]
+            if s > t_cache:
+                # SWA ring cache shorter than the prompt: only the last
+                # `window` tokens matter for future decode.  Position p lives
+                # in slot p mod W ⇒ roll the tail slice into ring order.
+                shift = (s - t_cache) % t_cache
+                k_w = jnp.roll(k[:, s - t_cache :], shift, axis=1)
+                v_w = jnp.roll(v[:, s - t_cache :], shift, axis=1)
+                new_cache = write_prefill_kv(cache, k_w, v_w)
+            else:
+                new_cache = write_prefill_kv(cache, k, v)
+        p_pos = jnp.asarray(pos, jnp.int32)
+        out = chunked_attention(
+            q, k, v, p_pos, p_pos,
+            scale=scale, window=window, softcap=cfg.attn_softcap,
+            bidirectional=bidirectional, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return linear(out, p["wo"]), new_cache
+
+
+def cross_attention(
+    p: dict,
+    x: jax.Array,  # (B, S, d) decoder side
+    enc_kv: Tuple[jax.Array, jax.Array],  # precomputed (B, T, Hkv, Dh) k, v
+    cfg: ModelConfig,
+) -> jax.Array:
+    b, s, _ = x.shape
+    hd = cfg.hd()
+    hkv = cfg.n_kv_heads
+    g = cfg.n_heads // hkv
+    q = _split_heads(linear(x, p["wq"]), cfg.n_heads, hd).reshape(b, s, hkv, g, hd)
+    k, v = enc_kv
+    t = k.shape[1]
+    zero_w = jnp.zeros((), jnp.int32)
+    out = chunked_attention(
+        q, k, v,
+        jnp.arange(s, dtype=jnp.int32), jnp.arange(t, dtype=jnp.int32),
+        scale=hd**-0.5, window=zero_w, bidirectional=True,
+        q_chunk=min(1024, s), kv_chunk=min(1024, t),
+    )
+    return linear(out.reshape(b, s, cfg.n_heads * hd), p["wo"])
+
+
+def encdec_cross_kv(p: dict, enc_out: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    hd = cfg.hd()
+    k = _split_heads(linear(enc_out, p["wk"]), cfg.n_kv_heads, hd)
+    v = _split_heads(linear(enc_out, p["wv"]), cfg.n_kv_heads, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, minicpm3/deepseek style)
+# ---------------------------------------------------------------------------
+
+
+def init_mla_cache(batch: int, max_len: int, cfg: ModelConfig, dtype: str = "bf16") -> dict:
+    if dtype == "int8":
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), jnp.int8),
+            "ckv_scale": jnp.ones((batch,), jnp.float32),
+            "k_pe": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), jnp.bfloat16),
+        }
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), jnp.bfloat16),
+        "k_pe": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), jnp.bfloat16),
+    }
+
+
+def mla_attention(
+    p: dict,
+    x: jax.Array,
+    pos: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,
+    mode: str = "train",
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """MLA with the compressed-latent KV cache (the memory win that makes MLA
+    attractive; quantizing the latent is the paper's scheme applied to it)."""
+    b, s, _ = x.shape
+    nh = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    cq = rmsnorm(linear(x, p["q_down"]), p["q_norm"], eps=cfg.norm_eps)
+    q = linear(cq, p["q_up"]).reshape(b, s, nh, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+
+    ckv_full = linear(x, p["kv_down"])  # (B,S,rank+dr)
+    ckv, k_pe = ckv_full[..., : cfg.kv_lora_rank], ckv_full[..., cfg.kv_lora_rank :]
+    ckv = rmsnorm(ckv, p["kv_norm"], eps=cfg.norm_eps)
+
+    rope_pos = pos[None, :] if mode != "decode" else pos[:, None]
+    rope_pos = jnp.broadcast_to(rope_pos, (b, s))
+    q_pe = apply_rope(q_pe, rope_pos, cfg.rope_theta)
+    k_pe = apply_rope(k_pe[:, :, None, :], rope_pos, cfg.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        new_cache = dict(cache)
+        if "ckv_scale" in cache:
+            ckv_q = jnp.clip(jnp.rint(ckv.astype(jnp.float32) / cache["ckv_scale"][:, None, None]), -128, 127).astype(jnp.int8)
+        else:
+            ckv_q = ckv.astype(cache["ckv"].dtype)
+
+        def one(buf, val, pp):
+            return jax.lax.dynamic_update_slice(buf, val, (pp, 0))
+
+        new_cache["ckv"] = jax.vmap(one)(cache["ckv"], ckv_q, pos)
+        new_cache["k_pe"] = jax.vmap(one)(cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), pos)
+        ckv_all = new_cache["ckv"].astype(jnp.float32)
+        if "ckv_scale" in cache:
+            ckv_all = ckv_all * cache["ckv_scale"][:, None, None]
+        k_pe_all = new_cache["k_pe"]
+        t = ckv_all.shape[1]
+    else:
+        if cache is not None:
+            new_cache = dict(cache)
+            if "ckv_scale" in cache:
+                sc = jnp.abs(ckv.astype(jnp.float32)).max(axis=(1, 2)) / 127.0 + 1e-8
+                ckv_q = jnp.clip(jnp.rint(ckv.astype(jnp.float32) / sc[:, None, None]), -128, 127).astype(jnp.int8)
+                new_cache["ckv_scale"] = sc
+            else:
+                ckv_q = ckv.astype(cache["ckv"].dtype)
+            new_cache["ckv"] = jax.lax.dynamic_update_slice(cache["ckv"], ckv_q, (0, 0, 0))
+            new_cache["k_pe"] = jax.lax.dynamic_update_slice(cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, 0, 0))
+        ckv_all, k_pe_all, t = ckv, k_pe, s
+
+    # up-project latents to per-head K (nope) and V
+    kv = linear(ckv_all.astype(x.dtype), p["kv_up"]).reshape(b, t, nh, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe_all[:, :, None, :].astype(x.dtype), (b, t, nh, dr))], axis=-1)
+    qh = jnp.concatenate([q_nope, q_pe], axis=-1).reshape(b, s, nh, 1, dn + dr)
+    scale = (dn + dr) ** -0.5
+    zero_w = jnp.zeros((), jnp.int32)
+    if mode == "decode":
+        kv_pos = jnp.arange(t, dtype=jnp.int32)
+        out = decode_attention(qh, k, v, pos, kv_pos, scale=scale, window=zero_w)
+    else:
+        pp = jnp.asarray(pos, jnp.int32)
+        out = chunked_attention(qh, k, v, pp, pp, scale=scale, window=zero_w, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out.reshape(b, s, nh * dv)
+    return linear(out, p["wo"]), new_cache

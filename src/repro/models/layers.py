@@ -1,0 +1,153 @@
+"""Shared model layers: norms, RoPE, embeddings, gated MLPs.
+
+Everything is a pure function over explicit param pytrees (no flax).  Param
+creation goes through :func:`param` so every leaf gets a deterministic
+initializer; sharding is resolved separately from *param path names* by
+``repro.distributed.sharding`` (see param_logical_axes in model.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+
+
+def param(key, shape, scale: float = 0.02, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def linear(x: jax.Array, w) -> jax.Array:
+    """Matmul that dispatches on the weight representation.
+
+    * plain array  — bf16/f32 GEMM;
+    * {"q8": int8 (in,out), "s": f32 (out,)} — W8A8 per the paper: dynamic
+      per-tensor symmetric activation quantization (round-half-even,
+      saturate), int8×int8→int32 MatMulInteger on the MXU, rescale by
+      (scale_x·scale_w) — see repro.core.convert.convert_params_w8a8.
+    """
+    if isinstance(w, dict) and "q8" in w:
+        xf = x.astype(jnp.float32)
+        absmax = jax.lax.stop_gradient(jnp.abs(xf).max())
+        sx = jnp.maximum(absmax / 127.0, 1e-12)
+        xq = jnp.clip(jnp.rint(xf / sx), -128, 127).astype(jnp.int8)
+        acc = jax.lax.dot_general(
+            xq, w["q8"], (((x.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+        return (acc.astype(jnp.float32) * (sx * w["s"])).astype(x.dtype)
+    return x @ w
+
+
+def zeros(shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6, plus_one: bool = False) -> jax.Array:
+    """RMSNorm in f32 (stability), output in input dtype.  ``plus_one`` is the
+    gemma convention (weight stored as deviation from 1)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if plus_one:
+        w = w + 1.0
+    return (xf * w).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: Optional[jax.Array], *, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+# -- rotary embeddings -------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); pos: (..., S) int32.  Rotates pairs
+    (x[..., :D/2], x[..., D/2:]) — the "half split" convention."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # (D/2,)
+    ang = pos.astype(jnp.float32)[..., None] * inv  # (..., S, D/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    if x.ndim == pos.ndim + 2:  # head axis present
+        sin, cos = sin[..., None, :], cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str = "swiglu", dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": param(k1, (d_model, d_ff), dtype=dtype),
+            "w_up": param(k2, (d_model, d_ff), dtype=dtype),
+            "w_down": param(k3, (d_ff, d_model), dtype=dtype),
+        }
+    return {  # vanilla 2-matrix MLP (gelu/relu)
+        "w_up": param(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": param(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array, mlp_type: str = "swiglu") -> jax.Array:
+    if mlp_type in ("swiglu", "geglu"):
+        g = linear(x, params["w_gate"])
+        u = linear(x, params["w_up"])
+        g = shard(g, "batch", None, "mlp_act") if g.ndim == 3 else g
+        act = jax.nn.silu(g) if mlp_type == "swiglu" else jax.nn.gelu(g, approximate=True)
+        h = act * u
+        return linear(h, params["w_down"])
+    h = jax.nn.gelu(linear(x, params["w_up"]), approximate=True)
+    return linear(h, params["w_down"])
+
+
+# -- embeddings ---------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32) -> dict:
+    return {"table": param(key, (vocab, d_model), scale=1.0, dtype=dtype)}
+
+
+def embed(params: dict, tokens: jax.Array, *, scale_by_sqrt_dim: bool = False) -> jax.Array:
+    x = jnp.take(params["table"], tokens, axis=0)
+    if scale_by_sqrt_dim:
+        x = x * jnp.sqrt(jnp.asarray(x.shape[-1], x.dtype))
+    return x
+
+
+def logits_from_embedding(params: dict, x: jax.Array, *, softcap: Optional[float] = None) -> jax.Array:
+    """Tied-embedding readout (x @ table.T) with optional logit softcapping."""
+    logits = x.astype(jnp.float32) @ params["table"].T.astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def softcap_fn(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

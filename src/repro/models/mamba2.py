@@ -1,0 +1,143 @@
+"""Mamba2 (SSD) block — used by the zamba2-7b hybrid (arXiv:2411.15242).
+
+Implements the chunked State-Space-Dual algorithm (Dao & Gu 2024): within a
+chunk the recurrence is computed as masked-decay attention (matmuls → MXU);
+across chunks a (B, H, P, N) state is carried by a lax.scan.  Decode is the
+O(1) single-step recurrence — which is why hybrids run the long_500k cell.
+
+    h_t = exp(dt_t·A) h_{t-1} + dt_t · x_t ⊗ B_t
+    y_t = C_t · h_t + D · x_t
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import linear, param, rmsnorm
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    conv_dim = d_inner + 2 * ssm.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2_layer(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ssm = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": param(ks[0], (cfg.d_model, 2 * d_inner + 2 * ssm.d_state + n_heads), dtype=dtype),
+        "conv_w": param(ks[1], (ssm.d_conv, conv_dim), 0.2, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "gate_norm": jnp.ones((d_inner,), dtype),
+        "out_proj": param(ks[2], (d_inner, cfg.d_model), dtype=dtype),
+    }
+
+
+def init_mamba2_state(batch: int, cfg: ModelConfig) -> dict:
+    ssm = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, ssm.d_conv - 1, conv_dim), jnp.bfloat16),
+        "ssd": jnp.zeros((batch, n_heads, ssm.head_dim, ssm.d_state), jnp.float32),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array, prev: jax.Array):
+    """Depthwise causal conv1d, width K: (B,S,C) with (B,K-1,C) history."""
+    k = w.shape[0]
+    full = jnp.concatenate([prev.astype(xbc.dtype), xbc], axis=1)  # (B, S+K-1, C)
+    out = sum(full[:, i : i + xbc.shape[1]] * w[i] for i in range(k)) + b
+    new_prev = full[:, -(k - 1) :] if k > 1 else prev
+    return jax.nn.silu(out), new_prev.astype(jnp.bfloat16)
+
+
+def _ssd_chunk(carry, inp, *, nh, p_dim):
+    """One SSD chunk: intra-chunk masked attention + inter-chunk state."""
+    s_prev = carry  # (B,H,P,N) f32
+    xh, bm, cm, dt, la = inp  # (B,L,H,P), (B,L,N), (B,L,N), (B,L,H), (B,L,H)
+    l_cum = jnp.cumsum(la, axis=1)  # (B,L,H) cumulative log-decay
+    l_last = l_cum[:, -1]  # (B,H)
+
+    # intra-chunk: att[i,j] = (C_i·B_j)·exp(l_i−l_j)·dt_j  for j ≤ i
+    cb = jnp.einsum("bin,bjn->bij", cm, bm)  # (B,L,L)
+    diff = l_cum[:, :, None, :] - l_cum[:, None, :, :]  # (B,L,L,H) = l_i − l_j
+    li = jnp.tril(jnp.ones((xh.shape[1], xh.shape[1]), bool))
+    m = jnp.where(li[None, :, :, None], jnp.exp(diff), 0.0) * dt[:, None, :, :]
+    y_intra = jnp.einsum("bijh,bjhp->bihp", cb[..., None] * m, xh.astype(jnp.float32))
+
+    # inter-chunk: carry-in state read by C with prefix decay
+    y_inter = jnp.einsum("bin,bhpn->bihp", cm, s_prev) * jnp.exp(l_cum)[..., None]
+
+    # state update: suffix-decayed outer products + fully decayed carry
+    w_suffix = jnp.exp(l_last[:, None, :] - l_cum) * dt  # (B,L,H)
+    s_contrib = jnp.einsum("bjh,bjn,bjhp->bhpn", w_suffix, bm, xh.astype(jnp.float32))
+    s_new = jnp.exp(l_last)[:, :, None, None] * s_prev + s_contrib
+    return s_new, (y_intra + y_inter).astype(xh.dtype)
+
+
+def mamba2_mix(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    state: dict,
+    cfg: ModelConfig,
+    *,
+    chunk: int = 256,
+) -> Tuple[jax.Array, dict]:
+    ssm = cfg.ssm
+    b, s, _ = x.shape
+    d_inner, nh, conv_dim = _dims(cfg)
+    pdim, n = ssm.head_dim, ssm.d_state
+
+    zxbcdt = linear(x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], state["conv"])
+    xs, bm, cm = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xh = xs.reshape(b, s, nh, pdim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])  # (H,) negative
+    log_decay = dt * a  # (B,S,H)  = log(exp(dt·A))
+
+    if s == 1:  # decode: single recurrence step
+        s_prev = state["ssd"]
+        kv = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], bm[:, 0].astype(jnp.float32), xh[:, 0].astype(jnp.float32))
+        s_new = jnp.exp(log_decay[:, 0])[:, :, None, None] * s_prev + kv
+        y = jnp.einsum("bn,bhpn->bhp", cm[:, 0].astype(jnp.float32), s_new)[:, None]
+        y = y.reshape(b, 1, nh, pdim)
+        ssd_state = s_new
+    else:
+        chunk = min(chunk, s)
+        assert s % chunk == 0, (s, chunk)
+        nc = s // chunk
+        resh = lambda t_: jnp.moveaxis(t_.reshape((b, nc, chunk) + t_.shape[2:]), 1, 0)
+        import functools
+
+        # remat each chunk: backward stores only the (B,H,P,N) chunk-boundary
+        # states, not the (B,L,L,H) intra-chunk decay matrices.
+        step = jax.checkpoint(functools.partial(_ssd_chunk, nh=nh, p_dim=pdim))
+        ssd_state, ys = jax.lax.scan(
+            step,
+            state["ssd"],
+            (resh(xh), resh(bm.astype(jnp.float32)), resh(cm.astype(jnp.float32)), resh(dt), resh(log_decay)),
+        )
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, pdim)
+
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xh.astype(y.dtype)
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(y.astype(x.dtype) * jax.nn.silu(z), p["gate_norm"], eps=cfg.norm_eps)
+    out = linear(y, p["out_proj"])
+    return out, {"conv": conv_state, "ssd": ssd_state}
+
+
+def mamba2_block(p: dict, x: jax.Array, state: dict, cfg: ModelConfig, norm_scale: jax.Array) -> Tuple[jax.Array, dict]:
+    h, state = mamba2_mix(p, rmsnorm(x, norm_scale, eps=cfg.norm_eps), state, cfg)
+    return x + h, state

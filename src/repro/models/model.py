@@ -1,0 +1,516 @@
+"""Unified model API over all four families (decoder / enc-dec / rwkv6 /
+hybrid):
+
+    init_params(key, cfg)                  -> params pytree (f32 masters)
+    init_cache(cfg, batch, max_len)        -> serving cache pytree
+    loss_fn(params, batch, cfg)            -> (loss, metrics)       [train]
+    prefill(params, batch, cfg, cache)     -> (last_logits, cache)  [serve]
+    decode_step(params, tokens, pos, cache, cfg) -> (logits, cache) [serve]
+    param_logical_axes(params)             -> logical-axes pytree (sharding)
+
+Modality frontends ([audio]/[vlm]) are stubs per assignment: batches carry
+precomputed frame/patch embeddings which are concatenated/consumed directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from . import attention as attn
+from . import transformer as tfm
+from .layers import embed, init_embedding, logits_from_embedding, param, rmsnorm
+from .mamba2 import init_mamba2_layer, init_mamba2_state, mamba2_block
+from .rwkv6 import init_rwkv6_layer, init_rwkv6_state, rwkv6_block
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(init_fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    """Vocab padded to a multiple of 256 so the vocab dim always shards over
+    the 16-way model axis (and stays MXU-lane aligned).  Padded logits are
+    masked to -inf in _logits; labels never reach the padding."""
+    return (cfg.vocab_size + 255) // 256 * 256
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    k_emb, k_layers, k_head, k_enc, k_shared = jax.random.split(key, 5)
+    p: dict = {"embed": init_embedding(k_emb, padded_vocab(cfg), cfg.d_model, dtype)}
+    p["final_norm"] = (
+        jnp.zeros((cfg.d_model,), dtype) if cfg.norm_plus_one else jnp.ones((cfg.d_model,), dtype)
+    )
+    if not cfg.tie_embeddings:
+        p["lm_head"] = param(k_head, (cfg.d_model, padded_vocab(cfg)), dtype=dtype)
+
+    if cfg.family == "decoder":
+        p["layers"] = _stack_init(lambda k: tfm.init_decoder_layer(k, cfg, dtype), k_layers, cfg.n_layers)
+    elif cfg.family == "encdec":
+        p["encoder"] = _stack_init(lambda k: tfm.init_encoder_layer(k, cfg, dtype), k_enc, cfg.n_encoder_layers)
+        p["layers"] = _stack_init(lambda k: tfm.init_cross_layer(k, cfg, dtype), k_layers, cfg.n_layers)
+        p["enc_final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    elif cfg.family == "rwkv6":
+        def init_rwkv(k):
+            lp = init_rwkv6_layer(k, cfg, dtype)
+            lp["ln1"] = jnp.ones((cfg.d_model,), dtype)
+            lp["ln2"] = jnp.ones((cfg.d_model,), dtype)
+            return lp
+
+        p["layers"] = _stack_init(init_rwkv, k_layers, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        hy = cfg.hybrid
+
+        def init_mamba(k):
+            lp = init_mamba2_layer(k, cfg, dtype)
+            lp["ln"] = jnp.ones((cfg.d_model,), dtype)
+            return lp
+
+        n_grouped = hy.n_groups * hy.ssm_per_group
+        grouped = _stack_init(init_mamba, k_layers, n_grouped)
+        p["mamba_groups"] = jax.tree.map(
+            lambda a: a.reshape((hy.n_groups, hy.ssm_per_group) + a.shape[1:]), grouped
+        )
+        if hy.tail_ssm_layers:
+            p["mamba_tail"] = _stack_init(init_mamba, jax.random.fold_in(k_layers, 1), hy.tail_ssm_layers)
+        p["shared_block"] = tfm.init_decoder_layer(k_shared, cfg, dtype)
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, src_len: int = 0) -> dict:
+    dt = cfg.kv_cache_dtype
+    if cfg.attn_type == "swa" and cfg.window:
+        # ring buffer: SWA never attends past `window`, so the cache is capped
+        # (long_500k: 524288 → 4096 slots per layer, a 128× memory cut)
+        max_len = min(max_len, cfg.window)
+    if cfg.family == "decoder":
+        if cfg.attn_type == "mla":
+            one = lambda: attn.init_mla_cache(batch, max_len, cfg, dt)
+        else:
+            spec = attn.KVCacheSpec(batch, max_len, cfg.n_kv_heads, cfg.hd(), dt)
+            one = lambda: attn.init_kv_cache(spec)
+        return {"layers": jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one())}
+    if cfg.family == "encdec":
+        spec = attn.KVCacheSpec(batch, max_len, cfg.n_kv_heads, cfg.hd(), dt)
+        one = attn.init_kv_cache(spec)
+        hd = cfg.hd()
+        return {
+            "layers": jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one),
+            "cross_kv": (
+                jnp.zeros((cfg.n_layers, batch, src_len, cfg.n_kv_heads, hd), jnp.bfloat16),
+                jnp.zeros((cfg.n_layers, batch, src_len, cfg.n_kv_heads, hd), jnp.bfloat16),
+            ),
+        }
+    if cfg.family == "rwkv6":
+        one = init_rwkv6_state(batch, cfg)
+        return {"layers": jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)}
+    if cfg.family == "hybrid":
+        hy = cfg.hybrid
+        ms = init_mamba2_state(batch, cfg)
+        spec = attn.KVCacheSpec(batch, max_len, cfg.n_kv_heads, cfg.hd(), dt)
+        kv = attn.init_kv_cache(spec)
+        cache = {
+            "mamba_groups": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (hy.n_groups, hy.ssm_per_group) + a.shape), ms
+            ),
+            "shared_kv": jax.tree.map(lambda a: jnp.broadcast_to(a, (hy.n_groups,) + a.shape), kv),
+        }
+        if hy.tail_ssm_layers:
+            cache["mamba_tail"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (hy.tail_ssm_layers,) + a.shape), ms
+            )
+        return cache
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# forward bodies per family
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch: Dict, cfg: ModelConfig, compute_dtype) -> Tuple[jax.Array, jax.Array]:
+    """Token (+ frontend-stub) embedding.  Returns (x (B,S,d), pos (S,))."""
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, scale_by_sqrt_dim=cfg.embed_scale_sqrt_dim).astype(compute_dtype)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(compute_dtype), x], axis=1)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    return x, pos
+
+
+def _rwkv_stack(params, x, caches, cfg, mode):
+    def body(carry, xs):
+        h = carry
+        p_l, st_l = xs
+        h = shard(h, "batch", None, None)
+        h, st_new = rwkv6_block(p_l, h, st_l, cfg, {"ln1": p_l["ln1"], "ln2": p_l["ln2"]})
+        return h, st_new
+
+    if mode == "train":
+        body = tfm._remat(body, cfg.remat_policy)
+    if cfg.scan_layers:
+        x, new_states = jax.lax.scan(body, x, (params["layers"], caches["layers"]))
+    else:  # unrolled (roofline probes)
+        outs = []
+        for i in range(cfg.n_layers):
+            sl = lambda a: a[i]
+            x, st = body(x, (jax.tree.map(sl, params["layers"]), jax.tree.map(sl, caches["layers"])))
+            outs.append(st)
+        new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return x, {"layers": new_states}, jnp.zeros((), jnp.float32)
+
+
+def init_hybrid_states(cfg: ModelConfig, batch: int) -> dict:
+    """Mamba recurrence states only (training needs no KV cache)."""
+    hy = cfg.hybrid
+    ms = init_mamba2_state(batch, cfg)
+    st = {
+        "mamba_groups": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (hy.n_groups, hy.ssm_per_group) + a.shape), ms
+        ),
+        "shared_kv": None,
+    }
+    if hy.tail_ssm_layers:
+        st["mamba_tail"] = jax.tree.map(lambda a: jnp.broadcast_to(a, (hy.tail_ssm_layers,) + a.shape), ms)
+    return st
+
+
+def _hybrid_stack(params, x, pos, caches, cfg, mode, q_chunk, kv_chunk):
+    hy = cfg.hybrid
+    zero_w = jnp.zeros((), jnp.int32)
+
+    def mamba_scan(x, p_stack, st_stack):
+        def body(h, xs):
+            p_l, st_l = xs
+            h = shard(h, "batch", None, None)
+            h, st_new = mamba2_block(p_l, h, st_l, cfg, p_l["ln"])
+            return h, st_new
+
+        if mode == "train":
+            body = tfm._remat(body, cfg.remat_policy)
+        if cfg.scan_layers:
+            return jax.lax.scan(body, x, (p_stack, st_stack))
+        outs = []
+        n = jax.tree.leaves(st_stack)[0].shape[0]
+        for i in range(n):
+            sl = lambda a: a[i]
+            x, st = body(x, (jax.tree.map(sl, p_stack), jax.tree.map(sl, st_stack)))
+            outs.append(st)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    def group_body(carry, xs):
+        h, aux = carry
+        p_g, st_g, kv_g = xs
+        h, st_new = mamba_scan(h, p_g, st_g)
+        h, kv_new, aux_l = tfm.decoder_block(
+            params["shared_block"], h, pos, cfg,
+            window=zero_w, cache=kv_g, mode=mode, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+        return (h, aux + aux_l), (st_new, kv_new)
+
+    if mode == "train":
+        group_body = tfm._remat(group_body, cfg.remat_policy)
+
+    if cfg.scan_layers:
+        (x, aux), (m_states, kv_states) = jax.lax.scan(
+            group_body, (x, jnp.zeros((), jnp.float32)),
+            (params["mamba_groups"], caches["mamba_groups"], caches.get("shared_kv")),
+        )
+    else:  # unrolled (roofline probes)
+        carry = (x, jnp.zeros((), jnp.float32))
+        m_list, kv_list = [], []
+        for i in range(hy.n_groups):
+            sl = lambda a: a[i]
+            kv_g = None if caches.get("shared_kv") is None else jax.tree.map(sl, caches["shared_kv"])
+            carry, (st, kv) = group_body(
+                carry, (jax.tree.map(sl, params["mamba_groups"]), jax.tree.map(sl, caches["mamba_groups"]), kv_g)
+            )
+            m_list.append(st)
+            kv_list.append(kv)
+        x, aux = carry
+        m_states = jax.tree.map(lambda *xs: jnp.stack(xs), *m_list)
+        kv_states = None if kv_list[0] is None else jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+    new_cache = {"mamba_groups": m_states, "shared_kv": kv_states}
+    if hy.tail_ssm_layers:
+        x, tail_states = mamba_scan(x, params["mamba_tail"], caches["mamba_tail"])
+        new_cache["mamba_tail"] = tail_states
+    return x, new_cache, aux
+
+
+def forward(
+    params: dict,
+    batch: Dict,
+    cfg: ModelConfig,
+    *,
+    mode: str = "train",  # train | prefill | decode
+    caches: Optional[dict] = None,
+    pos: Optional[jax.Array] = None,  # (B,) decode positions
+    compute_dtype=jnp.bfloat16,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (hidden (B,S,d), new_caches, aux_loss)."""
+    cast = lambda t: jax.tree.map(lambda a: a.astype(compute_dtype) if a.dtype == jnp.float32 and a.ndim >= 2 else a, t)
+    params = cast(params)
+    windows = jnp.asarray(tfm.layer_windows(cfg, cfg.n_layers), jnp.int32)
+
+    if cfg.family == "rwkv6":
+        x, _ = _embed_inputs(params, batch, cfg, compute_dtype)
+        if caches is None:
+            caches = init_cache(cfg, x.shape[0], 0)
+        x, new_caches, aux = _rwkv_stack(params, x, caches, cfg, mode)
+    elif cfg.family == "hybrid":
+        x, xpos = _embed_inputs(params, batch, cfg, compute_dtype)
+        p_eff = pos if mode == "decode" else xpos
+        if caches is None:
+            caches = init_hybrid_states(cfg, x.shape[0])
+        x, new_caches, aux = _hybrid_stack(params, x, p_eff, caches, cfg, mode, q_chunk, kv_chunk)
+    elif cfg.family == "encdec":
+        x, xpos = _embed_inputs(params, batch, cfg, compute_dtype)
+        p_eff = pos if mode == "decode" else xpos
+        layer_caches = None if caches is None else caches["layers"]
+        if mode == "decode":
+            cross_kv = jax.tree.map(lambda a: a.astype(compute_dtype), caches["cross_kv"])
+        else:
+            src = batch["src_embeds"].astype(compute_dtype)
+            enc_w = jnp.zeros((cfg.n_encoder_layers,), jnp.int32)
+            enc_out, _, _ = tfm.run_decoder_stack(
+                params["encoder"], src, jnp.arange(src.shape[1], dtype=jnp.int32), cfg,
+                windows=enc_w, caches=None, mode="train", bidirectional=True,
+                q_chunk=q_chunk, kv_chunk=kv_chunk,
+            )
+            enc_out = rmsnorm(enc_out, params["enc_final_norm"], eps=cfg.norm_eps)
+            cross_kv = tfm.compute_cross_kv(params["layers"]["xattn"], enc_out, cfg)
+        x, new_layer_caches, aux = tfm.run_decoder_stack(
+            params["layers"], x, p_eff, cfg,
+            windows=windows, caches=layer_caches, mode=mode, cross_kv=cross_kv,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+        new_caches = None
+        if caches is not None:
+            new_caches = {
+                "layers": new_layer_caches,
+                "cross_kv": jax.tree.map(lambda a: a.astype(jnp.bfloat16), cross_kv),
+            }
+    else:  # decoder
+        x, xpos = _embed_inputs(params, batch, cfg, compute_dtype)
+        p_eff = pos if mode == "decode" else xpos
+        layer_caches = None if caches is None else caches["layers"]
+        x, new_layer_caches, aux = tfm.run_decoder_stack(
+            params["layers"], x, p_eff, cfg,
+            windows=windows, caches=layer_caches, mode=mode,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+        new_caches = None if caches is None else {"layers": new_layer_caches}
+
+    x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    return x, new_caches, aux
+
+
+def _logits(params, x, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = logits_from_embedding(params["embed"], x, softcap=cfg.logit_softcap)
+    else:
+        logits = x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+        if cfg.logit_softcap is not None:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    vp = padded_vocab(cfg)
+    if vp != cfg.vocab_size:  # mask the padded tail
+        mask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return shard(logits, "batch", None, "vocab_act")
+
+
+# ---------------------------------------------------------------------------
+# train / serve entry points
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(
+    params: dict,
+    batch: Dict,
+    cfg: ModelConfig,
+    *,
+    compute_dtype=jnp.bfloat16,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Dict]:
+    """Next-token cross-entropy (one-hot einsum form — GSPMD-friendly over a
+    model-sharded vocab) + MoE aux."""
+    x, _, aux = forward(
+        params, batch, cfg, mode="train",
+        compute_dtype=compute_dtype, q_chunk=q_chunk, kv_chunk=kv_chunk,
+    )
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        x = x[:, batch["patch_embeds"].shape[1] :]  # loss over text positions only
+    # next-token objective: position t predicts label t+1
+    labels = jnp.concatenate(
+        [batch["labels"][:, 1:], jnp.full_like(batch["labels"][:, :1], -1)], axis=1
+    )
+    logits = _logits(params, x, cfg)  # (B, S, V) f32
+    m = logits.max(axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, padded_vocab(cfg), dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    valid = (labels >= 0).astype(jnp.float32)
+    nll = (lse - gold) * valid
+    loss = nll.sum() / jnp.maximum(valid.sum(), 1.0)
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux, "tokens": valid.sum()}
+
+
+def prefill(
+    params: dict,
+    batch: Dict,
+    cfg: ModelConfig,
+    caches: dict,
+    *,
+    compute_dtype=jnp.bfloat16,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, dict]:
+    """Run the prompt through the model, writing caches; returns logits at the
+    last position (B, V)."""
+    x, new_caches, _ = forward(
+        params, batch, cfg, mode="prefill", caches=caches,
+        compute_dtype=compute_dtype, q_chunk=q_chunk, kv_chunk=kv_chunk,
+    )
+    logits = _logits(params, x[:, -1:], cfg)[:, 0]
+    return logits, new_caches
+
+
+def decode_step(
+    params: dict,
+    tokens: jax.Array,  # (B, 1)
+    pos: jax.Array,  # (B,) position of the new token
+    caches: dict,
+    cfg: ModelConfig,
+    *,
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, dict]:
+    """One serving step: append one token per sequence, return (B, V) logits."""
+    x, new_caches, _ = forward(
+        params, {"tokens": tokens}, cfg, mode="decode", caches=caches, pos=pos,
+        compute_dtype=compute_dtype,
+    )
+    logits = _logits(params, x, cfg)[:, 0]
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# sharding: logical axes from param paths
+# ---------------------------------------------------------------------------
+
+_AXES_BY_NAME = {
+    "table": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "heads"),
+    "wv": ("embed", "heads"),
+    "wo": ("heads", "embed"),
+    "w_gate": ("embed", "mlp"),
+    "w_up": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+    "q_down": ("embed", "heads"),
+    "q_up": ("embed", "heads"),
+    "kv_down": ("embed", "heads"),
+    "kv_up": ("embed", "heads"),
+    "router": ("embed", None),
+    "shared_gate_proj": ("embed", None),
+    "shared_w_gate": ("embed", "mlp"),
+    "shared_w_up": ("embed", "mlp"),
+    "shared_w_down": ("mlp", "embed"),
+    "in_proj": ("embed", "mlp"),
+    "out_proj": ("mlp", "embed"),
+    "conv_w": (None, "mlp"),
+    "tm_maa_w1": ("embed", "mlp"),
+    "tm_maa_w2": (None, None, "embed"),
+    "td_w1": ("embed", None),
+    "td_w2": (None, "embed"),
+    "wr": ("embed", "heads"),
+    "wg": ("embed", "heads"),
+    "cm_wk": ("embed", "mlp"),
+    "cm_wv": ("mlp", "embed"),
+    "cm_wr": ("embed", "heads"),
+}
+
+_MOE_STACKED = {"w_gate", "w_up", "w_down"}  # under "moe": leading expert dim
+
+
+def param_logical_axes(params: dict) -> dict:
+    """Logical axes per leaf from path names; leading stack dims (layers,
+    groups, experts) map to None/"expert"."""
+
+    def leaf_axes(path, leaf) -> Tuple:
+        names = [getattr(p_, "key", getattr(p_, "name", None)) for p_ in path]
+        last = names[-1]
+        scales_only = False
+        if last in ("q8", "s"):  # W8A8-converted leaf: axes come from parent
+            scales_only = last == "s"
+            last = names[-2]
+        base = _AXES_BY_NAME.get(last)
+        in_moe = "moe" in names
+        if base is None:
+            return (None,) * leaf.ndim
+        if in_moe and last in _MOE_STACKED:
+            base = ("expert",) + base
+        if scales_only:
+            base = base[-1:]  # per-out-channel scales follow the out axis
+        # pad leading stack dims (layer scan, hybrid groups) with None
+        extra = leaf.ndim - len(base)
+        return (None,) * extra + base
+
+    return jax.tree_util.tree_map_with_path(leaf_axes, params)
+
+
+def cache_logical_axes(caches: dict, model_axis: int = 16) -> dict:
+    """Logical axes for serving caches.  KV tensors prefer head-sharding over
+    the model axis (no attention collectives); when the arch's kv-head count
+    doesn't divide the axis (gemma2: 4, mixtral: 8), fall back to sequence
+    sharding — GSPMD partitions the softmax reduction with an all-reduce,
+    which is what keeps batch=1 long_500k caches from replicating."""
+
+    def leaf_axes(path, leaf) -> Tuple:
+        names = [getattr(p_, "key", getattr(p_, "name", None)) for p_ in path]
+        last = names[-1]
+        if last in ("k", "v") and leaf.ndim >= 4:
+            n_kv = leaf.shape[-2]
+            if n_kv % model_axis == 0:
+                base = ("batch", None, "kv_heads_act", None)
+            else:
+                base = ("batch", "seq_shard", None, None)
+        elif last in ("ckv", "k_pe"):
+            base = ("batch", "seq_shard", None)
+        elif last == "wkv":
+            base = ("batch", "kv_heads_act", None, None)
+        elif last == "ssd":
+            base = ("batch", "kv_heads_act", None, None)
+        elif last in ("tm_shift", "cm_shift"):
+            base = ("batch", None)
+        elif last == "conv":
+            base = ("batch", None, None)
+        elif last in ("k_scale", "v_scale", "ckv_scale"):
+            base = ("batch",) + (None,) * (leaf.ndim - 1)
+        else:
+            base = (None,) * leaf.ndim
+        extra = leaf.ndim - len(base)
+        return (None,) * extra + tuple(base)
+
+    return jax.tree_util.tree_map_with_path(leaf_axes, caches)

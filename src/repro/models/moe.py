@@ -1,0 +1,153 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity-bounded
+segment-sum dispatch (memory-lean, GSPMD-partitionable — no (T, E, C) dispatch
+tensor is ever materialized).
+
+Covers both assigned MoE archs:
+  * qwen2-moe-a2.7b — 60 routed experts top-4 + gated shared expert
+  * mixtral-8x22b   — 8 routed experts top-2, renormalized top-k probs
+
+Sharding: expert weights (E, d, f) shard d over ``data`` (FSDP) and f over
+``model`` (TP); the expert buffers (E, C, d) shard C over ``data`` and d over
+``model``.  Router stays f32 (accuracy-critical, tiny — a deliberate
+non-quantized island, DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig
+from ..distributed.sharding import shard
+from .layers import param
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    m = cfg.moe
+    assert m is not None
+    ks = jax.random.split(key, 8)
+    d, f = cfg.d_model, m.d_ff_expert
+    p = {
+        "router": param(ks[0], (d, m.n_experts), scale=0.02, dtype=jnp.float32),
+        "w_gate": param(ks[1], (m.n_experts, d, f), dtype=dtype),
+        "w_up": param(ks[2], (m.n_experts, d, f), dtype=dtype),
+        "w_down": param(ks[3], (m.n_experts, f, d), dtype=dtype),
+    }
+    if m.n_shared_experts:
+        fs = m.d_ff_shared
+        p.update(
+            shared_gate_proj=param(ks[4], (d, 1), dtype=jnp.float32),
+            shared_w_gate=param(ks[5], (d, fs), dtype=dtype),
+            shared_w_up=param(ks[6], (d, fs), dtype=dtype),
+            shared_w_down=param(ks[7], (fs, d), dtype=dtype),
+        )
+    return p
+
+
+def _dispatch_shards(t: int) -> int:
+    """Number of shard-local dispatch groups = size of the batch ('pod'×'data')
+    mesh axes when a mesh is active.  Local dispatch keeps the scatter, its
+    indices and the (E, C, d) buffers fully data-parallel — no token shuffling
+    collectives, and per-device capacity is T_local·k/E instead of global
+    (the classic replicated-expert MoE layout; EP-over-model stays available
+    via the expert-weight sharding rules)."""
+    from ..distributed.sharding import active_mesh
+
+    mesh = active_mesh()
+    if mesh is None:
+        return 1
+    nd = 1
+    for ax in ("pod", "data"):
+        nd *= mesh.shape.get(ax, 1)
+    return nd if t % nd == 0 else 1
+
+
+def _expert_einsum(buf: jax.Array, w) -> jax.Array:
+    """(x,e,c,d) × (e,d,f) → (x,e,c,f); W8A8 path when the expert weights are
+    pre-quantized (int8 contraction + per-channel rescale, per the paper)."""
+    if isinstance(w, dict) and "q8" in w:
+        bf = buf.astype(jnp.float32)
+        absmax = jax.lax.stop_gradient(jnp.abs(bf).max())
+        sx = jnp.maximum(absmax / 127.0, 1e-12)
+        bq = jnp.clip(jnp.rint(bf / sx), -128, 127).astype(jnp.int8)
+        acc = jnp.einsum("xecd,edf->xecf", bq, w["q8"], preferred_element_type=jnp.int32)
+        return (acc.astype(jnp.float32) * (sx * w["s"][None, :, None, :])).astype(buf.dtype)
+    return jnp.einsum("xecd,edf->xecf", buf, w.astype(buf.dtype))
+
+
+def moe_ffn(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,d), aux load-balance loss scalar)."""
+    m = cfg.moe
+    renormalize = m.renormalize
+    b, s, d = x.shape
+    t = b * s
+    k = m.top_k
+    e = m.n_experts
+    nd = _dispatch_shards(t)
+    tl = t // nd  # tokens per dispatch group
+    cap = int(max(1, round(tl * k / e * m.capacity_factor)))
+    cap = (cap + 7) // 8 * 8  # tile-friendly local capacity
+
+    xf = x.reshape(nd, tl, d)
+    xf = shard(xf, "batch", None, None)
+    logits = (xf.astype(jnp.float32)) @ p["router"]  # (nd, Tl, E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)  # (nd, Tl, k)
+    if renormalize:
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert, local to the group:
+    # one-hot cumsum over the group's flattened (token, slot) order.
+    flat_e = gate_idx.reshape(nd, tl * k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (nd, Tl*k, E)
+    pos = ((jnp.cumsum(onehot, axis=1) - 1) * onehot).max(axis=-1)  # (nd, Tl*k)
+    in_cap = pos < cap
+    slot = jnp.where(in_cap, flat_e * cap + pos, e * cap)  # dead slot when over
+
+    # dispatch: per-group scatter into (E*C, d) buffers (unique slots ⇒ copy)
+    x_slots = jnp.repeat(xf, k, axis=1)  # (nd, Tl*k, d)
+    seg = jax.vmap(lambda xs, sl: jax.ops.segment_sum(xs, sl, num_segments=e * cap + 1))
+    buf = seg(x_slots, slot)[:, :-1]  # (nd, E*C, d)
+    buf = buf.reshape(nd, e, cap, d)
+    buf = shard(buf, "batch", None, None, None)
+
+    # expert computation — swiglu per expert, big einsums on the MXU
+    g = _expert_einsum(buf, p["w_gate"])
+    u = _expert_einsum(buf, p["w_up"])
+    g = shard(g, "batch", None, None, "mlp_act")
+    h = jax.nn.silu(g) * u
+    out = _expert_einsum(h, p["w_down"])
+    out = shard(out, "batch", None, None, None)
+
+    # combine: gather each slot's expert output, weight, sum over k slots
+    out_flat = out.reshape(nd, e * cap, d)
+    out_flat = shard(out_flat, "batch", None, None)
+    take = jax.vmap(lambda of, sl: jnp.take(of, sl, axis=0))
+    gathered = jnp.where(in_cap[..., None], take(out_flat, jnp.minimum(slot, e * cap - 1)), 0.0)
+    gathered = shard(gathered, "batch", None, None)
+    y = (gathered.reshape(nd, tl, k, d) * gate_w[..., None].astype(gathered.dtype)).sum(axis=2)
+    y = shard(y, "batch", None, None)
+    y = y.reshape(t, d)
+    xf = xf.reshape(t, d)
+
+    # shared expert(s) — qwen2-moe style, sigmoid-gated
+    if "shared_w_gate" in p:
+        from .layers import linear
+
+        sg = jax.nn.silu(linear(xf, p["shared_w_gate"]))
+        su = linear(xf, p["shared_w_up"])
+        sh = linear(sg * su, p["shared_w_down"])
+        gate = jax.nn.sigmoid(xf.astype(jnp.float32) @ p["shared_gate_proj"])
+        y = y + sh * gate.astype(y.dtype)
+
+    # load-balance aux loss (Switch-style): E * Σ_e f_e · P_e
+    frac_tokens = jnp.mean(jax.nn.one_hot(flat_e, e, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs) * m.router_aux_loss
+
+    return y.reshape(b, s, d), aux

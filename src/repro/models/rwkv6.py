@@ -1,0 +1,177 @@
+"""RWKV6 ("Finch") — attention-free recurrent LM block with data-dependent
+decay (arXiv:2404.05892).
+
+Per layer: a time-mix block (WKV6 recurrence) and a channel-mix block.  The
+signature Finch feature — the per-channel, *data-dependent* decay ``w_t`` —
+is implemented with the paper's LoRA parameterization:
+
+    w_t = exp(-exp(time_decay + tanh(x_w @ A_w) @ B_w))
+
+WKV6 recurrence per head (D = head dim), with bonus ``u`` for the current
+token:
+
+    y_t = r_t · (diag(u)·k_t·v_tᵀ + S_t)
+    S_{t+1} = diag(w_t)·S_t + k_t·v_tᵀ
+
+Train/prefill runs a lax.scan over time (state (B, H, D, D) f32); decode is a
+single recurrence step.  State is O(1) in sequence length — this is why
+rwkv6-3b *runs* the long_500k cell (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import linear, param, rmsnorm
+
+_MIX = ("w", "k", "v", "r", "g")
+
+
+def init_rwkv6_layer(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    ssm = cfg.ssm
+    hd = ssm.head_dim
+    nh = d // hd
+    r = ssm.lora_rank
+    ks = jax.random.split(key, 16)
+    p = {
+        # time-mix (WKV6)
+        "tm_maa_x": param(ks[0], (d,), 0.1, dtype),
+        "tm_maa": param(ks[1], (5, d), 0.1, dtype),  # per-target baseline mus
+        "tm_maa_w1": param(ks[2], (d, 5 * r), dtype=dtype),
+        "tm_maa_w2": param(ks[3], (5, r, d), dtype=dtype),
+        "time_decay": param(ks[4], (d,), 0.5, dtype),
+        "td_w1": param(ks[5], (d, r), dtype=dtype),
+        "td_w2": param(ks[6], (r, d), dtype=dtype),
+        "time_faaaa": param(ks[7], (nh, hd), 0.5, dtype),  # bonus u
+        "wr": param(ks[8], (d, d), dtype=dtype),
+        "wk": param(ks[9], (d, d), dtype=dtype),
+        "wv": param(ks[10], (d, d), dtype=dtype),
+        "wg": param(ks[11], (d, d), dtype=dtype),
+        "wo": param(ks[12], (d, d), dtype=dtype),
+        "ln_x": jnp.ones((d,), dtype),  # per-head group norm scale
+        # channel-mix
+        "cm_maa_k": param(ks[13], (d,), 0.1, dtype),
+        "cm_maa_r": param(ks[14], (d,), 0.1, dtype),
+        "cm_wk": param(ks[15], (d, cfg.d_ff), dtype=dtype),
+        "cm_wv": param(jax.random.fold_in(key, 99), (cfg.d_ff, d), dtype=dtype),
+        "cm_wr": param(jax.random.fold_in(key, 98), (d, d), dtype=dtype),
+    }
+    return p
+
+
+def init_rwkv6_state(batch: int, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    nh = d // hd
+    return {
+        "tm_shift": jnp.zeros((batch, d), jnp.bfloat16),
+        "cm_shift": jnp.zeros((batch, d), jnp.bfloat16),
+        "wkv": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+    }
+
+
+def _ddlerp(p: dict, x: jax.Array, xx: jax.Array):
+    """Finch data-dependent token-shift interpolation for the 5 targets."""
+    base = x + (xx - x) * p["tm_maa_x"]
+    lora = jnp.tanh(base @ p["tm_maa_w1"])  # (B,S,5r)
+    lora = lora.reshape(lora.shape[:-1] + (5, -1))  # (B,S,5,r)
+    deltas = jnp.einsum("bsfr,frd->bsfd", lora, p["tm_maa_w2"])  # (B,S,5,d)
+    outs = []
+    for i in range(5):
+        mu = p["tm_maa"][i] + deltas[..., i, :]
+        outs.append(x + (xx - x) * mu)
+    return outs  # order _MIX: w, k, v, r, g
+
+
+def _wkv_scan(r, k, v, w, u, state, *, chunk: int = 128):
+    """Sequential WKV6.  r,k,v: (B,S,H,D); w: (B,S,H,D) decay in (0,1);
+    u: (H,D); state: (B,H,D,D) f32.  Returns y (B,S,H,D), new state.
+
+    Memory: time is chunked and each chunk is rematerialized — the backward
+    pass stores only chunk-boundary states (S/chunk × B·H·D² f32) instead of
+    per-step outer products, which at 4k×batch blew past HBM (EXPERIMENTS.md
+    §Dry-run note)."""
+    b, s, nh, hd = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    seq_first = lambda a: jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+
+    def step(st, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,D) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)  # (B,H,D,D)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, u[None, :, :, None] * kv + st)
+        s_new = w_t[..., None] * st + kv
+        return s_new, y
+
+    @jax.checkpoint
+    def chunk_body(st, inp):
+        return jax.lax.scan(step, st, inp)
+
+    resh = lambda a: seq_first(a).reshape(nc, chunk, b, nh, hd)
+    final, ys = jax.lax.scan(chunk_body, state, (resh(r), resh(k), resh(v), resh(w)))
+    ys = ys.reshape(s, b, nh, hd)
+    return jnp.moveaxis(ys, 0, 1), final  # (B,S,H,D)
+
+
+def rwkv6_time_mix(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    state: dict,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, dict]:
+    b, s, d = x.shape
+    hd = cfg.ssm.head_dim
+    nh = d // hd
+    # token shift: previous token (state carries the last token across calls)
+    prev = jnp.concatenate([state["tm_shift"][:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, prev)
+
+    # data-dependent decay (the Finch contribution)
+    dd = jnp.tanh(xw @ p["td_w1"]) @ p["td_w2"]
+    w = jnp.exp(-jnp.exp((p["time_decay"] + dd).astype(jnp.float32)))  # (B,S,d) in (0,1)
+
+    r = linear(xr, p["wr"]).reshape(b, s, nh, hd)
+    k = linear(xk, p["wk"]).reshape(b, s, nh, hd)
+    v = linear(xv, p["wv"]).reshape(b, s, nh, hd)
+    g = jax.nn.silu(linear(xg, p["wg"]))
+    wh = w.reshape(b, s, nh, hd)
+
+    y, wkv_new = _wkv_scan(r, k, v, wh, p["time_faaaa"].astype(jnp.float32), state["wkv"])
+
+    # per-head group norm then gate
+    y = y.reshape(b, s, nh, hd)
+    mu = y.mean(-1, keepdims=True)
+    var = ((y - mu) ** 2).mean(-1, keepdims=True)
+    y = ((y - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, s, d) * p["ln_x"].astype(jnp.float32)
+    out = linear(y.astype(x.dtype) * g, p["wo"])
+    new_state = {**state, "tm_shift": x[:, -1].astype(jnp.bfloat16), "wkv": wkv_new}
+    return out, new_state
+
+
+def rwkv6_channel_mix(p: dict, x: jax.Array, state: dict) -> Tuple[jax.Array, dict]:
+    prev = jnp.concatenate([state["cm_shift"][:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+    xk = x + (prev - x) * p["cm_maa_k"]
+    xr = x + (prev - x) * p["cm_maa_r"]
+    k = jnp.square(jax.nn.relu(linear(xk, p["cm_wk"])))
+    kv = linear(k, p["cm_wv"])
+    out = jax.nn.sigmoid(linear(xr, p["cm_wr"])) * kv
+    return out, {**state, "cm_shift": x[:, -1].astype(jnp.bfloat16)}
+
+
+def rwkv6_block(
+    p: dict,
+    x: jax.Array,
+    state: dict,
+    cfg: ModelConfig,
+    norms: dict,
+) -> Tuple[jax.Array, dict]:
+    """Pre-norm residual block: time-mix then channel-mix."""
+    h, state = rwkv6_time_mix(p, rmsnorm(x, norms["ln1"], eps=cfg.norm_eps), state, cfg)
+    x = x + h
+    h, state = rwkv6_channel_mix(p, rmsnorm(x, norms["ln2"], eps=cfg.norm_eps), state)
+    return x + h, state

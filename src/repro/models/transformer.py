@@ -1,0 +1,194 @@
+"""Transformer stacks: decoder (GQA/MLA/MoE variants), encoder, enc-dec —
+assembled with lax.scan over stacked layer params (bounded HLO ⇒ tractable
+XLA compiles at 512-way SPMD) and configurable remat.
+
+Per-layer attention flavor variation (gemma2's local/global alternation,
+mixtral's SWA) is data — a per-layer ``window`` array scanned alongside the
+params — so one homogeneous scan body serves every arch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import shard
+from . import attention as attn
+from .layers import init_mlp, mlp, param, rmsnorm
+from .moe import init_moe, moe_ffn
+
+# ---------------------------------------------------------------------------
+# per-layer params
+# ---------------------------------------------------------------------------
+
+
+def init_decoder_layer(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    k_attn, k_mlp = jax.random.split(key)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype) if cfg.norm_plus_one else jnp.ones((cfg.d_model,), dtype),
+         "ln2": jnp.zeros((cfg.d_model,), dtype) if cfg.norm_plus_one else jnp.ones((cfg.d_model,), dtype)}
+    if cfg.post_block_norm:
+        p["ln1_post"] = jnp.zeros((cfg.d_model,), dtype) if cfg.norm_plus_one else jnp.ones((cfg.d_model,), dtype)
+        p["ln2_post"] = jnp.zeros((cfg.d_model,), dtype) if cfg.norm_plus_one else jnp.ones((cfg.d_model,), dtype)
+    if cfg.attn_type == "mla":
+        p["attn"] = attn.init_mla(k_attn, cfg, dtype)
+    else:
+        p["attn"] = attn.init_attention(k_attn, cfg, dtype)
+    if cfg.moe is not None:
+        p["moe"] = init_moe(k_mlp, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k_mlp, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    return p
+
+
+def init_encoder_layer(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    return init_decoder_layer(key, cfg, dtype)
+
+
+def init_cross_layer(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    """Decoder layer + cross-attention sub-block (enc-dec)."""
+    p = init_decoder_layer(key, cfg, dtype)
+    k = jax.random.fold_in(key, 7)
+    p["xattn"] = attn.init_attention(k, cfg, dtype)
+    p["ln_x"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# block bodies
+# ---------------------------------------------------------------------------
+
+
+def _norm(x, scale, cfg):
+    return rmsnorm(x, scale, eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
+
+
+def decoder_block(
+    p: dict,
+    x: jax.Array,
+    pos: jax.Array,
+    cfg: ModelConfig,
+    *,
+    window,  # int32 scalar (0 = full)
+    cache: Optional[dict] = None,
+    mode: str = "train",
+    bidirectional: bool = False,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (hidden, new_cache, aux_loss).  ``cross_kv`` is this layer's
+    precomputed encoder K/V (enc-dec only; cached at prefill for decode)."""
+    x = shard(x, "batch", None, None)
+    h = _norm(x, p["ln1"], cfg)
+    if cfg.attn_type == "mla":
+        a_out, new_cache = attn.mla_attention(
+            p["attn"], h, pos, cfg, cache=cache, mode=mode, q_chunk=q_chunk, kv_chunk=kv_chunk
+        )
+    else:
+        a_out, new_cache = attn.gqa_attention(
+            p["attn"], h, pos, cfg,
+            window=window, cache=cache, mode=mode, bidirectional=bidirectional,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+    if cfg.post_block_norm:
+        a_out = _norm(a_out, p["ln1_post"], cfg)
+    x = x + a_out
+
+    if cross_kv is not None:  # enc-dec cross attention
+        h = _norm(x, p["ln_x"], cfg)
+        x = x + attn.cross_attention(p["xattn"], h, cross_kv, cfg)
+
+    h = _norm(x, p["ln2"], cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        f_out, aux = moe_ffn(p["moe"], h, cfg)
+    else:
+        f_out = mlp(p["mlp"], h, cfg.mlp_type)
+    if cfg.post_block_norm:
+        f_out = _norm(f_out, p["ln2_post"], cfg)
+    return x + f_out, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stacks (scan over layers)
+# ---------------------------------------------------------------------------
+
+
+def layer_windows(cfg: ModelConfig, n_layers: int) -> np.ndarray:
+    """Per-layer attention window sizes (0 = unlimited)."""
+    if cfg.attn_type == "swa":
+        return np.full((n_layers,), cfg.window or 0, np.int32)
+    if cfg.attn_type == "local_global":
+        w = np.zeros((n_layers,), np.int32)
+        w[0::2] = cfg.window or 0  # even layers local (gemma2 convention)
+        return w
+    return np.zeros((n_layers,), np.int32)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    pol = None if policy == "nothing_saveable" else jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint(fn, policy=pol)
+
+
+def run_decoder_stack(
+    stacked: dict,  # params with leading (L, ...) dim
+    x: jax.Array,
+    pos: jax.Array,
+    cfg: ModelConfig,
+    *,
+    windows: jax.Array,  # (L,) int32
+    caches: Optional[dict] = None,  # stacked leading (L, ...)
+    mode: str = "train",
+    bidirectional: bool = False,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # stacked (L, ...)
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """lax.scan over the layer stack."""
+
+    def body(carry, xs):
+        h, aux = carry
+        p_l, w_l, c_l, x_kv = xs
+        h2, c_new, aux_l = decoder_block(
+            p_l, h, pos, cfg,
+            window=w_l, cache=c_l, mode=mode, bidirectional=bidirectional,
+            cross_kv=x_kv, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+        return (h2, aux + aux_l), c_new
+
+    body = _remat(body, cfg.remat_policy if mode == "train" else "none")
+
+    if cfg.scan_layers:
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (stacked, windows, caches, cross_kv)
+        )
+    else:
+        n_layers = windows.shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        new_list = []
+        for i in range(n_layers):
+            sl = lambda a: a[i]
+            p_l = jax.tree.map(sl, stacked)
+            c_l = None if caches is None else jax.tree.map(sl, caches)
+            x_kv = None if cross_kv is None else jax.tree.map(sl, cross_kv)
+            (x, aux), c_new = body((x, aux), (p_l, windows[i], c_l, x_kv))
+            new_list.append(c_new)
+        new_caches = None if caches is None else jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+    return x, new_caches, aux
+
+
+def compute_cross_kv(stacked_xattn: dict, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute per-layer encoder K/V for cross-attention (cached for
+    decode): a small scan over stacked xattn params."""
+
+    def body(_, p_l):
+        return None, attn.encdec_cross_kv(p_l, enc_out, cfg)
+
+    _, kv = jax.lax.scan(body, None, stacked_xattn)
+    return kv  # tuple of (L, B, T, Hkv, Dh)

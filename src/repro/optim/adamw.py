@@ -1,0 +1,63 @@
+"""AdamW with decoupled weight decay — pure-pytree implementation (f32 moments
+sharded like the params ⇒ FSDP over the ``data`` axis shards optimizer state
+exactly as ZeRO does)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+
+
+def init(params) -> dict:
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), t)
+    return {"m": zeros(params), "v": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def update(grads, state: dict, params, lr: jax.Array, cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.grad_clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": treedef.unflatten([o[1] for o in out]),
+        "v": treedef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

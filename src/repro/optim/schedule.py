@@ -1,0 +1,28 @@
+"""LR schedules: linear-warmup + cosine, and WSD (warmup-stable-decay — the
+MiniCPM schedule, arXiv:2404.06395 §4: stable high LR for most of training,
+then a short exponential/linear decay phase; enables continual pretraining
+from the stable phase)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup_steps: int, stable_steps: int, decay_steps: int, final_frac: float = 0.01):
+    """Warmup-Stable-Decay.  decay phase: exponential from peak to final_frac."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    decay_start = warmup_steps + stable_steps
+    t = jnp.clip((step - decay_start) / jnp.maximum(decay_steps, 1), 0.0, 1.0)
+    decay = peak_lr * jnp.power(final_frac, t)
+    return jnp.where(step < warmup_steps, warm, jnp.where(step < decay_start, peak_lr, decay))
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "wsd": wsd}

@@ -1,0 +1,166 @@
+"""Batched serving engine: continuous-batching-lite over prefill/decode steps.
+
+* Fixed decode batch of ``slots``; finished/empty slots are refilled from the
+  request queue each cycle (per-slot KV regions are written independently, so
+  admission is a host-side decision — the jitted decode step never re-compiles).
+* Prefill runs per admitted request (right-padded to a bucket length to bound
+  recompiles), then its KV cache is scattered into the slot's region.
+* ``kv_cache_dtype="int8"`` serves with the paper's symmetric int8 cache.
+
+At fleet scale the same structure runs per model replica with the scheduler
+sharded by a front-end router; the engine here is single-replica but the
+step functions are the pjit-able ones from repro.launch.steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    # filled by the engine:
+    generated: Optional[List[int]] = None
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    slots: int = 4
+    max_len: int = 256
+    prefill_bucket: int = 32  # prompts right-padded to a multiple of this
+    greedy: bool = True
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig, *, compute_dtype=jnp.float32) -> None:
+        self.params = params
+        self.cfg = cfg
+        # cache length must cover the largest prefill bucket
+        ecfg = dataclasses.replace(
+            ecfg, max_len=-(-ecfg.max_len // ecfg.prefill_bucket) * ecfg.prefill_bucket
+        )
+        self.ecfg = ecfg
+        self.compute_dtype = compute_dtype
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}  # slot -> request
+        self.slot_pos = np.zeros((ecfg.slots,), np.int32)
+        self.slot_live = np.zeros((ecfg.slots,), bool)
+        self.slot_budget = np.zeros((ecfg.slots,), np.int32)
+        self.cache = M.init_cache(cfg, ecfg.slots, ecfg.max_len)
+        self._decode = jax.jit(
+            lambda p, t, pos, c: M.decode_step(p, t, pos, c, cfg, compute_dtype=compute_dtype)
+        )
+        self._prefill_cache: Dict[int, Callable] = {}
+        self.metrics = {"decode_steps": 0, "prefills": 0, "completed": 0}
+
+    # -- request lifecycle ----------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.monotonic()
+        req.generated = []
+        self.queue.append(req)
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_cache:
+            cfg, dt = self.cfg, self.compute_dtype
+
+            def fn(params, tokens, cache):
+                return M.prefill(params, {"tokens": tokens}, cfg, cache, compute_dtype=dt, q_chunk=min(plen, 512), kv_chunk=min(plen, 512))
+
+            self._prefill_cache[plen] = jax.jit(fn)
+        return self._prefill_cache[plen]
+
+    def _admit(self) -> None:
+        for slot in range(self.ecfg.slots):
+            if self.slot_live[slot] or not self.queue:
+                continue
+            req = self.queue.popleft()
+            plen = len(req.prompt)
+            bucket = -(-plen // self.ecfg.prefill_bucket) * self.ecfg.prefill_bucket
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :plen] = req.prompt
+            pcache = M.init_cache(self.cfg, 1, self.ecfg.max_len)
+            logits, pcache = self._prefill_fn(bucket)(self.params, jnp.asarray(padded), pcache)
+            # prefill wrote [0, bucket); only [0, plen) is meaningful — the
+            # causal mask means padding beyond plen is never attended by
+            # positions < plen, and decode continues exactly at plen.
+            first_logits, _ = self._logits_at(padded, plen, logits, pcache)
+            self._scatter_cache(slot, pcache)
+            tok = int(jnp.argmax(first_logits)) if self.ecfg.greedy else int(jnp.argmax(first_logits))
+            req.generated.append(tok)
+            req.t_first = time.monotonic()
+            self.active[slot] = req
+            self.slot_pos[slot] = plen
+            self.slot_live[slot] = True
+            self.slot_budget[slot] = req.max_new_tokens - 1
+            self.metrics["prefills"] += 1
+
+    def _logits_at(self, padded, plen, last_logits, pcache):
+        """Logits for the true last prompt token (bucket may extend past it)."""
+        if plen == padded.shape[1]:
+            return last_logits[0], pcache
+        # re-run a single decode on position plen-1's token? simpler: prefill
+        # returns last-position logits; for bucketed prompts recompute from the
+        # cached hidden is avoided by decoding token plen-1 explicitly.
+        tok = jnp.asarray(padded[:, plen - 1 : plen])
+        pos = jnp.full((1,), plen - 1, jnp.int32)
+        logits, _ = self._decode(self.params, tok, pos, pcache)
+        return logits[0], pcache
+
+    def _scatter_cache(self, slot: int, pcache) -> None:
+        def scat(dst, src):
+            if dst.ndim == src.ndim and dst.shape[1:] == src.shape[1:] and src.shape[0] == 1:
+                return dst.at[slot : slot + 1].set(src)
+            # stacked layer dim first: (L, B, ...) — batch is axis 1
+            return dst.at[:, slot : slot + 1].set(src)
+
+        self.cache = jax.tree.map(scat, self.cache, pcache)
+
+    # -- main loop --------------------------------------------------------------
+    def step(self) -> None:
+        """One engine cycle: admit + one batched decode step."""
+        self._admit()
+        if not self.slot_live.any():
+            return
+        toks = np.zeros((self.ecfg.slots, 1), np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0] = req.generated[-1]
+        pos = jnp.asarray(self.slot_pos)
+        logits, self.cache = self._decode(self.params, jnp.asarray(toks), pos, self.cache)
+        self.metrics["decode_steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for slot in list(self.active):
+            if not self.slot_live[slot]:
+                continue
+            req = self.active[slot]
+            req.generated.append(int(nxt[slot]))
+            self.slot_pos[slot] += 1
+            self.slot_budget[slot] -= 1
+            if self.slot_budget[slot] <= 0 or self.slot_pos[slot] >= self.ecfg.max_len - 1:
+                req.done = True
+                req.t_done = time.monotonic()
+                self.metrics["completed"] += 1
+                self.slot_live[slot] = False
+                del self.active[slot]
+
+    def run_until_drained(self, max_cycles: int = 10_000) -> None:
+        for _ in range(max_cycles):
+            if not self.queue and not self.active:
+                return
+            self.step()
+        raise RuntimeError("serve loop did not drain")

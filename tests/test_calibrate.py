@@ -1,0 +1,113 @@
+"""Calibration observers (§3's scale-selection approaches) + runtime op edges."""
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.calibrate import AbsMaxObserver, MSEObserver, PercentileObserver, make_observer
+
+
+class TestObservers:
+    def test_absmax_tracks_max(self):
+        o = AbsMaxObserver()
+        o.observe(np.array([1.0, -3.0]))
+        o.observe(np.array([2.0]))
+        assert o.absmax == 3.0
+        assert np.isclose(o.scale("int8"), 3.0 / 127.0)
+
+    def test_percentile_rejects_outliers(self):
+        rng = np.random.default_rng(0)
+        o = PercentileObserver(percentile=99.0)
+        x = rng.normal(size=20_000).astype(np.float32)
+        x[0] = 1000.0  # single huge outlier
+        o.observe(x)
+        # saturated range ignores the outlier: close to the 99th pct of |N(0,1)|
+        assert o.absmax() < 5.0
+        a = AbsMaxObserver()
+        a.observe(x)
+        assert a.absmax == 1000.0  # absmax would be wrecked
+
+    def test_percentile_rebinning_grows_range(self):
+        o = PercentileObserver(percentile=100.0, bins=64)
+        o.observe(np.ones(10, np.float32))
+        o.observe(np.full(10, 50.0, np.float32))  # forces histogram growth
+        assert o.absmax() >= 50.0
+
+    def test_mse_beats_absmax_on_heavy_tails(self):
+        rng = np.random.default_rng(1)
+        x = rng.standard_t(df=2, size=30_000).astype(np.float32)  # heavy tails
+        mse_o, abs_o = MSEObserver(), AbsMaxObserver()
+        mse_o.observe(x)
+        abs_o.observe(x)
+        def err(scale):
+            q = quant.quantize(x, scale, "int8")
+            return float(np.mean((quant.dequantize(q, scale) - x) ** 2))
+        assert err(mse_o.scale()) <= err(abs_o.scale())
+
+    def test_factory(self):
+        assert isinstance(make_observer("absmax"), AbsMaxObserver)
+        with pytest.raises(ValueError):
+            make_observer("nope")
+
+
+class TestRuntimeOpEdges:
+    def test_matmul_integer_zero_points(self):
+        """MatMulInteger honors optional zero-point inputs (asymmetric mode —
+        we emit symmetric artifacts but the runtime follows the ONNX spec)."""
+        from repro.core import pqir
+        from repro.core.runtime import ReferenceRuntime
+
+        gb = pqir.GraphBuilder("zp")
+        x = gb.add_input("x", "uint8", (None, 4))
+        w = gb.add_initializer("w", np.arange(8, dtype=np.int8).reshape(4, 2))
+        xzp = gb.add_initializer("xzp", np.asarray(128, np.uint8))
+        wzp = gb.add_initializer("wzp", np.asarray(0, np.int8))
+        y = gb.op("MatMulInteger", [x, w, xzp, wzp], out_hint="y")
+        gb.add_output(y, "int32", (None, 2))
+        model = gb.build()
+        xv = np.array([[128, 129, 130, 131]], np.uint8)
+        out = ReferenceRuntime(model).run({"x": xv})[y]
+        expect = (xv.astype(np.int32) - 128) @ np.arange(8, dtype=np.int32).reshape(4, 2)
+        np.testing.assert_array_equal(out, expect)
+
+    def test_conv_integer_groups_strides_dilations(self):
+        from repro.core.runtime import _conv2d_int32
+
+        rng = np.random.default_rng(2)
+        x = rng.integers(-5, 5, (1, 4, 9, 9)).astype(np.int32)
+        w = rng.integers(-3, 3, (4, 2, 3, 3)).astype(np.int32)
+        out = _conv2d_int32(x, w, {"strides": (2, 2), "pads": (1, 1, 1, 1), "dilations": (2, 2), "group": 2})
+        assert out.shape[1] == 4
+        # spot check one output element against a hand loop
+        g, m = 0, 0
+        oh = ow = 1
+        acc = 0
+        xp = np.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+        for c in range(2):
+            for kh in range(3):
+                for kw in range(3):
+                    acc += xp[0, c, oh * 2 + kh * 2, ow * 2 + kw * 2] * w[m, c, kh, kw]
+        assert out[0, m, oh, ow] == acc
+
+    def test_fp16_sections_stay_fp16(self):
+        from repro.core import pqir
+        from repro.core.runtime import ReferenceRuntime
+
+        gb = pqir.GraphBuilder("f16")
+        x = gb.add_input("x", "float32", (None, 4))
+        h = gb.op("Cast", [x], to="float16")
+        t = gb.op("Tanh", [h])
+        gb.add_output(t, "float16", (None, 4))
+        out = ReferenceRuntime(gb.build()).run({"x": np.ones((1, 4), np.float32)})[t]
+        assert out.dtype == np.float16  # paper Fig 5: tanh executes in fp16
+
+    def test_unknown_op_rejected_by_validator_and_runtime(self):
+        from repro.core import pqir
+        from repro.core.runtime import ReferenceRuntime
+
+        gb = pqir.GraphBuilder("bad")
+        x = gb.add_input("x", "float32", (None, 2))
+        y = gb.op("Erf", [x])
+        gb.add_output(y, "float32", (None, 2))
+        model = gb.build()  # Erf IS standard
+        out = ReferenceRuntime(model).run({"x": np.zeros((1, 2), np.float32)})[y]
+        np.testing.assert_allclose(out, 0.0)

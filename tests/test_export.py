@@ -1,0 +1,50 @@
+"""E6 (unit tier): exporter — JAX-side stacks → PQ-IR artifacts + quant report."""
+import numpy as np
+
+from repro.core.compile import compile_model
+from repro.core.export import export_linear_stack, export_quant_report
+from repro.core.runtime import ReferenceRuntime
+from repro.core import quant
+
+
+def test_export_linear_stack_roundtrip():
+    rng = np.random.default_rng(0)
+    ws = [rng.normal(size=(16, 32)).astype(np.float32) * 0.2,
+          rng.normal(size=(32, 8)).astype(np.float32) * 0.2]
+    bs = [rng.normal(size=(32,)).astype(np.float32) * 0.1, None]
+    calib = rng.normal(size=(128, 16)).astype(np.float32)
+    model = export_linear_stack(ws, bs, ["Relu", None], calib, name="exported")
+    model.validate(standard_ops_only=True)
+    xq = quant.quantize(calib[:4], eval(model.metadata["input_scale"]), "int8")
+    ref = ReferenceRuntime(model).run({"input_q": xq})
+    got = compile_model(model).run({"input_q": xq})
+    for k in ref:
+        np.testing.assert_array_equal(got[k], ref[k])
+
+
+def test_export_quant_report_contents():
+    rng = np.random.default_rng(1)
+    ws = [rng.normal(size=(8, 8)).astype(np.float32) * 0.3]
+    model = export_linear_stack(ws, [None], [None], rng.normal(size=(64, 8)).astype(np.float32))
+    rep = export_quant_report(model)
+    assert len(rep["layers"]) == 1
+    layer = rep["layers"][0]
+    assert layer["op"] == "MatMulInteger"
+    assert 1 <= layer["quant_scale"] < 2**24  # integer-as-FLOAT bound
+    assert layer["quant_shift_bits"] >= 0
+
+
+def test_export_tanh_modes():
+    rng = np.random.default_rng(2)
+    ws = [rng.normal(size=(8, 8)).astype(np.float32) * 0.2,
+          rng.normal(size=(8, 4)).astype(np.float32) * 0.2]
+    calib = rng.normal(size=(64, 8)).astype(np.float32)
+    for mode in ("int8", "fp16"):
+        model = export_linear_stack(ws, [None, None], ["Tanh", None], calib, tanh_mode=mode)
+        ops = [n.op_type for n in model.graph.toposorted()]
+        assert ("Cast" in ops[5:9]) == (mode == "fp16")  # Fig 5 adds the f16 casts
+        xq = quant.quantize(calib[:2], eval(model.metadata["input_scale"]), "int8")
+        np.testing.assert_array_equal(
+            ReferenceRuntime(model).run({"input_q": xq})[model.graph.outputs[0].name],
+            compile_model(model).run({"input_q": xq})[model.graph.outputs[0].name],
+        )

@@ -1,0 +1,146 @@
+"""E4: Pallas qmatmul kernel ≡ ref.py oracle ≡ reference runtime, bit-exact,
+over a shape/dtype/feature sweep (interpret mode on CPU)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.kernels import ops, ref
+from repro.kernels.qmatmul import qmatmul
+
+
+def _mk(rng, m, k, n, in_dtype="int8"):
+    lo, hi = (-128, 128) if in_dtype == "int8" else (0, 256)
+    x = rng.integers(lo, hi, (m, k)).astype(in_dtype)
+    w = rng.integers(-128, 128, (k, n)).astype(np.int8)
+    b = rng.integers(-(2**18), 2**18, (n,)).astype(np.int32)
+    r = quant.decompose_multiplier(rng.uniform(1e-4, 0.01))
+    return x, w, b, r
+
+
+SHAPES = [(128, 256, 128), (256, 256, 256), (128, 512, 384), (384, 256, 128)]
+
+
+class TestKernelTilePure:
+    @pytest.mark.parametrize("m,k,n", SHAPES)
+    def test_matches_ref_bitexact(self, m, k, n):
+        rng = np.random.default_rng(m + k + n)
+        x, w, b, r = _mk(rng, m, k, n)
+        qs = jnp.full((1, n), np.float32(r.quant_scale))
+        qsh = jnp.full((1, n), np.float32(r.quant_shift))
+        out = qmatmul(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b).reshape(1, n), qs, qsh, interpret=True)
+        expect = ref.qmatmul_ref(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+            jnp.float32(r.quant_scale), jnp.float32(r.quant_shift),
+        )
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+    def test_relu_and_uint8_out(self):
+        rng = np.random.default_rng(0)
+        x, w, b, r = _mk(rng, 128, 256, 128)
+        qs = jnp.full((1, 128), np.float32(r.quant_scale))
+        qsh = jnp.full((1, 128), np.float32(r.quant_shift))
+        out = qmatmul(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(b).reshape(1, -1), qs, qsh,
+            relu=True, out_dtype=jnp.uint8, interpret=True,
+        )
+        expect = ref.qmatmul_ref(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+            jnp.float32(r.quant_scale), jnp.float32(r.quant_shift),
+            relu=True, out_dtype=jnp.uint8,
+        )
+        assert np.asarray(out).dtype == np.uint8
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+    def test_one_mul_mode(self):
+        rng = np.random.default_rng(1)
+        x, w, b, r = _mk(rng, 128, 256, 128)
+        qs = jnp.full((1, 128), np.float32(r.multiplier))
+        qsh = jnp.ones((1, 128), jnp.float32)
+        out = qmatmul(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(b).reshape(1, -1), qs, qsh,
+            two_mul=False, interpret=True,
+        )
+        expect = ref.qmatmul_ref(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+            jnp.float32(r.multiplier), jnp.float32(1.0), two_mul=False,
+        )
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+class TestOpsWrapper:
+    @pytest.mark.parametrize(
+        "shape_x,k,n",
+        [((7, 33), 33, 17), ((3, 5, 40), 40, 50), ((1, 1), 1, 1), ((130, 260), 260, 129)],
+    )
+    def test_ragged_shapes_padded(self, shape_x, k, n):
+        """Wrapper pads ragged shapes; result equals oracle exactly."""
+        rng = np.random.default_rng(42)
+        x = rng.integers(-128, 128, shape_x).astype(np.int8)
+        w = rng.integers(-128, 128, (k, n)).astype(np.int8)
+        b = rng.integers(-1000, 1000, (n,)).astype(np.int32)
+        r = quant.decompose_multiplier(0.003)
+        got = ops.quantized_matmul(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+            float(r.quant_scale), r.quant_shift, backend="interpret", bm=128, bk=128, bn=128,
+        )
+        expect = ref.qmatmul_ref(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+            jnp.float32(r.quant_scale), jnp.float32(r.quant_shift),
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+    def test_uint8_fold_matches_reference_runtime_semantics(self):
+        """uint8 activations folded to int8 (+128 offset into bias) must equal
+        the artifact's MatMulInteger on uint8 exactly."""
+        rng = np.random.default_rng(7)
+        x = rng.integers(0, 256, (32, 64)).astype(np.uint8)
+        w = rng.integers(-128, 128, (64, 48)).astype(np.int8)
+        b = rng.integers(-500, 500, (48,)).astype(np.int32)
+        r = quant.decompose_multiplier(0.004)
+        for backend in ("ref", "interpret"):
+            got = ops.quantized_matmul(
+                jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                float(r.quant_scale), r.quant_shift, backend=backend, bm=32, bk=64, bn=48,
+            )
+            # semantic reference: true uint8 matmul
+            acc = x.astype(np.int32) @ w.astype(np.int32) + b
+            f = acc.astype(np.float32) * np.float32(r.quant_scale) * np.float32(r.quant_shift)
+            expect = np.clip(np.rint(f), -128, 127).astype(np.int8)
+            np.testing.assert_array_equal(np.asarray(got), expect)
+
+    def test_per_channel_rescale(self):
+        rng = np.random.default_rng(8)
+        x = rng.integers(-128, 128, (16, 32)).astype(np.int8)
+        w = rng.integers(-128, 128, (32, 24)).astype(np.int8)
+        qs = rng.integers(1, 2**20, (24,)).astype(np.float32)
+        qsh = np.full((24,), 2.0**-28, np.float32)
+        got = ops.quantized_matmul(
+            jnp.asarray(x), jnp.asarray(w), None, jnp.asarray(qs), jnp.asarray(qsh),
+            backend="interpret", bm=16, bk=32, bn=24,
+        )
+        acc = x.astype(np.int32) @ w.astype(np.int32)
+        expect = np.clip(np.rint(acc.astype(np.float32) * qs * qsh), -128, 127).astype(np.int8)
+        np.testing.assert_array_equal(np.asarray(got), expect)
+
+
+class TestQuantizedConv:
+    def test_conv_matches_runtime(self):
+        from repro.core import pqir, patterns
+        from repro.core.runtime import ReferenceRuntime
+
+        rng = np.random.default_rng(9)
+        x = rng.integers(-128, 128, (2, 3, 10, 10)).astype(np.int8)
+        w = rng.integers(-128, 128, (8, 3, 3, 3)).astype(np.int8)
+        b = rng.integers(-100, 100, (8,)).astype(np.int32)
+        r = quant.decompose_multiplier(0.002)
+        got = ops.quantized_conv2d(
+            jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+            float(r.quant_scale), r.quant_shift, pads=(1, 1, 1, 1), two_mul=True,
+        )
+        gb = pqir.GraphBuilder("c")
+        xi = gb.add_input("x", "int8", (None, 3, 10, 10))
+        y = patterns.conv_layer(gb, xi, w, b, r, "c0", pads=(1, 1, 1, 1), two_mul=True)
+        gb.add_output(y, "int8", (None, 8, 10, 10))
+        ref_out = ReferenceRuntime(gb.build()).run({"x": x})[y]
+        np.testing.assert_array_equal(np.asarray(got), ref_out)

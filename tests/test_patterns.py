@@ -1,0 +1,244 @@
+"""E2: Figs 1–6 conformance — build each pattern, execute in the reference
+runtime (ONNXRuntime stand-in), check semantics + paper goals 1–4."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import patterns, pqir, quant
+from repro.core.runtime import ReferenceRuntime
+
+
+def _mk_fc(rng, n_in=64, n_out=32, scale_y=0.1):
+    x = rng.normal(size=(8, n_in)).astype(np.float32)
+    w = rng.normal(size=(n_in, n_out)).astype(np.float32) * 0.1
+    b = rng.normal(size=(n_out,)).astype(np.float32) * 0.2
+    scale_x = quant.choose_scale(float(np.abs(x).max()), "int8")
+    p = quant.quantize_linear_layer(w, b, scale_x, scale_y)
+    xq = quant.quantize(x, scale_x, "int8")
+    return x, w, b, p, xq, scale_x
+
+
+class TestFig1FCTwoMul:
+    def test_structure_and_execution(self):
+        rng = np.random.default_rng(0)
+        _, _, _, p, xq, _ = _mk_fc(rng)
+        gb = pqir.GraphBuilder("fig1")
+        x = gb.add_input("input_q", "int8", (None, 64))
+        y = patterns.fc_layer(gb, x, p, "fc0", two_mul=True)
+        gb.add_output(y, "int8", (None, 32))
+        model = gb.build()
+
+        # structure: exactly the Fig.1 op sequence
+        ops = [n.op_type for n in model.graph.toposorted()]
+        assert ops == ["MatMulInteger", "Add", "Cast", "Mul", "Mul", "QuantizeLinear"]
+
+        out = ReferenceRuntime(model).run({"input_q": xq})[y]
+        np.testing.assert_array_equal(out, quant.fc_reference(xq, p, two_mul=True))
+
+    def test_goal1_params_embedded(self):
+        """Paper goal 1: quantization params embedded as initializers —
+        quant_scale is an *integer stored as FLOAT*."""
+        rng = np.random.default_rng(0)
+        _, _, _, p, _, _ = _mk_fc(rng)
+        gb = pqir.GraphBuilder("fig1")
+        x = gb.add_input("input_q", "int8", (None, 64))
+        y = patterns.fc_layer(gb, x, p, "fc0", two_mul=True)
+        gb.add_output(y, "int8", (None, 32))
+        model = gb.build()
+        init = model.graph.initializers
+        qs = init["fc0_quant_scale"]
+        assert qs.dtype == np.float32 and float(qs) == int(float(qs))  # integer as FLOAT
+        assert float(init["fc0_quant_shift"]) == 2.0**-p.rescale.shift
+        assert init["fc0_weight_q"].dtype == np.int8
+        assert init["fc0_bias_q"].dtype == np.int32
+
+    def test_goal3_standard_ops_only(self):
+        rng = np.random.default_rng(0)
+        _, _, _, p, _, _ = _mk_fc(rng)
+        gb = pqir.GraphBuilder("fig1")
+        x = gb.add_input("input_q", "int8", (None, 64))
+        y = patterns.fc_layer(gb, x, p, "fc0")
+        gb.add_output(y, "int8", (None, 32))
+        model = gb.build()
+        model.validate(standard_ops_only=True)  # raises on custom ops
+        # and the validator does reject custom ops:
+        bad = pqir.Node("MyCustomRescale", ["a"], ["b"])
+        model.graph.nodes.append(bad)
+        with pytest.raises(ValueError, match="non-standard"):
+            model.validate()
+
+    def test_serialization_roundtrip(self):
+        rng = np.random.default_rng(0)
+        _, _, _, p, xq, _ = _mk_fc(rng)
+        gb = pqir.GraphBuilder("fig1")
+        x = gb.add_input("input_q", "int8", (None, 64))
+        y = patterns.fc_layer(gb, x, p, "fc0")
+        gb.add_output(y, "int8", (None, 32))
+        model = gb.build()
+        blob = json.dumps(model.to_json())
+        model2 = pqir.Model.from_json(json.loads(blob))
+        out1 = ReferenceRuntime(model).run({"input_q": xq})[y]
+        out2 = ReferenceRuntime(model2).run({"input_q": xq})[y]
+        np.testing.assert_array_equal(out1, out2)
+
+
+class TestFig2FCRelu:
+    def test_structure_and_relu_semantics(self):
+        rng = np.random.default_rng(1)
+        x_f, w, b, p, xq, scale_x = _mk_fc(rng)
+        gb = pqir.GraphBuilder("fig2")
+        x = gb.add_input("input_q", "int8", (None, 64))
+        y = patterns.fc_layer(gb, x, p, "fc0", two_mul=False, activation="Relu")
+        gb.add_output(y, "int8", (None, 32))
+        model = gb.build()
+        ops = [n.op_type for n in model.graph.toposorted()]
+        assert ops == ["MatMulInteger", "Add", "Cast", "Mul", "Relu", "QuantizeLinear"]
+        out = ReferenceRuntime(model).run({"input_q": xq})[y]
+        assert out.min() >= 0
+        # ReLU(rescale(acc)) == rescale(acc) clipped at 0
+        base = quant.fc_reference(xq, p, two_mul=False)
+        np.testing.assert_array_equal(out, np.maximum(base, 0))
+
+
+class TestFig3Conv:
+    def test_conv_pattern(self):
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(2, 3, 12, 12)).astype(np.float32)
+        w = rng.normal(size=(8, 3, 3, 3)).astype(np.float32) * 0.2
+        b = rng.normal(size=(8,)).astype(np.float32) * 0.1
+        scale_x = quant.choose_scale(float(np.abs(x).max()), "int8")
+        scale_w = quant.choose_scale(float(np.abs(w).max()), "int8")
+        wq = quant.quantize(w, scale_w, "int8")
+        xq = quant.quantize(x, scale_x, "int8")
+        bq = quant.quantize_bias(b, scale_w, scale_x)
+        scale_y = 0.05
+        rescale = quant.decompose_multiplier(scale_w * scale_x / scale_y)
+
+        gb = pqir.GraphBuilder("fig3")
+        xi = gb.add_input("input_q", "int8", (None, 3, 12, 12))
+        y = patterns.conv_layer(gb, xi, wq, bq, rescale, "conv0", pads=(1, 1, 1, 1))
+        gb.add_output(y, "int8", (None, 8, 12, 12))
+        model = gb.build()
+        ops = [n.op_type for n in model.graph.toposorted()]
+        assert ops == ["ConvInteger", "Add", "Cast", "Mul", "QuantizeLinear"]
+
+        out = ReferenceRuntime(model).run({"input_q": xq})[y]
+        assert out.shape == (2, 8, 12, 12) and out.dtype == np.int8
+        # compare against float conv within quantization error
+        from repro.core.runtime import _conv2d_f32
+
+        ref = _conv2d_f32(x, w, {"pads": (1, 1, 1, 1)}) + b.reshape(1, -1, 1, 1)
+        y_hat = out.astype(np.float32) * scale_y
+        rel = np.abs(y_hat - ref).max() / np.abs(ref).max()
+        assert rel < 0.06, rel
+
+
+class TestFig456Activations:
+    def _build(self, fn, rng_seed, **kw):
+        rng = np.random.default_rng(rng_seed)
+        x = rng.normal(size=(8, 32)).astype(np.float32)
+        w = rng.normal(size=(32, 16)).astype(np.float32) * 0.3
+        b = rng.normal(size=(16,)).astype(np.float32) * 0.1
+        scale_x = quant.choose_scale(float(np.abs(x).max()), "int8")
+        absmax = kw.get("input_absmax", patterns.TANH_INPUT_ABSMAX)
+        p = quant.quantize_linear_layer(w, b, scale_x, absmax / 127.0)
+        xq = quant.quantize(x, scale_x, "int8")
+        gb = pqir.GraphBuilder("figact")
+        xi = gb.add_input("input_q", "int8", (None, 32))
+        y = fn(gb, xi, p, "fc0", **kw)
+        out_dtype = "uint8" if fn is patterns.fc_fp16_sigmoid else "int8"
+        gb.add_output(y, out_dtype, (None, 16))
+        return gb.build(), xq, x, w, b, y
+
+    def test_fig4_int8_tanh(self):
+        model, xq, x, w, b, yname = self._build(patterns.fc_int8_tanh, 3)
+        ops = [n.op_type for n in model.graph.toposorted()]
+        assert ops == [
+            "MatMulInteger", "Add", "Cast", "Mul", "Mul", "QuantizeLinear",
+            "DequantizeLinear", "Tanh", "QuantizeLinear",
+        ]
+        out = ReferenceRuntime(model).run({"input_q": xq})[yname]
+        assert out.dtype == np.int8
+        ref = np.tanh(x @ w + b)
+        y_hat = out.astype(np.float32) / 127.0
+        assert np.abs(y_hat - ref).max() < 0.06  # int8 tanh approximation
+
+    def test_fig5_fp16_tanh(self):
+        model, xq, x, w, b, yname = self._build(patterns.fc_fp16_tanh, 4)
+        ops = [n.op_type for n in model.graph.toposorted()]
+        assert ops == [
+            "MatMulInteger", "Add", "Cast", "Mul", "Mul", "QuantizeLinear",
+            "DequantizeLinear", "Cast", "Tanh", "Cast", "QuantizeLinear",
+        ]
+        # the fp16 section really is fp16 in the reference runtime
+        out = ReferenceRuntime(model).run({"input_q": xq})[yname]
+        ref = np.tanh(x @ w + b)
+        assert np.abs(out.astype(np.float32) / 127.0 - ref).max() < 0.06
+
+    def test_fig6_fp16_sigmoid_uint8(self):
+        model, xq, x, w, b, yname = self._build(
+            patterns.fc_fp16_sigmoid, 5, input_absmax=patterns.SIGMOID_INPUT_ABSMAX
+        )
+        ops = [n.op_type for n in model.graph.toposorted()]
+        assert ops == [
+            "MatMulInteger", "Add", "Cast", "Mul", "QuantizeLinear",
+            "DequantizeLinear", "Cast", "Sigmoid", "Cast", "QuantizeLinear",
+        ]
+        out = ReferenceRuntime(model).run({"input_q": xq})[yname]
+        assert out.dtype == np.uint8  # paper: sigmoid output is always positive
+        ref = 1.0 / (1.0 + np.exp(-(x @ w + b)))
+        assert np.abs(out.astype(np.float32) / 255.0 - ref).max() < 0.05
+
+
+class TestToolchainEndToEnd:
+    def test_quantize_mlp_artifact(self):
+        from repro.core.toolchain import MLPSpec, quantize_mlp
+
+        rng = np.random.default_rng(7)
+        spec = MLPSpec(
+            weights=[rng.normal(size=(32, 64)).astype(np.float32) * 0.2,
+                     rng.normal(size=(64, 10)).astype(np.float32) * 0.2],
+            biases=[rng.normal(size=(64,)).astype(np.float32) * 0.1,
+                    rng.normal(size=(10,)).astype(np.float32) * 0.1],
+            activations=["Relu", None],
+        )
+        calib = rng.normal(size=(256, 32)).astype(np.float32)
+        model = quantize_mlp(spec, calib)
+        model.validate(standard_ops_only=True)
+
+        x = rng.normal(size=(16, 32)).astype(np.float32)
+        s_in = eval(model.metadata["input_scale"])
+        s_out = eval(model.metadata["output_scale"])
+        xq = quant.quantize(x, s_in, "int8")
+        out = ReferenceRuntime(model).run({"input_q": xq})
+        (yq,) = out.values()
+        ref = np.maximum(x @ spec.weights[0] + spec.biases[0], 0) @ spec.weights[1] + spec.biases[1]
+        y_hat = yq.astype(np.float32) * s_out
+        rel = np.abs(y_hat - ref).max() / np.abs(ref).max()
+        assert rel < 0.1, rel
+
+    def test_quantize_cnn_artifact(self):
+        from repro.core.toolchain import CNNSpec, ConvLayerSpec, MLPSpec, quantize_cnn
+
+        rng = np.random.default_rng(8)
+        spec = CNNSpec(
+            convs=[
+                ConvLayerSpec(rng.normal(size=(4, 1, 3, 3)).astype(np.float32) * 0.3,
+                              rng.normal(size=(4,)).astype(np.float32) * 0.1,
+                              activation="Relu"),
+            ],
+            head=MLPSpec(
+                weights=[rng.normal(size=(4 * 6 * 6, 10)).astype(np.float32) * 0.1],
+                biases=[rng.normal(size=(10,)).astype(np.float32) * 0.1],
+                activations=[None],
+            ),
+        )
+        calib = rng.normal(size=(64, 1, 8, 8)).astype(np.float32)
+        model = quantize_cnn(spec, calib)
+        model.validate(standard_ops_only=True)
+        s_in = eval(model.metadata["input_scale"])
+        xq = quant.quantize(calib[:4], s_in, "int8")
+        out = ReferenceRuntime(model).run({"input_q": xq})
+        (yq,) = out.values()
+        assert yq.shape == (4, 10)

@@ -1,0 +1,166 @@
+"""E3 (property tier): hypothesis tests for the system's invariants —
+quantization math, §3.1 decomposition, artifact conformance (runtime ≡
+compiled, bit-exact), serialization, kernel wrapper vs oracle."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import patterns, pqir, quant
+from repro.core.compile import compile_model
+from repro.core.runtime import ReferenceRuntime
+
+SETTINGS = dict(deadline=None, max_examples=30)
+
+
+class TestQuantInvariants:
+    @settings(**SETTINGS)
+    @given(
+        st.floats(min_value=1e-6, max_value=1e6, allow_nan=False, allow_infinity=False)
+    )
+    def test_decompose_precision_and_exactness(self, m):
+        r = quant.decompose_multiplier(m)
+        assert 1 <= r.quant_scale < 2**24
+        assert np.float32(r.quant_scale) == r.quant_scale  # exact as FLOAT (goal 4)
+        assert abs(r.realized - m) / m < 2.0**-23
+
+    @settings(**SETTINGS)
+    @given(
+        st.lists(st.floats(min_value=-1e4, max_value=1e4, width=32), min_size=1, max_size=256),
+        st.sampled_from(["int8", "uint8"]),
+    )
+    def test_roundtrip_error_bound(self, xs, dtype):
+        x = np.asarray(xs, np.float32)
+        if dtype == "uint8":
+            x = np.abs(x)
+        absmax = float(np.abs(x).max())
+        if absmax == 0.0:
+            return
+        s = quant.choose_scale(absmax, dtype)
+        err = np.abs(quant.dequantize(quant.quantize(x, s, dtype), s) - x)
+        assert float(err.max()) <= s / 2 + 1e-6 * absmax
+
+    @settings(**SETTINGS)
+    @given(st.lists(st.floats(min_value=-100, max_value=100, width=32), min_size=2, max_size=64))
+    def test_quantize_monotone(self, xs):
+        x = np.sort(np.asarray(xs, np.float32))
+        q = quant.quantize(x, 0.5, "int8").astype(np.int32)
+        assert (np.diff(q) >= 0).all()
+
+    @settings(**SETTINGS)
+    @given(st.integers(min_value=-(2**20), max_value=2**20))
+    def test_rescale_reference_matches_float64(self, acc):
+        r = quant.decompose_multiplier(1 / 7)
+        got = quant.apply_rescale_reference(np.asarray([acc], np.int32), r, "int8")[0]
+        expect = np.clip(np.rint(acc * r.quant_scale * 2.0**-r.shift), -128, 127)
+        assert int(got) == int(expect)
+
+
+class TestArtifactConformance:
+    @settings(deadline=None, max_examples=15)
+    @given(
+        n_in=st.integers(min_value=1, max_value=96),
+        n_out=st.integers(min_value=1, max_value=96),
+        batch=st.integers(min_value=1, max_value=8),
+        two_mul=st.booleans(),
+        activation=st.sampled_from([None, "Relu"]),
+        with_bias=st.booleans(),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_fc_compiled_bitexact_vs_runtime(self, n_in, n_out, batch, two_mul, activation, with_bias, seed):
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(n_in, n_out)).astype(np.float32) * 0.2
+        b = rng.normal(size=(n_out,)).astype(np.float32) * 0.1 if with_bias else None
+        p = quant.quantize_linear_layer(w, b, 0.05, 0.1)
+        xq = rng.integers(-128, 128, (batch, n_in)).astype(np.int8)
+        gb = pqir.GraphBuilder("prop")
+        xi = gb.add_input("x", "int8", (None, n_in))
+        y = patterns.fc_layer(gb, xi, p, "fc0", two_mul=two_mul, activation=activation)
+        gb.add_output(y, "int8", (None, n_out))
+        model = gb.build()
+        ref = ReferenceRuntime(model).run({"x": xq})[y]
+        got = compile_model(model).run({"x": xq})[y]
+        np.testing.assert_array_equal(got, ref)
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        act=st.sampled_from(["int8_tanh", "fp16_tanh", "fp16_sigmoid"]),
+    )
+    def test_activation_lut_bitexact(self, seed, act):
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(24, 16)).astype(np.float32) * 0.3
+        p = quant.quantize_linear_layer(w, None, 0.05, patterns.TANH_INPUT_ABSMAX / 127.0)
+        xq = rng.integers(-128, 128, (4, 24)).astype(np.int8)
+        gb = pqir.GraphBuilder("prop")
+        xi = gb.add_input("x", "int8", (None, 24))
+        fn = {"int8_tanh": patterns.fc_int8_tanh, "fp16_tanh": patterns.fc_fp16_tanh, "fp16_sigmoid": patterns.fc_fp16_sigmoid}[act]
+        y = fn(gb, xi, p, "fc0")
+        gb.add_output(y, "uint8" if act == "fp16_sigmoid" else "int8", (None, 16))
+        model = gb.build()
+        ref = ReferenceRuntime(model).run({"x": xq})[y]
+        got = compile_model(model).run({"x": xq})[y]
+        np.testing.assert_array_equal(got, ref)
+
+    @settings(deadline=None, max_examples=10)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_serialization_roundtrip_preserves_semantics(self, seed):
+        import json
+
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(16, 8)).astype(np.float32) * 0.2
+        p = quant.quantize_linear_layer(w, None, 0.05, 0.1)
+        gb = pqir.GraphBuilder("ser")
+        xi = gb.add_input("x", "int8", (None, 16))
+        y = patterns.fc_layer(gb, xi, p, "fc0")
+        gb.add_output(y, "int8", (None, 8))
+        m1 = gb.build()
+        m2 = pqir.Model.from_json(json.loads(json.dumps(m1.to_json())))
+        xq = rng.integers(-128, 128, (3, 16)).astype(np.int8)
+        np.testing.assert_array_equal(
+            ReferenceRuntime(m1).run({"x": xq})[y], ReferenceRuntime(m2).run({"x": xq})[y]
+        )
+
+
+class TestKernelProperties:
+    @settings(deadline=None, max_examples=12)
+    @given(
+        m=st.integers(min_value=1, max_value=40),
+        k=st.integers(min_value=1, max_value=80),
+        n=st.integers(min_value=1, max_value=40),
+        in_dtype=st.sampled_from(["int8", "uint8"]),
+        out_dtype=st.sampled_from(["int8", "uint8"]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_wrapper_padding_exact(self, m, k, n, in_dtype, out_dtype, seed):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        rng = np.random.default_rng(seed)
+        lo, hi = (0, 256) if in_dtype == "uint8" else (-128, 128)
+        x = rng.integers(lo, hi, (m, k)).astype(in_dtype)
+        w = rng.integers(-128, 128, (k, n)).astype(np.int8)
+        r = quant.decompose_multiplier(0.01)
+        got = ops.quantized_matmul(
+            jnp.asarray(x), jnp.asarray(w), None, float(r.quant_scale), r.quant_shift,
+            out_dtype=jnp.int8 if out_dtype == "int8" else jnp.uint8,
+            backend="interpret", bm=16, bk=32, bn=16,
+        )
+        acc = x.astype(np.int32) @ w.astype(np.int32)
+        f = acc.astype(np.float32) * np.float32(r.quant_scale) * np.float32(r.quant_shift)
+        info = np.iinfo(out_dtype)
+        expect = np.clip(np.rint(f), info.min, info.max).astype(out_dtype)
+        np.testing.assert_array_equal(np.asarray(got), expect)
+
+    @settings(deadline=None, max_examples=10)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_lut_covers_all_codes(self, seed):
+        """LUT path equals the op-chain for every one of the 256 codes."""
+        from repro.kernels.qact_lut import build_lut
+
+        rng = np.random.default_rng(seed)
+        in_s = float(rng.uniform(0.01, 0.1))
+        out_s = float(rng.uniform(0.005, 0.02))
+        lut = build_lut(np.tanh, in_s, out_s, "int8")
+        codes = np.arange(-128, 128, dtype=np.int32)
+        expect = np.clip(np.rint(np.tanh(codes * in_s) / out_s), -128, 127).astype(np.int8)
+        np.testing.assert_array_equal(lut, expect)

@@ -1,0 +1,137 @@
+"""E1: §3/§3.1 quantization math, incl. the paper's exact numeric anchors."""
+import numpy as np
+import pytest
+
+from repro.core import quant
+
+
+class TestDecomposeMultiplier:
+    def test_paper_anchor_one_third(self):
+        """Paper §3.1: M = 1/3 → Quant_scale 11184810, shift 2^-25 (floor)."""
+        r = quant.decompose_multiplier(1.0 / 3.0)
+        assert (r.quant_scale, r.shift) == (11184810, 25)
+        assert r.quant_shift == 2.0**-25
+
+    def test_paper_anchor_quarter_reduced(self):
+        """Paper §3.1: M = 0.25 → Quant_scale 1, shift 2^-2 (reduced form)."""
+        r = quant.decompose_multiplier(0.25, reduce=True)
+        assert (r.quant_scale, r.shift) == (1, 2)
+        assert r.realized == 0.25
+
+    def test_paper_anchor_max_exact_float_int(self):
+        """Paper §3.1: largest exactly-represented integer in FLOAT is 2^24."""
+        assert quant.MAX_EXACT_FLOAT_INT == 16_777_216
+        # Every decomposition keeps quant_scale < 2^24 ⇒ exact as FLOAT.
+        for m in [1e-6, 0.1, 1 / 3, 0.999, 1.0, 1.5, 17.3, 12345.678]:
+            r = quant.decompose_multiplier(m)
+            assert 1 <= r.quant_scale < 2**24
+            assert np.float32(r.quant_scale) == r.quant_scale  # exact in f32
+
+    def test_unreduced_quarter_same_value(self):
+        r = quant.decompose_multiplier(0.25)
+        assert r.realized == 0.25  # unreduced (8388608, 25) is the same value
+
+    def test_precision_bound(self):
+        """Realized multiplier is within one ULP of quant_scale (2^-shift)."""
+        rng = np.random.default_rng(0)
+        for m in rng.uniform(1e-5, 100.0, size=200):
+            r = quant.decompose_multiplier(float(m))
+            assert abs(r.realized - m) <= 2.0 ** (-r.shift) + 1e-12
+            assert abs(r.realized - m) / m < 2.0**-23  # <1 part in 2^23
+
+    def test_reduce_is_lossless(self):
+        for m in [0.25, 1 / 3, 0.75, 0.5, 2.0, 0.0625]:
+            a = quant.decompose_multiplier(m, reduce=False)
+            b = quant.decompose_multiplier(m, reduce=True)
+            assert a.realized == b.realized
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            quant.decompose_multiplier(0.0)
+        with pytest.raises(ValueError):
+            quant.decompose_multiplier(-1.0)
+
+
+class TestQuantizeRoundtrip:
+    def test_symmetric_eq1(self):
+        """Eq (1): X = scale_X * X_q."""
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(64, 32)).astype(np.float32)
+        s = quant.choose_scale(float(np.abs(x).max()), "int8")
+        xq = quant.quantize(x, s, "int8")
+        assert xq.dtype == np.int8
+        err = np.abs(quant.dequantize(xq, s) - x)
+        assert float(err.max()) <= s / 2 + 1e-7  # half-step rounding bound
+
+    def test_round_half_even(self):
+        x = np.array([0.5, 1.5, 2.5, -0.5, -1.5], dtype=np.float32)
+        np.testing.assert_array_equal(quant.round_half_even(x), [0.0, 2.0, 2.0, -0.0, -2.0])
+
+    def test_saturation(self):
+        x = np.array([-1000.0, 1000.0], dtype=np.float32)
+        q = quant.quantize(x, 1.0, "int8")
+        np.testing.assert_array_equal(q, [-128, 127])
+        q = quant.quantize(x, 1.0, "uint8")
+        np.testing.assert_array_equal(q, [0, 255])
+
+    def test_uint8_scale_maps_full_range(self):
+        s = quant.choose_scale(10.2, "uint8")
+        assert np.isclose(s * 255.0, 10.2)
+
+
+class TestFCReference:
+    def test_eq2_through_eq6_roundtrip(self):
+        """Quantized FC ≈ float FC within rescale quantization error."""
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(16, 64)).astype(np.float32)
+        w = rng.normal(size=(64, 32)).astype(np.float32) * 0.1
+        b = rng.normal(size=(32,)).astype(np.float32) * 0.5
+        y = x @ w + b
+        scale_x = quant.choose_scale(float(np.abs(x).max()), "int8")
+        scale_y = quant.choose_scale(float(np.abs(y).max()), "int8")
+        p = quant.quantize_linear_layer(w, b, scale_x, scale_y)
+        xq = quant.quantize(x, scale_x, "int8")
+        yq = quant.fc_reference(xq, p)
+        y_hat = quant.dequantize(yq, scale_y)
+        # int8-in/int8-out matmul: expect small relative error on y's scale
+        rel = np.abs(y_hat - y).max() / np.abs(y).max()
+        assert rel < 0.05, rel
+
+    def test_two_mul_vs_one_mul_close(self):
+        """The 2-Mul integer codification matches the 1-Mul float multiplier
+        within 1 quantization step (they're different roundings of M)."""
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(8, 32)).astype(np.float32)
+        w = rng.normal(size=(32, 16)).astype(np.float32) * 0.2
+        scale_x = quant.choose_scale(float(np.abs(x).max()), "int8")
+        p = quant.quantize_linear_layer(w, None, scale_x, 0.05)
+        xq = quant.quantize(x, scale_x, "int8")
+        y2 = quant.fc_reference(xq, p, two_mul=True).astype(np.int32)
+        y1 = quant.fc_reference(xq, p, two_mul=False).astype(np.int32)
+        assert np.abs(y2 - y1).max() <= 1
+
+    def test_bias_scale_is_sw_times_sx(self):
+        """Eq (6): B_q = B / (scale_W·scale_X)."""
+        b = np.array([1.0, -2.0, 0.5], dtype=np.float32)
+        bq = quant.quantize_bias(b, 0.1, 0.2)
+        np.testing.assert_array_equal(bq, np.rint(b / 0.02).astype(np.int32))
+
+    def test_per_channel_weights(self):
+        rng = np.random.default_rng(4)
+        w = rng.normal(size=(32, 16)).astype(np.float32)
+        w[:, 3] *= 100.0  # one hot channel would wreck per-tensor scaling
+        p = quant.quantize_linear_layer(w, None, 0.1, 0.5, per_channel=True)
+        assert p.per_channel and p.scale_w.shape == (16,)
+        w_hat = p.weight_q.astype(np.float32) * p.scale_w
+        assert np.abs(w_hat - w).max() <= float(p.scale_w.max()) / 2 + 1e-6
+
+
+class TestRescaleReference:
+    def test_exact_shift_semantics(self):
+        """Integer mul + right shift == multiply by qs*2^-N, exactly, for
+        values small enough that f32 is exact."""
+        acc = np.arange(-1000, 1000, dtype=np.int32)
+        r = quant.decompose_multiplier(1 / 3)
+        out = quant.apply_rescale_reference(acc, r, "int8")
+        expect = np.clip(np.rint(acc.astype(np.float64) * r.quant_scale * 2.0**-r.shift), -128, 127)
+        np.testing.assert_array_equal(out.astype(np.int64), expect.astype(np.int64))

@@ -1,0 +1,79 @@
+"""SWA ring-buffer KV cache: decode past the window must equal a full-length
+cache with the same sliding-window mask (the §Perf long_500k optimization)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+
+
+def test_ring_equals_full_cache_beyond_window():
+    cfg = get_config("mixtral_8x22b", reduced=True)  # swa, reduced window=64
+    cfg = dataclasses.replace(cfg, window=8)  # tiny window so we wrap quickly
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B, S = 2, 6  # prefill shorter than the window
+    toks = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+
+    # ring cache (init_cache caps at window=8) vs full cache (force swa off
+    # for sizing, keep the window mask via cfg.window during attention)
+    ring_cache = M.init_cache(cfg, B, 32)
+    assert ring_cache["layers"]["k"].shape[2] == 8  # capped
+    full_cfg = dataclasses.replace(cfg, attn_type="full")
+    full_cache = M.init_cache(full_cfg, B, 32)
+    assert full_cache["layers"]["k"].shape[2] == 32
+
+    swa_masked = cfg  # swa masking, ring storage
+    swa_full_store = dataclasses.replace(cfg, window=cfg.window)  # mask only
+
+    lr, ring_cache = M.prefill(params, {"tokens": jnp.asarray(toks)}, swa_masked, ring_cache, compute_dtype=jnp.float32, q_chunk=8, kv_chunk=8)
+    # full-store variant: same swa mask but uncapped cache
+    class _cfgfull:  # full storage with swa masking: hack via window-masked full cache
+        pass
+
+    lf, full_cache = M.prefill(params, {"tokens": jnp.asarray(toks)}, cfg, full_cache, compute_dtype=jnp.float32, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lf), rtol=1e-5, atol=1e-5)
+
+    # decode 12 tokens — wraps the 8-slot ring
+    cur_r, cur_f = ring_cache, full_cache
+    tok = jnp.argmax(lr, -1)[:, None].astype(jnp.int32)
+    tok_f = tok
+    for step in range(12):
+        pos = jnp.full((B,), S + step, jnp.int32)
+        lr1, cur_r = M.decode_step(params, tok, pos, cur_r, cfg, compute_dtype=jnp.float32)
+        lf1, cur_f = M.decode_step(params, tok_f, pos, cur_f, cfg, compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lr1), np.asarray(lf1), rtol=2e-4, atol=2e-4)
+        tok = jnp.argmax(lr1, -1)[:, None].astype(jnp.int32)
+        tok_f = jnp.argmax(lf1, -1)[:, None].astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(tok), np.asarray(tok_f))
+
+
+def test_prefill_longer_than_window_then_decode():
+    """Prompt (24) > window (8): ring keeps the tail; decode logits match a
+    full-cache run with the same SWA mask."""
+    cfg = get_config("mixtral_8x22b", reduced=True)
+    cfg = dataclasses.replace(cfg, window=8)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(3)
+    B, S = 2, 24
+    toks = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+
+    ring = M.init_cache(cfg, B, S + 8)          # capped at 8
+    assert ring["layers"]["k"].shape[2] == 8
+    full_cfg = dataclasses.replace(cfg, attn_type="full")
+    full = M.init_cache(full_cfg, B, S + 8)     # uncapped storage, swa mask at use
+
+    lr, ring = M.prefill(params, {"tokens": jnp.asarray(toks)}, cfg, ring, compute_dtype=jnp.float32, q_chunk=8, kv_chunk=8)
+    lf, full = M.prefill(params, {"tokens": jnp.asarray(toks)}, cfg, full, compute_dtype=jnp.float32, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lf), rtol=1e-5, atol=1e-5)
+
+    tok = jnp.argmax(lr, -1)[:, None].astype(jnp.int32)
+    for step in range(6):
+        pos = jnp.full((B,), S + step, jnp.int32)
+        lr1, ring = M.decode_step(params, tok, pos, ring, cfg, compute_dtype=jnp.float32)
+        lf1, full = M.decode_step(params, tok, pos, full, cfg, compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lr1), np.asarray(lf1), rtol=2e-4, atol=2e-4)
+        tok = jnp.argmax(lr1, -1)[:, None].astype(jnp.int32)
