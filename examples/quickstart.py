@@ -60,8 +60,12 @@ def main():
     (yq_ref,) = ref_out.values()
 
     # -- 4. compile for TPU (fused int8 kernels) and compare ------------------
-    cm = compile_model(model, backend="interpret")  # Pallas kernels, CPU-interpreted
+    # The compiler first runs the repro.passes pipeline (with its reference-
+    # runtime conformance hook on), then pattern-fuses the optimized graph.
+    cm = compile_model(model, backend="interpret", verify_passes=True)
+    print(f"optimization pipeline: {cm.pass_report.summary()}")
     print(f"compiler fusion report: {cm.stats}")
+    assert cm.pass_report.total("eliminated") >= 1, "canonicalization eliminated nothing"
     (yq_tpu,) = cm.run({"input_q": xq}).values()
     assert np.array_equal(yq_ref, yq_tpu), "conformance violation!"
     print("reference runtime ≡ compiled backend: BIT-EXACT ✓")

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# One-step verification on a clean checkout:
+#   1. tier-1 test suite (ROADMAP.md "Tier-1 verify" command)
+#   2. fast end-to-end smoke: quantize → optimize → compile → bit-exact check
+#
+# Usage: scripts/check.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q "$@"
+
+echo "== smoke: examples/quickstart.py =="
+python examples/quickstart.py
+
+echo "== all checks passed =="

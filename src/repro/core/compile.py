@@ -1,27 +1,39 @@
 """The hardware-specific compilation stage: PQ-IR → fused JAX/Pallas executable.
 
-This is the *other side* of the paper's co-design contract.  The quantizer
-emitted a standard-ops-only artifact; this compiler recognizes the paper's
-patterns and lowers them onto TPU-native fused kernels:
+This is the *other side* of the paper's co-design contract, structured as a
+two-stage flow:
 
-  {MatMulInteger → Add → Cast → Mul (→ Mul) → [Relu] → QuantizeLinear(1,0)}
-      ⇒ one fused int8 MXU kernel (repro.kernels.qmatmul)
-  {ConvInteger → Add → Cast → Mul (→ Mul) → [Relu] → QuantizeLinear(1,0)}
-      ⇒ XLA int8 conv + fused epilogue (repro.kernels.ops.quantized_conv2d)
-  {DequantizeLinear → [Cast f16] → Tanh|Sigmoid → [Cast f32] → QuantizeLinear}
-      on an int8 tensor
-      ⇒ exact 256-entry VMEM LUT (repro.kernels.qact_lut), built with
-        reference-runtime semantics (incl. the fp16 casts) ⇒ bit-exact.
+1. **Optimize** — the artifact first runs through the
+   :mod:`repro.passes` pipeline (constant folding, identity/dead-node
+   elimination, Reshape/Transpose sinking, §3.1 two-Mul rescale folding,
+   Quantize/Dequantize round-trip cancellation).  Every pass is
+   semantics-preserving — bit-exact on integer paths — and the caller's
+   artifact is never mutated (the pipeline clones it).
 
-Anything unmatched falls back to a generic jnp op mirror, so *every* valid
-artifact compiles.  Conformance: integer paths are bit-exact vs
-:mod:`repro.core.runtime`; float fallbacks are allclose.
+2. **Fuse + lower** — fusion candidates are *declarative pattern specs*
+   (:class:`repro.passes.rewrite.Pattern`): an op chain with
+   dtype/arity/constness preconditions and capture names, matched along
+   single-consumer edges by the shared pattern-rewrite engine.  The specs in
+   this module describe the paper's kernels:
+
+     QLINEAR_PATTERN: {MatMulInteger|ConvInteger → [Add] → Cast(f32) →
+                       Mul [→ Mul] → [Relu] → QuantizeLinear(1,0)}
+         ⇒ one fused int8 MXU kernel (repro.kernels.qmatmul), or XLA int8
+           conv + fused epilogue (repro.kernels.ops.quantized_conv2d)
+     LUT_PATTERN:     {DequantizeLinear(int8) → [Cast f16] → Tanh|Sigmoid →
+                       [Cast f32] → QuantizeLinear}
+         ⇒ exact 256-entry VMEM LUT (repro.kernels.qact_lut), built with
+           reference-runtime semantics (incl. the fp16 casts) ⇒ bit-exact.
+
+Adding a fusion means adding a Pattern + a builder — there is no hand-written
+chain-walking left here.  Anything unmatched falls back to a generic jnp op
+mirror, so *every* valid artifact compiles.  Conformance: integer paths are
+bit-exact vs :mod:`repro.core.runtime`; float fallbacks are allclose.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,36 +41,10 @@ import numpy as np
 
 from ..kernels import ops as kops
 from ..kernels.qact_lut import build_lut
-from .pqir import DTYPES, Graph, Model, Node
-
-# ---------------------------------------------------------------------------
-# light dtype inference (enough to validate fusion preconditions)
-# ---------------------------------------------------------------------------
-
-
-def infer_dtypes(graph: Graph) -> Dict[str, str]:
-    dt: Dict[str, str] = {t.name: t.dtype for t in graph.inputs}
-    for name, arr in graph.initializers.items():
-        dt[name] = str(arr.dtype)
-    for node in graph.toposorted():
-        o = node.outputs[0]
-        t = node.op_type
-        if t in ("MatMulInteger", "ConvInteger"):
-            dt[o] = "int32"
-        elif t == "QuantizeLinear":
-            dt[o] = dt.get(node.inputs[2], "int8") if len(node.inputs) > 2 else "int8"
-        elif t == "DequantizeLinear":
-            dt[o] = "float32"
-        elif t == "Cast":
-            dt[o] = node.attrs["to"]
-        elif t in ("Shape",):
-            dt[o] = "int64"
-        else:
-            dt[o] = dt.get(node.inputs[0], "float32")
-        for extra in node.outputs[1:]:
-            dt[extra] = dt[o]
-    return dt
-
+from ..passes import PassManager, PipelineReport
+from ..passes.analysis import GraphAnalysis
+from ..passes.rewrite import Match, OpSpec, Pattern, match_chain, ql_params
+from .pqir import DTYPES, Model, Node
 
 # ---------------------------------------------------------------------------
 # generic jnp op mirror (fallback path)
@@ -186,7 +172,7 @@ def _j_avgpool(node, ins):
 
 
 # ---------------------------------------------------------------------------
-# fusion
+# fusion: declarative pattern specs + kernel builders
 # ---------------------------------------------------------------------------
 
 
@@ -201,168 +187,164 @@ class Step:
 _NP_ACT = {"Tanh": np.tanh, "Sigmoid": lambda x: (1.0 / (1.0 + np.exp(-x.astype(np.float32)))).astype(x.dtype)}
 
 
+def _is_round_clip_ql(ga: GraphAnalysis, node: Node) -> bool:
+    """QuantizeLinear(scale=1, zp=0) — the paper's pure rounding+clipping
+    stage whose zp dtype selects the output dtype."""
+    scale, zp = ql_params(ga, node)
+    return (
+        scale is not None and zp is not None
+        and scale.size == 1 and np.asarray(zp).size == 1
+        and float(scale) == 1.0 and int(np.asarray(zp)) == 0
+    )
+
+
+def _is_sym_scalar_q(ga: GraphAnalysis, node: Node) -> bool:
+    """Scalar-scale, zero-zero-point (symmetric) quantize/dequantize."""
+    scale, zp = ql_params(ga, node)
+    return (
+        scale is not None and zp is not None
+        and scale.size == 1 and np.asarray(zp).size == 1
+        and int(np.asarray(zp)) == 0
+    )
+
+
+def _dql_int8_sym(ga: GraphAnalysis, node: Node) -> bool:
+    return ga.dtype(node.inputs[0]) == "int8" and _is_sym_scalar_q(ga, node)
+
+
+QLINEAR_PATTERN = Pattern(
+    "qlinear",
+    (
+        OpSpec(("MatMulInteger", "ConvInteger"), capture="core", arity=2, const_inputs={1: "weight"}),
+        OpSpec("Add", capture="bias", optional=True, const_operand="bias_c"),
+        OpSpec("Cast", attrs={"to": "float32"}),
+        OpSpec("Mul", capture="mul1", const_operand="mul1_c"),
+        OpSpec("Mul", capture="mul2", optional=True, const_operand="mul2_c"),
+        OpSpec("Relu", capture="relu", optional=True),
+        OpSpec("QuantizeLinear", capture="ql", where=_is_round_clip_ql),
+    ),
+)
+
+LUT_PATTERN = Pattern(
+    "qact_lut",
+    (
+        OpSpec("DequantizeLinear", capture="dql", where=_dql_int8_sym),
+        OpSpec("Cast", capture="to16", optional=True, attrs={"to": "float16"}),
+        OpSpec(("Tanh", "Sigmoid"), capture="act"),
+        OpSpec("Cast", capture="to32", optional=True, attrs={"to": "float32"}),
+        OpSpec("QuantizeLinear", capture="ql", where=_is_sym_scalar_q),
+    ),
+    # the fp16 down-cast and up-cast appear together or not at all
+    where=lambda m: (m.node("to16") is None) == (m.node("to32") is None),
+)
+
+
+def _build_qlinear(compiler: "Compiler", m: Match) -> Step:
+    """Lower a QLINEAR_PATTERN match onto the fused int8 matmul / conv."""
+    core = m.anchor
+    is_conv = core.op_type == "ConvInteger"
+    zp = compiler.analysis.const(m.node("ql").inputs[2]) if len(m.node("ql").inputs) > 2 else np.zeros((), np.int8)
+    out_dtype = DTYPES[str(np.asarray(zp).dtype)]
+    relu = m.node("relu") is not None
+
+    muls = [np.asarray(m.consts["mul1_c"], np.float32)]
+    if "mul2" in m:
+        muls.append(np.asarray(m.consts["mul2_c"], np.float32))
+    two_mul = len(muls) == 2
+    qs = jnp.asarray(muls[0])
+    qsh = jnp.asarray(muls[1]) if two_mul else jnp.asarray(np.float32(1.0))
+    wj = jnp.asarray(m.consts["weight"])
+    bias = m.consts.get("bias_c")
+    bj = None if bias is None else jnp.asarray(np.asarray(bias).reshape(-1).astype(np.int32))
+    backend = compiler.backend
+
+    if is_conv:
+        attrs = core.attrs
+
+        def fn(x, _w=wj, _b=bj, _qs=qs, _qsh=qsh):
+            return [
+                kops.quantized_conv2d(
+                    x, _w, _b, _qs, _qsh,
+                    strides=tuple(attrs.get("strides", (1, 1))),
+                    pads=tuple(attrs.get("pads", (0, 0, 0, 0))),
+                    out_dtype=out_dtype, relu=relu, two_mul=two_mul,
+                )
+            ]
+
+        kind = "fused_qconv"
+    else:
+
+        def fn(x, _w=wj, _b=bj, _qs=qs, _qsh=qsh):
+            return [
+                kops.quantized_matmul(
+                    x, _w, _b, _qs, _qsh,
+                    out_dtype=out_dtype, relu=relu, two_mul=two_mul, backend=backend,
+                )
+            ]
+
+        kind = "fused_qlinear"
+    return Step(fn, [core.inputs[0]], [m.out_tensor], kind)
+
+
+def _build_lut(compiler: "Compiler", m: Match) -> Step:
+    """Lower a LUT_PATTERN match onto the exact 256-entry VMEM LUT."""
+    ga = compiler.analysis
+    in_scale, _ = ql_params(ga, m.node("dql"))
+    out_scale, out_zp = ql_params(ga, m.node("ql"))
+    compute_dtype = "float16" if m.node("to16") is not None else "float32"
+    out_dtype = str(np.asarray(out_zp).dtype)
+    act = m.node("act").op_type
+
+    lut = build_lut(_NP_ACT[act], float(in_scale), float(out_scale), out_dtype, compute_dtype)
+    lut_j = jnp.asarray(lut)
+    backend = compiler.backend
+
+    def fn(x, _lut=lut_j):
+        return [kops.quantized_activation(x, _lut, backend=backend)]
+
+    return Step(fn, [m.node("dql").inputs[0]], [m.out_tensor], "fused_lut")
+
+
+#: The compiler's fusion table: (declarative pattern, kernel builder).
+#: New fusions plug in here — describe the chain as data, lower in a builder.
+FUSIONS = (
+    (QLINEAR_PATTERN, _build_qlinear),
+    (LUT_PATTERN, _build_lut),
+)
+
+
 class Compiler:
-    def __init__(self, model: Model, *, backend: str = "ref", fuse: bool = True) -> None:
+    def __init__(
+        self,
+        model: Model,
+        *,
+        backend: str = "ref",
+        fuse: bool = True,
+        optimize: bool = True,
+        verify_passes: bool = False,
+    ) -> None:
         model.validate()
+        if optimize:
+            model, self.pass_report = PassManager(verify=verify_passes).run(model)
+        else:
+            self.pass_report = PipelineReport(
+                nodes_before=len(model.graph.nodes), nodes_after=len(model.graph.nodes)
+            )
         self.model = model
         self.graph = model.graph
         self.backend = backend
         self.fuse = fuse
         self.inits = {k: v for k, v in self.graph.initializers.items()}
-        self.dtypes = infer_dtypes(self.graph)
-        self.consumers = self.graph.consumers()
-        self.out_names = {t.name for t in self.graph.outputs}
+        self.analysis = GraphAnalysis(self.graph)
         self.steps: List[Step] = []
-        self.stats = {"fused_qlinear": 0, "fused_qconv": 0, "fused_lut": 0, "generic": 0}
-
-    # -- helpers ------------------------------------------------------------
-    def _single_consumer(self, tensor: str) -> Optional[Node]:
-        if tensor in self.out_names:
-            return None
-        cons = self.consumers.get(tensor, [])
-        return cons[0] if len(cons) == 1 else None
-
-    def _init_val(self, name: str) -> Optional[np.ndarray]:
-        return self.inits.get(name)
-
-    # -- chain matchers -------------------------------------------------------
-    def _match_qlinear(self, node: Node):
-        """Match MatMulInteger/ConvInteger → [Add] → Cast → Mul [→ Mul] →
-        [Relu] → QuantizeLinear(scale=1, zp=0).  Returns (step, consumed)."""
-        is_conv = node.op_type == "ConvInteger"
-        x_name, w_name = node.inputs[0], node.inputs[1]
-        w = self._init_val(w_name)
-        if w is None or len(node.inputs) > 2:
-            return None
-        cur = node.outputs[0]
-        chain = [node]
-        nxt = self._single_consumer(cur)
-        bias = None
-        if nxt is not None and nxt.op_type == "Add":
-            other = nxt.inputs[1] if nxt.inputs[0] == cur else nxt.inputs[0]
-            b = self._init_val(other)
-            if b is not None:
-                bias = b
-                chain.append(nxt)
-                cur = nxt.outputs[0]
-                nxt = self._single_consumer(cur)
-        if nxt is None or nxt.op_type != "Cast" or nxt.attrs.get("to") != "float32":
-            return None
-        chain.append(nxt)
-        cur = nxt.outputs[0]
-        nxt = self._single_consumer(cur)
-        muls = []
-        while nxt is not None and nxt.op_type == "Mul" and len(muls) < 2:
-            other = nxt.inputs[1] if nxt.inputs[0] == cur else nxt.inputs[0]
-            mv = self._init_val(other)
-            if mv is None:
-                break
-            muls.append(np.asarray(mv, np.float32))
-            chain.append(nxt)
-            cur = nxt.outputs[0]
-            nxt = self._single_consumer(cur)
-        if not muls:
-            return None
-        relu = False
-        if nxt is not None and nxt.op_type == "Relu":
-            relu = True
-            chain.append(nxt)
-            cur = nxt.outputs[0]
-            nxt = self._single_consumer(cur)
-        if nxt is None or nxt.op_type != "QuantizeLinear":
-            return None
-        scale = self._init_val(nxt.inputs[1])
-        zp = self._init_val(nxt.inputs[2]) if len(nxt.inputs) > 2 else np.zeros((), np.int8)
-        if scale is None or zp is None or float(scale) != 1.0 or int(np.asarray(zp)) != 0:
-            return None
-        chain.append(nxt)
-        out_name = nxt.outputs[0]
-        out_dtype = DTYPES[str(np.asarray(zp).dtype)]
-
-        two_mul = len(muls) == 2
-        qs = jnp.asarray(muls[0])
-        qsh = jnp.asarray(muls[1]) if two_mul else jnp.asarray(np.float32(1.0))
-        wj = jnp.asarray(w)
-        bj = None if bias is None else jnp.asarray(np.asarray(bias).reshape(-1).astype(np.int32))
-        backend = self.backend
-        if is_conv:
-            attrs = node.attrs
-
-            def fn(x, _w=wj, _b=bj, _qs=qs, _qsh=qsh):
-                return [
-                    kops.quantized_conv2d(
-                        x, _w, _b, _qs, _qsh,
-                        strides=tuple(attrs.get("strides", (1, 1))),
-                        pads=tuple(attrs.get("pads", (0, 0, 0, 0))),
-                        out_dtype=out_dtype, relu=relu, two_mul=two_mul,
-                    )
-                ]
-
-            kind = "fused_qconv"
-        else:
-
-            def fn(x, _w=wj, _b=bj, _qs=qs, _qsh=qsh):
-                return [
-                    kops.quantized_matmul(
-                        x, _w, _b, _qs, _qsh,
-                        out_dtype=out_dtype, relu=relu, two_mul=two_mul, backend=backend,
-                    )
-                ]
-
-            kind = "fused_qlinear"
-        return Step(fn, [x_name], [out_name], kind), chain
-
-    def _match_lut(self, node: Node):
-        """Match DequantizeLinear(int8) → [Cast f16] → Tanh|Sigmoid →
-        [Cast f32] → QuantizeLinear."""
-        if node.op_type != "DequantizeLinear":
-            return None
-        x_name = node.inputs[0]
-        if self.dtypes.get(x_name) != "int8":
-            return None
-        in_scale = self._init_val(node.inputs[1])
-        in_zp = self._init_val(node.inputs[2]) if len(node.inputs) > 2 else np.zeros((), np.int8)
-        if in_scale is None or int(np.asarray(in_zp)) != 0:
-            return None
-        chain = [node]
-        cur = node.outputs[0]
-        nxt = self._single_consumer(cur)
-        compute_dtype = "float32"
-        if nxt is not None and nxt.op_type == "Cast" and nxt.attrs.get("to") == "float16":
-            compute_dtype = "float16"
-            chain.append(nxt)
-            cur = nxt.outputs[0]
-            nxt = self._single_consumer(cur)
-        if nxt is None or nxt.op_type not in _NP_ACT:
-            return None
-        act = nxt.op_type
-        chain.append(nxt)
-        cur = nxt.outputs[0]
-        nxt = self._single_consumer(cur)
-        if compute_dtype == "float16":
-            if nxt is None or nxt.op_type != "Cast" or nxt.attrs.get("to") != "float32":
-                return None
-            chain.append(nxt)
-            cur = nxt.outputs[0]
-            nxt = self._single_consumer(cur)
-        if nxt is None or nxt.op_type != "QuantizeLinear":
-            return None
-        out_scale = self._init_val(nxt.inputs[1])
-        out_zp = self._init_val(nxt.inputs[2]) if len(nxt.inputs) > 2 else np.zeros((), np.int8)
-        if out_scale is None or int(np.asarray(out_zp)) != 0:
-            return None
-        chain.append(nxt)
-        out_name = nxt.outputs[0]
-        out_dtype = str(np.asarray(out_zp).dtype)
-
-        lut = build_lut(_NP_ACT[act], float(in_scale), float(out_scale), out_dtype, compute_dtype)
-        lut_j = jnp.asarray(lut)
-        backend = self.backend
-
-        def fn(x, _lut=lut_j):
-            return [kops.quantized_activation(x, _lut, backend=backend)]
-
-        return Step(fn, [x_name], [out_name], "fused_lut"), chain
+        self.stats = {
+            "fused_qlinear": 0,
+            "fused_qconv": 0,
+            "fused_lut": 0,
+            "generic": 0,
+            "folded": self.pass_report.total("folded"),
+            "eliminated": self.pass_report.total("eliminated"),
+        }
 
     # -- main ---------------------------------------------------------------
     def compile(self) -> "CompiledModel":
@@ -371,22 +353,26 @@ class Compiler:
         for node in order:
             if id(node) in consumed:
                 continue
-            if self.fuse:
-                m = None
-                if node.op_type in ("MatMulInteger", "ConvInteger"):
-                    m = self._match_qlinear(node)
-                elif node.op_type == "DequantizeLinear":
-                    m = self._match_lut(node)
-                if m is not None:
-                    step, chain = m
-                    for n in chain:
-                        consumed.add(id(n))
-                    self.steps.append(step)
-                    self.stats[step.kind] += 1
-                    continue
-            self.steps.append(self._generic_step(node))
-            self.stats["generic"] += 1
-        return CompiledModel(self.model, self.steps, self.stats)
+            step = self._fused_step(node, consumed) if self.fuse else None
+            if step is None:
+                step = self._generic_step(node)
+            self.steps.append(step)
+            self.stats[step.kind] += 1
+        return CompiledModel(self.model, self.steps, self.stats, self.pass_report)
+
+    def _fused_step(self, node: Node, consumed: set) -> Optional[Step]:
+        for pattern, builder in FUSIONS:
+            if node.op_type not in pattern.anchor_ops:
+                continue
+            m = match_chain(self.analysis, node, pattern)
+            if m is None:
+                continue
+            step = builder(self, m)
+            if step is None:
+                continue
+            consumed.update(id(n) for n in m.nodes)
+            return step
+        return None
 
     def _generic_step(self, node: Node) -> Step:
         fn_impl = _JOPS.get(node.op_type)
@@ -420,10 +406,17 @@ class Compiler:
 class CompiledModel:
     """A compiled artifact: jitted end-to-end executable + fusion report."""
 
-    def __init__(self, model: Model, steps: List[Step], stats: Dict[str, int]) -> None:
+    def __init__(
+        self,
+        model: Model,
+        steps: List[Step],
+        stats: Dict[str, int],
+        pass_report: Optional[PipelineReport] = None,
+    ) -> None:
         self.model = model
         self.steps = steps
         self.stats = stats
+        self.pass_report = pass_report if pass_report is not None else PipelineReport()
         self.input_names = [t.name for t in model.graph.inputs]
         self.output_names = [t.name for t in model.graph.outputs]
         self._jitted = jax.jit(self._execute)
@@ -447,10 +440,25 @@ class CompiledModel:
         return self._jitted.lower(feeds)
 
 
-def compile_model(model: Model, *, backend: str = "ref", fuse: bool = True) -> CompiledModel:
+def compile_model(
+    model: Model,
+    *,
+    backend: str = "ref",
+    fuse: bool = True,
+    optimize: bool = True,
+    verify_passes: bool = False,
+) -> CompiledModel:
     """Compile a PQ-IR artifact for the TPU backend.
 
-    backend: "pallas" (real TPU lowering), "interpret" (Pallas interpreter —
-    CPU-validatable), "ref" (pure-jnp fused ops; what the dry-run lowers).
+    backend:       "pallas" (real TPU lowering), "interpret" (Pallas
+                   interpreter — CPU-validatable), "ref" (pure-jnp fused ops;
+                   what the dry-run lowers).
+    optimize:      run the :mod:`repro.passes` pipeline first (the caller's
+                   artifact is cloned, never mutated).
+    verify_passes: turn on the pipeline's reference-runtime conformance hook
+                   (asserts each pass is semantics-preserving on probe
+                   inputs before the backend ever sees the graph).
     """
-    return Compiler(model, backend=backend, fuse=fuse).compile()
+    return Compiler(
+        model, backend=backend, fuse=fuse, optimize=optimize, verify_passes=verify_passes
+    ).compile()

@@ -175,24 +175,46 @@ class Graph:
 
     # -- validation ---------------------------------------------------------
     def validate(self, *, standard_ops_only: bool = True) -> None:
-        """Structural validation + paper-goal-3 check (standard ops only)."""
-        produced = {t.name for t in self.inputs} | set(self.initializers)
+        """Structural validation + paper-goal-3 check (standard ops only).
+
+        Rejects: non-standard ops, duplicate graph input/output names, graph
+        inputs shadowing initializers, any tensor produced twice, node inputs
+        that are neither graph inputs, initializers, nor produced by any node
+        (checked order-independently — the node list need not be topologically
+        sorted), and cyclic graphs."""
+        seen_inputs = set()
+        for t in self.inputs:
+            if t.name in seen_inputs:
+                raise ValueError(f"duplicate graph input {t.name!r}")
+            if t.name in self.initializers:
+                raise ValueError(f"graph input {t.name!r} shadows an initializer")
+            seen_inputs.add(t.name)
+        produced = set(seen_inputs) | set(self.initializers)
         for node in self.nodes:
             if standard_ops_only and node.op_type not in STANDARD_OPS:
                 raise ValueError(
                     f"non-standard operator {node.op_type!r} in node {node.name!r} "
                     "(paper goal 3 forbids custom operators)"
                 )
-            for i in node.inputs:
-                if i and i not in produced:
-                    raise ValueError(f"node {node.name!r} consumes undefined tensor {i!r}")
             for o in node.outputs:
                 if o in produced:
                     raise ValueError(f"tensor {o!r} produced twice")
                 produced.add(o)
+        for node in self.nodes:
+            for i in node.inputs:
+                if i and i not in produced:
+                    raise ValueError(
+                        f"node {node.name!r} consumes undefined tensor {i!r} "
+                        "(not a graph input, initializer, or any node's output)"
+                    )
+        seen_outputs = set()
         for t in self.outputs:
+            if t.name in seen_outputs:
+                raise ValueError(f"duplicate graph output {t.name!r}")
+            seen_outputs.add(t.name)
             if t.name not in produced:
                 raise ValueError(f"graph output {t.name!r} never produced")
+        self.toposorted()  # raises on cycles
 
     def toposorted(self) -> List[Node]:
         """Nodes in executable order (stable Kahn topo-sort)."""

@@ -1,0 +1,313 @@
+"""Graph-wide analyses for PQ-IR: dtype/shape inference and def-use maps.
+
+This is the single home for the facts every optimization pass and the backend
+compiler need about a :class:`repro.core.pqir.Graph`:
+
+* :func:`infer_dtypes` — forward dtype propagation over the standard-op
+  vocabulary (replaces the private ``infer_dtypes`` that used to live in
+  ``repro.core.compile``).
+* :func:`infer_shapes` — best-effort static shape propagation.  Unknown
+  dimensions are ``None``; a wholly unknown shape is ``None``.  Passes must
+  treat ``None`` as "don't know" and stay conservative.
+* :class:`GraphAnalysis` — a cached bundle of dtypes, shapes, producer and
+  consumer maps plus the constant/initializer view, rebuilt from scratch by
+  each pass iteration so it can never go stale against a mutated graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.pqir import Graph, Model, Node
+
+Shape = Optional[Tuple[Optional[int], ...]]
+
+_UNARY_PASSTHROUGH = frozenset(
+    {"Relu", "Tanh", "Sigmoid", "Erf", "Sqrt", "Softmax", "Clip", "Identity"}
+)
+_BINARY_PROMOTE = frozenset({"Mul", "Add", "Sub", "Div", "Pow"})
+
+
+# ---------------------------------------------------------------------------
+# dtype inference
+# ---------------------------------------------------------------------------
+
+
+def infer_dtypes(graph: Graph) -> Dict[str, str]:
+    """Forward dtype propagation; returns tensor-name → dtype-name."""
+    dt: Dict[str, str] = {t.name: t.dtype for t in graph.inputs}
+    for name, arr in graph.initializers.items():
+        dt[name] = str(arr.dtype)
+    for node in graph.toposorted():
+        o = node.outputs[0]
+        t = node.op_type
+        if t in ("MatMulInteger", "ConvInteger"):
+            dt[o] = "int32"
+        elif t == "QuantizeLinear":
+            dt[o] = dt.get(node.inputs[2], "int8") if len(node.inputs) > 2 else "int8"
+        elif t == "DequantizeLinear":
+            dt[o] = "float32"
+        elif t == "Cast":
+            dt[o] = node.attrs["to"]
+        elif t == "Shape":
+            dt[o] = "int64"
+        elif t in _BINARY_PROMOTE and len(node.inputs) >= 2:
+            a, b = dt.get(node.inputs[0]), dt.get(node.inputs[1])
+            if a is not None and b is not None:
+                dt[o] = str(np.promote_types(a, b))
+            else:
+                dt[o] = a or b or "float32"
+        else:
+            dt[o] = dt.get(node.inputs[0], "float32") if node.inputs else "float32"
+        for extra in node.outputs[1:]:
+            dt[extra] = dt[o]
+    return dt
+
+
+# ---------------------------------------------------------------------------
+# shape inference (best-effort; None = unknown)
+# ---------------------------------------------------------------------------
+
+
+def _broadcast(a: Shape, b: Shape) -> Shape:
+    if a is None or b is None:
+        return None
+    n = max(len(a), len(b))
+    out: List[Optional[int]] = []
+    for i in range(n):
+        da = a[len(a) - n + i] if i >= n - len(a) else 1
+        db = b[len(b) - n + i] if i >= n - len(b) else 1
+        if da is None and db is None:
+            out.append(None)
+        elif da is None:
+            out.append(db if db != 1 else None)
+        elif db is None:
+            out.append(da if da != 1 else None)
+        elif da == 1:
+            out.append(db)
+        elif db == 1:
+            out.append(da)
+        elif da == db:
+            out.append(da)
+        else:
+            return None  # incompatible — treat as unknown
+    return tuple(out)
+
+
+def _prod(dims) -> Optional[int]:
+    p = 1
+    for d in dims:
+        if d is None:
+            return None
+        p *= int(d)
+    return p
+
+
+def _conv_hw(d: Optional[int], k: int, pad0: int, pad1: int, stride: int, dil: int) -> Optional[int]:
+    if d is None:
+        return None
+    return (d + pad0 + pad1 - (dil * (k - 1) + 1)) // stride + 1
+
+
+def _node_shape(node: Node, sh, const) -> Shape:  # noqa: C901 (dispatch table)
+    t = node.op_type
+    s0: Shape = sh(node.inputs[0]) if node.inputs else None
+    if t in _UNARY_PASSTHROUGH or t in ("Cast", "QuantizeLinear", "DequantizeLinear"):
+        return s0
+    if t in ("Mul", "Add", "Sub", "Div", "Pow"):
+        return _broadcast(s0, sh(node.inputs[1]))
+    if t in ("MatMul", "MatMulInteger"):
+        s1 = sh(node.inputs[1])
+        if s0 is None or s1 is None or len(s1) != 2 or len(s0) < 1:
+            return None
+        return tuple(s0[:-1]) + (s1[1],)
+    if t == "Gemm":
+        s1 = sh(node.inputs[1])
+        if s0 is None or s1 is None or len(s0) != 2 or len(s1) != 2:
+            return None
+        m = s0[1] if node.attrs.get("transA", 0) else s0[0]
+        n = s1[0] if node.attrs.get("transB", 0) else s1[1]
+        return (m, n)
+    if t in ("Conv", "ConvInteger"):
+        s1 = sh(node.inputs[1])
+        if s0 is None or s1 is None or len(s0) != 4 or len(s1) != 4:
+            return None
+        strides = tuple(node.attrs.get("strides", (1, 1)))
+        pads = tuple(node.attrs.get("pads", (0, 0, 0, 0)))
+        dil = tuple(node.attrs.get("dilations", (1, 1)))
+        kh, kw = s1[2], s1[3]
+        return (
+            s0[0],
+            s1[0],
+            _conv_hw(s0[2], int(kh), pads[0], pads[2], strides[0], dil[0]),
+            _conv_hw(s0[3], int(kw), pads[1], pads[3], strides[1], dil[1]),
+        )
+    if t == "Reshape":
+        target = const(node.inputs[1]) if len(node.inputs) > 1 else None
+        if target is None:
+            return None
+        dims = [int(d) for d in np.asarray(target).reshape(-1)]
+        if -1 not in dims:
+            return tuple(dims)
+        total = _prod(s0) if s0 is not None else None
+        if total is None:
+            return tuple(None if d == -1 else d for d in dims)
+        rest = _prod([d for d in dims if d != -1])
+        return tuple(total // rest if d == -1 else d for d in dims)
+    if t == "Transpose":
+        if s0 is None:
+            return None
+        perm = node.attrs.get("perm") or list(range(len(s0)))[::-1]
+        return tuple(s0[int(p)] for p in perm)
+    if t == "Flatten":
+        if s0 is None:
+            return None
+        axis = int(node.attrs.get("axis", 1))
+        return (_prod(s0[:axis]) if axis else 1, _prod(s0[axis:]))
+    if t == "Concat":
+        shapes = [sh(i) for i in node.inputs]
+        if any(s is None for s in shapes):
+            return None
+        axis = int(node.attrs["axis"])
+        dims = list(shapes[0])
+        cat = 0
+        for s in shapes:
+            if s[axis] is None:
+                cat = None
+                break
+            cat += s[axis]
+        dims[axis] = cat
+        return tuple(dims)
+    if t == "Gather":
+        s1 = sh(node.inputs[1])
+        if s0 is None or s1 is None:
+            return None
+        axis = int(node.attrs.get("axis", 0))
+        return tuple(s0[:axis]) + tuple(s1) + tuple(s0[axis + 1 :])
+    if t in ("Squeeze", "Unsqueeze"):
+        axes = const(node.inputs[1]) if len(node.inputs) > 1 else None
+        if s0 is None or axes is None:
+            return None
+        ax = [int(a) for a in np.asarray(axes).reshape(-1)]
+        if t == "Squeeze":
+            return tuple(d for i, d in enumerate(s0) if i not in ax and i - len(s0) not in ax)
+        dims = list(s0)
+        for a in sorted(ax):
+            dims.insert(a if a >= 0 else a + len(dims) + 1, 1)
+        return tuple(dims)
+    if t in ("MaxPool", "AveragePool"):
+        if s0 is None or len(s0) != 4:
+            return None
+        kh, kw = node.attrs["kernel_shape"]
+        strides = tuple(node.attrs.get("strides", (kh, kw)))
+        pads = tuple(node.attrs.get("pads", (0, 0, 0, 0)))
+        return (
+            s0[0],
+            s0[1],
+            _conv_hw(s0[2], int(kh), pads[0], pads[2], strides[0], 1),
+            _conv_hw(s0[3], int(kw), pads[1], pads[3], strides[1], 1),
+        )
+    if t == "GlobalAveragePool":
+        return None if s0 is None else (s0[0], s0[1], 1, 1)
+    if t == "ReduceMean":
+        if s0 is None:
+            return None
+        axes = node.attrs.get("axes")
+        ax = [int(a) % len(s0) for a in axes] if axes else list(range(len(s0)))
+        keep = bool(node.attrs.get("keepdims", 1))
+        if keep:
+            return tuple(1 if i in ax else d for i, d in enumerate(s0))
+        return tuple(d for i, d in enumerate(s0) if i not in ax)
+    return None
+
+
+def infer_shapes(graph: Graph) -> Dict[str, Shape]:
+    """Best-effort static shapes; tensors missing from the map are unknown."""
+    shapes: Dict[str, Shape] = {t.name: tuple(t.shape) for t in graph.inputs}
+    for name, arr in graph.initializers.items():
+        shapes[name] = tuple(arr.shape)
+
+    def sh(name: str) -> Shape:
+        return shapes.get(name)
+
+    def const(name: str):
+        return graph.initializers.get(name)
+
+    for node in graph.toposorted():
+        try:
+            s = _node_shape(node, sh, const)
+        except Exception:
+            s = None
+        for o in node.outputs:
+            shapes[o] = s
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# cached bundle
+# ---------------------------------------------------------------------------
+
+
+class GraphAnalysis:
+    """Immutable-use snapshot of everything a pass needs to reason about a
+    graph.  Rebuild (cheap) after any mutation — never reuse across edits."""
+
+    def __init__(self, graph: Graph) -> None:
+        self.graph = graph
+        self.dtypes = infer_dtypes(graph)
+        self.shapes = infer_shapes(graph)
+        self.consumers = graph.consumers()
+        self.producers = graph.producers()
+        self.out_names = {t.name for t in graph.outputs}
+        self.in_names = {t.name for t in graph.inputs}
+
+    # -- constants ----------------------------------------------------------
+    def is_const(self, name: str) -> bool:
+        return name in self.graph.initializers
+
+    def const(self, name: str) -> Optional[np.ndarray]:
+        return self.graph.initializers.get(name)
+
+    # -- structure ----------------------------------------------------------
+    def dtype(self, name: str) -> Optional[str]:
+        return self.dtypes.get(name)
+
+    def shape(self, name: str) -> Shape:
+        return self.shapes.get(name)
+
+    def single_consumer(self, tensor: str) -> Optional[Node]:
+        """The unique consuming node, or None if the tensor is a graph output
+        or has zero/multiple consumers (mirrors the fusion precondition)."""
+        if tensor in self.out_names:
+            return None
+        cons = self.consumers.get(tensor, [])
+        return cons[0] if len(cons) == 1 else None
+
+
+# ---------------------------------------------------------------------------
+# graph cloning (passes operate on a copy; the caller's artifact is untouched)
+# ---------------------------------------------------------------------------
+
+
+def clone_graph(graph: Graph) -> Graph:
+    """Structural copy.  Initializer arrays are shared (passes replace dict
+    entries, they never mutate arrays in place)."""
+    return Graph(
+        name=graph.name,
+        inputs=[dataclasses.replace(t) for t in graph.inputs],
+        outputs=[dataclasses.replace(t) for t in graph.outputs],
+        nodes=[Node(n.op_type, list(n.inputs), list(n.outputs), dict(n.attrs), n.name) for n in graph.nodes],
+        initializers=dict(graph.initializers),
+    )
+
+
+def clone_model(model: Model) -> Model:
+    return Model(
+        graph=clone_graph(model.graph),
+        opset=model.opset,
+        ir_version=model.ir_version,
+        producer=model.producer,
+        metadata=dict(model.metadata),
+    )

@@ -1,0 +1,393 @@
+"""E4: the repro.passes optimization pipeline.
+
+Per-pass golden tests (graph in → graph out), the declarative rewrite engine,
+pipeline idempotence, the reference-runtime conformance hook, and end-to-end
+bit-exactness of optimized-then-compiled MLP/CNN artifacts.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import passes
+from repro.core import patterns, pqir, quant
+from repro.core.compile import compile_model
+from repro.core.runtime import ReferenceRuntime
+from repro.core.toolchain import CNNSpec, ConvLayerSpec, MLPSpec, quantize_cnn, quantize_mlp
+from repro.passes.canonicalize import ConstantFold, DeadCode, IdentityElim, MulFold, QdqCancel
+from repro.passes.sink import SinkShapes
+
+
+def _ops(graph):
+    return [n.op_type for n in graph.toposorted()]
+
+
+def _run_one(pass_obj, model):
+    opt = passes.clone_model(model)
+    counters = pass_obj.run(opt.graph)
+    return opt, counters
+
+
+def _mlp_model(rng=None, activations=("Relu", "Relu", None)):
+    rng = rng or np.random.default_rng(0)
+    n = len(activations)
+    dims = [64] + [32] * (n - 1) + [10]
+    spec = MLPSpec(
+        weights=[rng.normal(size=(dims[i], dims[i + 1])).astype(np.float32) * 0.2 for i in range(n)],
+        biases=[rng.normal(size=(dims[i + 1],)).astype(np.float32) * 0.1 for i in range(n)],
+        activations=list(activations),
+    )
+    calib = rng.normal(size=(128, 64)).astype(np.float32)
+    model = quantize_mlp(spec, calib)
+    xq = quant.quantize(
+        rng.normal(size=(8, 64)).astype(np.float32), eval(model.metadata["input_scale"]), "int8"
+    )
+    return model, xq
+
+
+class TestConstantFold:
+    def test_folds_all_initializer_subgraph(self):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (None, 4))
+        a = gb.add_initializer("a", np.ones((4,), np.float32))
+        b = gb.add_initializer("b", np.full((4,), 2.0, np.float32))
+        s = gb.op("Add", [a, b], out_hint="s")  # const + const → foldable
+        y = gb.op("Mul", [x, s], out_hint="y")
+        gb.add_output(y, "float32", (None, 4))
+        model = gb.build()
+        opt, counters = _run_one(ConstantFold(), model)
+        assert counters["folded"] == 1
+        assert _ops(opt.graph) == ["Mul"]
+        assert np.array_equal(opt.graph.initializers[s], np.full((4,), 3.0, np.float32))
+
+    def test_never_folds_graph_outputs(self):
+        gb = pqir.GraphBuilder("g")
+        gb.add_input("x", "float32", (2,))
+        a = gb.add_initializer("a", np.ones((2,), np.float32))
+        y = gb.op("Add", [a, a], out_hint="y")
+        gb.add_output(y, "float32", (2,))
+        model = gb.build()
+        _, counters = _run_one(ConstantFold(), model)
+        assert counters["folded"] == 0
+
+
+class TestQdqCancel:
+    def _model(self, scale_out=0.5, zp_dtype="int8"):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "int8", (None, 8))
+        r = gb.op("Relu", [x], out_hint="r")
+        s1 = gb.add_initializer("s1", np.float32(0.5))
+        z1 = gb.add_initializer("z1", np.zeros((), "int8"))
+        d = gb.op("DequantizeLinear", [r, s1, z1], out_hint="d")
+        s2 = gb.add_initializer("s2", np.float32(scale_out))
+        z2 = gb.add_initializer("z2", np.zeros((), zp_dtype))
+        q = gb.op("QuantizeLinear", [d, s2, z2], out_hint="q")
+        gb.add_output(q, zp_dtype, (None, 8))
+        return gb.build(), q
+
+    def test_cancels_matching_roundtrip(self):
+        model, q = self._model()
+        opt, counters = _run_one(QdqCancel(), model)
+        assert counters["eliminated"] == 2
+        assert _ops(opt.graph) == ["Relu"]
+        # the public output name survives the rewrite
+        assert opt.graph.nodes[0].outputs == [q]
+        x = np.random.default_rng(0).integers(-128, 128, (4, 8)).astype(np.int8)
+        np.testing.assert_array_equal(
+            ReferenceRuntime(model).run({"x": x})[q], ReferenceRuntime(opt).run({"x": x})[q]
+        )
+
+    def test_keeps_mismatched_scale(self):
+        model, _ = self._model(scale_out=0.25)
+        _, counters = _run_one(QdqCancel(), model)
+        assert counters["eliminated"] == 0
+
+    def test_keeps_mismatched_dtype(self):
+        model, _ = self._model(zp_dtype="uint8")  # int8 in, uint8 out: lossy
+        _, counters = _run_one(QdqCancel(), model)
+        assert counters["eliminated"] == 0
+
+    def test_keeps_wide_integer_dtype(self):
+        """int32 round-trips are NOT cancelled: above 2**24 the f32 products
+        lose bits, so the chain is not the identity."""
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "int32", (4,))
+        r = gb.op("Relu", [x], out_hint="r")
+        s = gb.add_initializer("s", np.float32(0.3))
+        z = gb.add_initializer("z", np.zeros((), "int32"))
+        d = gb.op("DequantizeLinear", [r, s, z], out_hint="d")
+        q = gb.op("QuantizeLinear", [d, s, z], out_hint="q")
+        gb.add_output(q, "int32", (4,))
+        model = gb.build()
+        opt, counters = _run_one(QdqCancel(), model)
+        assert counters["eliminated"] == 0
+        xv = np.asarray([2**24 + 1, 2**30, 5, 2**24 + 3], np.int32)
+        # the chain itself is lossy here — cancelling it would change outputs
+        assert not np.array_equal(ReferenceRuntime(model).run({"x": xv})[q], xv)
+
+
+class TestMulFold:
+    def _rescale_chain(self, c1, c2):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (None, 8))
+        a = gb.add_initializer("qs", np.asarray(c1, np.float32))
+        b = gb.add_initializer("sh", np.asarray(c2, np.float32))
+        m1 = gb.op("Mul", [x, a], out_hint="m1")
+        m2 = gb.op("Mul", [m1, b], out_hint="m2")
+        gb.add_output(m2, "float32", (None, 8))
+        return gb.build(), m2
+
+    def test_folds_pow2_pair_bitexact(self):
+        model, y = self._rescale_chain(361.0, 2.0**-13)
+        opt, counters = _run_one(MulFold(), model)
+        assert counters == {"folded": 1, "eliminated": 1}
+        assert _ops(opt.graph) == ["Mul"]
+        x = np.random.default_rng(1).normal(size=(64, 8)).astype(np.float32) * 1e4
+        np.testing.assert_array_equal(
+            ReferenceRuntime(model).run({"x": x})[y], ReferenceRuntime(opt).run({"x": x})[y]
+        )
+
+    def test_refuses_non_pow2(self):
+        model, _ = self._rescale_chain(0.3, 0.7)  # neither is a power of two
+        _, counters = _run_one(MulFold(), model)
+        assert counters["folded"] == 0
+
+    def test_refuses_shared_intermediate(self):
+        model, _ = self._rescale_chain(361.0, 2.0**-13)
+        # make the first Mul's output observable → no longer single-consumer
+        m1_out = model.graph.nodes[0].outputs[0]
+        model.graph.outputs.append(pqir.TensorInfo(m1_out, "float32", (None, 8)))
+        _, counters = _run_one(MulFold(), model)
+        assert counters["folded"] == 0
+
+
+class TestIdentityAndDeadCode:
+    def test_same_dtype_cast_and_mul_by_one(self):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (None, 4))
+        one = gb.add_initializer("one", np.float32(1.0))
+        c = gb.op("Cast", [x], out_hint="c", to="float32")
+        m = gb.op("Mul", [c, one], out_hint="m")
+        r = gb.op("Relu", [m], out_hint="r")
+        gb.add_output(r, "float32", (None, 4))
+        model = gb.build()
+        opt, counters = _run_one(IdentityElim(), model)
+        assert counters["eliminated"] == 2
+        assert _ops(opt.graph) == ["Relu"]
+
+    def test_dtype_promoting_mul_by_one_is_kept(self):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "int32", (None, 4))
+        one = gb.add_initializer("one", np.float32(1.0))
+        m = gb.op("Mul", [x, one], out_hint="m")
+        gb.add_output(m, "float32", (None, 4))
+        model = gb.build()
+        _, counters = _run_one(IdentityElim(), model)
+        assert counters["eliminated"] == 0
+
+    def test_rank_expanding_size1_const_kept(self):
+        """Add(x(4,), zeros(1,1,1)) broadcasts x up to rank 3 — removing it
+        would change the output shape, so it is not an identity."""
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (4,))
+        z = gb.add_initializer("z", np.zeros((1, 1, 1), np.float32))
+        a = gb.op("Add", [x, z], out_hint="a")
+        r = gb.op("Relu", [a], out_hint="r")
+        gb.add_output(r, "float32", (1, 1, 4))
+        model = gb.build()
+        _, counters = _run_one(IdentityElim(), model)
+        assert counters["eliminated"] == 0
+
+    def test_dead_nodes_and_inits_removed(self):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (None, 4))
+        unused = gb.add_initializer("unused", np.float32(7.0))
+        gb.op("Mul", [x, unused], out_hint="orphan")  # never consumed
+        y = gb.op("Relu", [x], out_hint="y")
+        gb.add_output(y, "float32", (None, 4))
+        model = gb.build()
+        opt, counters = _run_one(DeadCode(), model)
+        assert counters["eliminated"] == 1 and counters["pruned_inits"] == 1
+        assert _ops(opt.graph) == ["Relu"] and not opt.graph.initializers
+
+
+class TestSinkShapes:
+    def test_transpose_sinks_past_relu(self):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (2, 3))
+        t = gb.op("Transpose", [x], out_hint="t", perm=[1, 0])
+        r = gb.op("Relu", [t], out_hint="r")
+        gb.add_output(r, "float32", (3, 2))
+        model = gb.build()
+        opt, counters = _run_one(SinkShapes(), model)
+        assert counters["sunk"] == 1
+        assert _ops(opt.graph) == ["Relu", "Transpose"]
+        xv = np.random.default_rng(0).normal(size=(2, 3)).astype(np.float32)
+        np.testing.assert_array_equal(
+            ReferenceRuntime(model).run({"x": xv})[r], ReferenceRuntime(opt).run({"x": xv})[r]
+        )
+
+    def test_reshape_sinks_through_scalar_mul_chain(self):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (4, 6))
+        shape = gb.add_initializer("shape", np.asarray([2, 12], np.int64))
+        c = gb.add_initializer("c", np.float32(2.0))
+        rs = gb.op("Reshape", [x, shape], out_hint="rs")
+        m = gb.op("Mul", [rs, c], out_hint="m")
+        r = gb.op("Relu", [m], out_hint="r")
+        gb.add_output(r, "float32", (2, 12))
+        model = gb.build()
+        opt, counters = _run_one(SinkShapes(), model)
+        assert counters["sunk"] == 2  # sinks past Mul, then past Relu
+        assert _ops(opt.graph) == ["Mul", "Relu", "Reshape"]
+        xv = np.random.default_rng(1).normal(size=(4, 6)).astype(np.float32)
+        np.testing.assert_array_equal(
+            ReferenceRuntime(model).run({"x": xv})[r], ReferenceRuntime(opt).run({"x": xv})[r]
+        )
+
+    def test_per_channel_operand_blocks_sinking(self):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (2, 3))
+        c = gb.add_initializer("c", np.arange(6, dtype=np.float32).reshape(3, 2))
+        t = gb.op("Transpose", [x], out_hint="t", perm=[1, 0])
+        m = gb.op("Mul", [t, c], out_hint="m")
+        gb.add_output(m, "float32", (3, 2))
+        model = gb.build()
+        _, counters = _run_one(SinkShapes(), model)
+        assert counters["sunk"] == 0
+
+
+class TestRewriteEngine:
+    def test_match_captures_chain_and_consts(self):
+        from repro.core.compile import QLINEAR_PATTERN
+        from repro.passes.analysis import GraphAnalysis
+        from repro.passes.rewrite import match_chain
+
+        rng = np.random.default_rng(0)
+        p = quant.quantize_linear_layer(
+            rng.normal(size=(16, 8)).astype(np.float32) * 0.1,
+            rng.normal(size=(8,)).astype(np.float32) * 0.1, 0.05, 0.1)
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "int8", (None, 16))
+        y = patterns.fc_layer(gb, x, p, "fc0", two_mul=True, activation="Relu")
+        gb.add_output(y, "int8", (None, 8))
+        g = gb.build().graph
+        anchor = g.toposorted()[0]
+        m = match_chain(GraphAnalysis(g), anchor, QLINEAR_PATTERN)
+        assert m is not None
+        assert [n.op_type for n in m.nodes] == [
+            "MatMulInteger", "Add", "Cast", "Mul", "Mul", "Relu", "QuantizeLinear"]
+        assert m.consts["weight"].dtype == np.int8
+        assert m.node("relu") is not None and "mul2" in m
+        assert m.out_tensor == y
+
+    def test_multi_consumer_intermediate_blocks_match(self):
+        from repro.core.compile import QLINEAR_PATTERN
+        from repro.passes.analysis import GraphAnalysis
+        from repro.passes.rewrite import match_chain
+
+        rng = np.random.default_rng(0)
+        p = quant.quantize_linear_layer(
+            rng.normal(size=(16, 8)).astype(np.float32) * 0.1, None, 0.05, 0.1)
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "int8", (None, 16))
+        y = patterns.fc_layer(gb, x, p, "fc0", two_mul=False)
+        gb.add_output(y, "int8", (None, 8))
+        model = gb.build()
+        # expose the accumulator as a second output → anchor's edge fans out
+        acc = model.graph.nodes[0].outputs[0]
+        model.graph.outputs.append(pqir.TensorInfo(acc, "int32", (None, 8)))
+        g = model.graph
+        m = match_chain(GraphAnalysis(g), g.toposorted()[0], QLINEAR_PATTERN)
+        assert m is None
+
+
+class TestPassManager:
+    def test_toggle_disables_pass(self):
+        model, _ = _mlp_model()
+        _, rep_all = passes.optimize(model)
+        _, rep_nofold = passes.optimize(model, disable=("mul_fold",))
+        assert rep_all.total("folded") == 3
+        assert rep_nofold.total("folded") == 0
+
+    def test_pipeline_idempotent(self):
+        model, _ = _mlp_model()
+        opt1, rep1 = passes.optimize(model)
+        opt2, rep2 = passes.optimize(opt1)
+        assert rep1.changed and not rep2.changed
+        assert json.dumps(opt1.to_json()) == json.dumps(opt2.to_json())
+
+    def test_conformance_hook_accepts_good_passes(self):
+        model, _ = _mlp_model()
+        _, rep = passes.optimize(model, verify=True)
+        assert rep.total("eliminated") >= 1  # and no ConformanceError raised
+
+    def test_conformance_hook_catches_bad_pass(self):
+        class EvilPass(passes.Pass):
+            name = "evil"
+
+            def run(self, graph):
+                for node in graph.nodes:
+                    if node.op_type == "Relu":
+                        node.op_type = "Sigmoid"  # obviously not semantics-preserving
+                        return {"eliminated": 1}
+                return {}
+
+        model, _ = _mlp_model()
+        pm = passes.PassManager([EvilPass()], verify=True)
+        with pytest.raises(passes.ConformanceError, match="evil"):
+            pm.run(model)
+
+    def test_original_model_never_mutated(self):
+        model, _ = _mlp_model()
+        before = json.dumps(model.to_json())
+        passes.optimize(model)
+        assert json.dumps(model.to_json()) == before
+
+
+class TestOptimizedCompileEndToEnd:
+    def test_mlp_bitexact_and_nodes_eliminated(self):
+        model, xq = _mlp_model()
+        ref = ReferenceRuntime(model).run({"input_q": xq})
+        cm = compile_model(model, verify_passes=True)
+        assert cm.stats["fused_qlinear"] == 3 and cm.stats["generic"] == 0
+        assert cm.stats["eliminated"] >= 1  # two-Mul rescales folded away
+        got = cm.run({"input_q": xq})
+        for k in ref:
+            np.testing.assert_array_equal(got[k], ref[k])
+
+    def test_tanh_mlp_lut_still_fuses_after_passes(self):
+        model, xq = _mlp_model(activations=("Relu", "Tanh", None))
+        ref = ReferenceRuntime(model).run({"input_q": xq})
+        cm = compile_model(model, verify_passes=True)
+        assert cm.stats["fused_lut"] == 1 and cm.stats["generic"] == 0
+        got = cm.run({"input_q": xq})
+        for k in ref:
+            np.testing.assert_array_equal(got[k], ref[k])
+
+    def test_cnn_bitexact(self):
+        rng = np.random.default_rng(5)
+        spec = CNNSpec(
+            convs=[ConvLayerSpec(rng.normal(size=(4, 1, 3, 3)).astype(np.float32) * 0.3,
+                                 rng.normal(size=(4,)).astype(np.float32) * 0.1,
+                                 activation="Relu")],
+            head=MLPSpec(weights=[rng.normal(size=(4 * 6 * 6, 10)).astype(np.float32) * 0.1],
+                         biases=[rng.normal(size=(10,)).astype(np.float32) * 0.1],
+                         activations=[None]),
+        )
+        calib = rng.normal(size=(64, 1, 8, 8)).astype(np.float32)
+        model = quantize_cnn(spec, calib)
+        xq = quant.quantize(calib[:4], eval(model.metadata["input_scale"]), "int8")
+        ref = ReferenceRuntime(model).run({"input_q": xq})
+        cm = compile_model(model, verify_passes=True)
+        assert cm.stats["fused_qconv"] == 1 and cm.stats["fused_qlinear"] == 1
+        got = cm.run({"input_q": xq})
+        for k in ref:
+            np.testing.assert_array_equal(got[k], ref[k])
+
+    def test_optimize_off_matches_optimize_on(self):
+        model, xq = _mlp_model()
+        on = compile_model(model).run({"input_q": xq})
+        off = compile_model(model, optimize=False).run({"input_q": xq})
+        for k in on:
+            np.testing.assert_array_equal(on[k], off[k])

@@ -1,0 +1,73 @@
+"""Hardened Graph.validate(): duplicate/undefined tensor names are rejected
+instead of silently accepted, independent of node-list order."""
+import numpy as np
+import pytest
+
+from repro.core import pqir
+
+
+def _linear_graph():
+    gb = pqir.GraphBuilder("g")
+    x = gb.add_input("x", "float32", (None, 4))
+    c = gb.add_initializer("c", np.float32(2.0))
+    y = gb.op("Mul", [x, c], out_hint="y")
+    gb.add_output(y, "float32", (None, 4))
+    return gb.build(validate=False)
+
+
+class TestValidateHardening:
+    def test_valid_graph_passes(self):
+        _linear_graph().validate()
+
+    def test_duplicate_graph_input(self):
+        m = _linear_graph()
+        m.graph.inputs.append(pqir.TensorInfo("x", "float32", (None, 4)))
+        with pytest.raises(ValueError, match="duplicate graph input"):
+            m.validate()
+
+    def test_input_shadowing_initializer(self):
+        m = _linear_graph()
+        m.graph.inputs.append(pqir.TensorInfo("c", "float32", ()))
+        with pytest.raises(ValueError, match="shadows an initializer"):
+            m.validate()
+
+    def test_duplicate_graph_output(self):
+        m = _linear_graph()
+        m.graph.outputs.append(pqir.TensorInfo(m.graph.outputs[0].name, "float32", (None, 4)))
+        with pytest.raises(ValueError, match="duplicate graph output"):
+            m.validate()
+
+    def test_undefined_node_input(self):
+        m = _linear_graph()
+        m.graph.nodes[0].inputs[0] = "ghost"
+        with pytest.raises(ValueError, match="undefined tensor 'ghost'"):
+            m.validate()
+
+    def test_tensor_produced_twice(self):
+        m = _linear_graph()
+        y = m.graph.nodes[0].outputs[0]
+        m.graph.nodes.append(pqir.Node("Relu", ["x"], [y], name="dup"))
+        with pytest.raises(ValueError, match="produced twice"):
+            m.validate()
+
+    def test_forward_reference_is_legal(self):
+        """Validation is order-independent: a topologically-valid graph whose
+        node list is reversed still validates (toposorted() fixes execution)."""
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (None, 4))
+        a = gb.op("Relu", [x], out_hint="a")
+        b = gb.op("Sqrt", [a], out_hint="b")
+        gb.add_output(b, "float32", (None, 4))
+        m = gb.build()
+        m.graph.nodes.reverse()
+        m.validate()
+
+    def test_cycle_rejected(self):
+        gb = pqir.GraphBuilder("g")
+        gb.add_input("x", "float32", (None, 4))
+        gb.add_node("Relu", ["b"], ["a"], name="n1")
+        gb.add_node("Relu", ["a"], ["b"], name="n2")
+        gb.add_output("b", "float32", (None, 4))
+        m = gb.build(validate=False)
+        with pytest.raises(ValueError, match="cycle"):
+            m.validate()

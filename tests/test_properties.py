@@ -2,7 +2,10 @@
 quantization math, §3.1 decomposition, artifact conformance (runtime ≡
 compiled, bit-exact), serialization, kernel wrapper vs oracle."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import patterns, pqir, quant
 from repro.core.compile import compile_model
