@@ -11,14 +11,20 @@ Prints ``name,us_per_call,derived`` CSV rows:
   tbl_rescale_decompose  — §3.1 decomposition (derived: worst rel. error)
   sys_pass_pipeline      — repro.passes optimized vs raw compile of a 3-layer
                            MLP (derived: folded/eliminated pipeline stats)
+  sys_plan_overhead      — slot-indexed ExecutionPlan execution vs the old
+                           name-keyed dict-env interpretation of the same
+                           kernels (derived: slot/tensor counts)
   sys_w8a8_decode        — reduced-arch decode step: bf16 vs W8A8+int8-KV
   sys_grad_compress      — int8 cross-pod gradient all-reduce (derived: wire-
                            bytes ratio vs f32)
 
-Run:  PYTHONPATH=src python -m benchmarks.run
+Run:  PYTHONPATH=src python -m benchmarks.run [--smoke]
+
+``--smoke`` runs the fast subset (fig1, pass pipeline, plan overhead) for CI.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -181,21 +187,9 @@ def bench_pass_pipeline():
     """repro.passes pipeline on a 3-layer MLP artifact: optimized vs raw
     compile, with the pipeline's folded/eliminated stats in the derived
     column (the two-Mul rescales fold, dead initializers get pruned)."""
-    from repro.core import quant
     from repro.core.compile import compile_model
-    from repro.core.toolchain import MLPSpec, quantize_mlp
 
-    rng = np.random.default_rng(4)
-    spec = MLPSpec(
-        weights=[rng.normal(size=(256, 256)).astype(np.float32) * 0.05 for _ in range(3)],
-        biases=[rng.normal(size=(256,)).astype(np.float32) * 0.1 for _ in range(3)],
-        activations=["Relu", "Relu", None],
-    )
-    calib = rng.normal(size=(256, 256)).astype(np.float32)
-    model = quantize_mlp(spec, calib)
-    xq = quant.quantize(
-        rng.normal(size=(64, 256)).astype(np.float32), eval(model.metadata["input_scale"]), "int8"
-    )
+    model, xq = _mlp_artifact()
     cm_raw = compile_model(model, optimize=False)
     cm_opt = compile_model(model)
     exact = all(
@@ -208,6 +202,53 @@ def bench_pass_pipeline():
         "sys_pass_pipeline",
         us_raw,
         f"optimized_us={us_opt:.1f};speedup={us_raw / us_opt:.2f}x;bitexact={exact};{_stats_derived(cm_opt)}",
+    )
+
+
+def _mlp_artifact(layers: int = 3, width: int = 256):
+    from repro.core import quant
+    from repro.core.toolchain import MLPSpec, quantize_mlp
+
+    rng = np.random.default_rng(4)
+    spec = MLPSpec(
+        weights=[rng.normal(size=(width, width)).astype(np.float32) * 0.05 for _ in range(layers)],
+        biases=[rng.normal(size=(width,)).astype(np.float32) * 0.1 for _ in range(layers)],
+        activations=["Relu"] * (layers - 1) + [None],
+    )
+    calib = rng.normal(size=(width, width)).astype(np.float32)
+    model = quantize_mlp(spec, calib)
+    xq = quant.quantize(
+        rng.normal(size=(64, width)).astype(np.float32), eval(model.metadata["input_scale"]), "int8"
+    )
+    return model, xq
+
+
+def bench_plan_overhead():
+    """Typed slot-indexed ExecutionPlan vs the old name-keyed dict-env
+    interpretation — same registry kernels, only the storage discipline
+    differs, so this row isolates the plan layer's overhead (it should be
+    ~1.0x: under jit both lower to the same XLA program)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.compile import compile_model
+
+    model, xq = _mlp_artifact()
+    cm = compile_model(model)
+    plan = cm.plan
+    feeds = {"input_q": jnp.asarray(xq)}
+    run_slots = jax.jit(plan.execute)
+    run_dict = jax.jit(plan.execute_dict_env)
+    a, b = run_slots(feeds), run_dict(feeds)
+    exact = all(np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a)
+    us_dict = _timeit(lambda: jax.block_until_ready(run_dict(feeds)))
+    us_plan = _timeit(lambda: jax.block_until_ready(run_slots(feeds)))
+    n_tensors = len({t for s in plan.steps for t in s.outputs}) + len(plan.inputs)
+    row(
+        "sys_plan_overhead",
+        us_dict,
+        f"plan_us={us_plan:.1f};ratio={us_plan / us_dict:.2f}x;bitexact={exact};"
+        f"slots={plan.num_slots};tensors={n_tensors};steps={len(plan.steps)}",
     )
 
 
@@ -236,20 +277,27 @@ def bench_grad_compress():
     row("sys_grad_compress", us, f"wire_bytes_ratio=4.00x_vs_f32;one_round_rel_err={err:.4f}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from repro.core import patterns
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="fast CI subset")
+    args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
     bench_pattern("fig1_fc_two_mul", activation=None, two_mul=True)
-    bench_pattern("fig2_fc_relu_one_mul", activation="Relu", two_mul=False)
-    bench_fig3_conv()
-    bench_pattern("fig4_int8_tanh", act_builder=patterns.fc_int8_tanh, derived_fn=_tanh_err)
-    bench_pattern("fig5_fp16_tanh", act_builder=patterns.fc_fp16_tanh, derived_fn=_tanh_err)
-    bench_pattern("fig6_fp16_sigmoid", act_builder=patterns.fc_fp16_sigmoid, derived_fn=_sigmoid_err)
-    bench_rescale_table()
+    if not args.smoke:
+        bench_pattern("fig2_fc_relu_one_mul", activation="Relu", two_mul=False)
+        bench_fig3_conv()
+        bench_pattern("fig4_int8_tanh", act_builder=patterns.fc_int8_tanh, derived_fn=_tanh_err)
+        bench_pattern("fig5_fp16_tanh", act_builder=patterns.fc_fp16_tanh, derived_fn=_tanh_err)
+        bench_pattern("fig6_fp16_sigmoid", act_builder=patterns.fc_fp16_sigmoid, derived_fn=_sigmoid_err)
+        bench_rescale_table()
     bench_pass_pipeline()
-    bench_w8a8_decode()
-    bench_grad_compress()
+    bench_plan_overhead()
+    if not args.smoke:
+        bench_w8a8_decode()
+        bench_grad_compress()
 
 
 if __name__ == "__main__":

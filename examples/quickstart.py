@@ -65,6 +65,9 @@ def main():
     cm = compile_model(model, backend="interpret", verify_passes=True)
     print(f"optimization pipeline: {cm.pass_report.summary()}")
     print(f"compiler fusion report: {cm.stats}")
+    # the typed ExecutionPlan — what a hardware designer reads: buffer slots,
+    # kernel ids, compile-time tile choices, pre-padded parameter shapes
+    print(cm.plan)
     assert cm.pass_report.total("eliminated") >= 1, "canonicalization eliminated nothing"
     (yq_tpu,) = cm.run({"input_q": xq}).values()
     assert np.array_equal(yq_ref, yq_tpu), "conformance violation!"

@@ -1,0 +1,65 @@
+"""repro.backend — the typed lowering layer between optimized PQ-IR and
+kernels.
+
+This package is the third level of the compilation flow::
+
+    PQ-IR artifact ──► repro.passes (graph optimization) ──► optimized PQ-IR
+                                                                  │
+                                                                  ▼
+                                        repro.core.compile (pattern fusion)
+                                                                  │
+                                              StepDrafts          ▼
+                                        repro.backend.lowering  ──►  ExecutionPlan
+                                                                  │
+                                                                  ▼
+                                        repro.backend.registry  ──►  kernels
+                                        (ref / interpret / pallas impls)
+
+Plan format
+===========
+
+An :class:`~repro.backend.plan.ExecutionPlan` is a flat program over integer
+**buffer slots**:
+
+* ``plan.num_slots`` — size of the buffer pool.  Slots are *storage*:
+  liveness planning in :mod:`repro.backend.lowering` frees a slot at its
+  tensor's last read, so intermediates reuse memory instead of accumulating
+  in a name-keyed dict (``plan.execute_dict_env`` keeps that old discipline
+  around purely as the ``sys_plan_overhead`` benchmark baseline).
+* ``plan.inputs`` / ``plan.outputs`` — (tensor name, slot) bindings for the
+  artifact's external interface.
+* ``plan.steps`` — one :class:`~repro.backend.plan.PlanStep` per lowered op:
+
+  ============  =====================================================
+  ``kernel``    registry kernel id (``"qlinear_matmul"``, ``"op.Relu"``)
+  ``args``      operand refs: slot read / baked const / absent optional
+  ``out_slots`` where results land
+  ``params``    compile-time statics: ONNX attrs, out dtype, relu/two_mul
+                flags, and the qmatmul shape record (m, k, n, kp, np,
+                bm, bk, bn) chosen per static shape at plan time
+  ``consts``    baked arrays — pre-padded to tile multiples on the fused
+                qmatmul path, so the hot path never pads parameters per call
+  ``out_info``  inferred dtype/shape per result (co-design inspection)
+  ============  =====================================================
+
+``print(compiled.plan)`` renders one line per step with slots, dtypes/shapes
+and static params — the artifact a hardware designer reads to see exactly
+what the backend will execute.
+
+Backend registry
+================
+
+Kernel selection is a table, not conditionals: implementations register as
+``(backend, kernel_id)`` pairs in :mod:`repro.backend.registry` with the
+uniform signature ``impl(step, args) -> [outputs]``.  The pseudo-backend
+``"*"`` is the shared fallback (the generic jnp mirror in
+:mod:`repro.backend.generic` registers every standard op once as
+``op.<Name>``); ``ref`` / ``interpret`` / ``pallas`` register the fused
+kernels (:mod:`repro.backend.fused`).  Adding a backend = registering
+implementations for the kernel ids it specializes — the executor and the
+compiler never change.
+"""
+from . import fused, generic  # noqa: F401  (populate the registry on import)
+from .lowering import StepDraft, build_plan, const_arg, none_arg, tensor_arg  # noqa: F401
+from .plan import Arg, ExecutionPlan, PlanStep, ValueInfo  # noqa: F401
+from .registry import UnknownKernelError, backends_for, kernel_ids, lookup, register  # noqa: F401

@@ -1,0 +1,101 @@
+"""Fused-kernel implementations for the backend registry.
+
+Three kernel ids cover the paper's fusion patterns:
+
+* ``qlinear_matmul`` — MatMulInteger→…→QuantizeLinear chain.  The ``ref``
+  backend runs the pure-jnp oracle on the *unpadded* parameters; the
+  ``interpret``/``pallas`` backends run the Pallas tile kernel on parameters
+  the lowering already padded to tile multiples
+  (:func:`repro.kernels.ops.specialize_qmatmul_params`), so nothing but the
+  activation is ever padded per call.
+* ``qlinear_conv2d`` — ConvInteger chain on XLA's int8 conv (shared impl:
+  the epilogue is plain jnp on every backend).
+* ``qact_lut`` — the exact 256-entry int8 activation LUT.
+
+Step contract (see :mod:`repro.backend.plan`): ``args = [x]`` (the single
+graph-tensor input), parameters in ``step.consts``, static config in
+``step.params``.  ``params["x_uint8"]`` marks a uint8 activation whose +128
+offset was folded into the bias *at plan time* — the impl only applies the
+signed shift to x.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.pqir import DTYPES
+from ..kernels import ops as kops
+from ..kernels import ref as _ref
+from .registry import register
+
+
+def _as_signed(x, params):
+    """uint8 activation → signed int8 (bias correction already folded)."""
+    if params.get("x_uint8"):
+        return (x.astype(jnp.int32) - 128).astype(jnp.int8)
+    return x
+
+
+@register("qlinear_matmul", backend="ref")
+def _qlinear_matmul_ref(step, args):
+    x = _as_signed(args[0], step.params)
+    w, b, qs, qsh = step.consts
+    p = step.params
+    y = _ref.qmatmul_ref(
+        x, w, b, qs, qsh,
+        out_dtype=DTYPES[p["out_dtype"]], relu=p["relu"], two_mul=p["two_mul"],
+    )
+    return [y]
+
+
+def _qlinear_matmul_tiled(step, args, *, interpret: bool):
+    x = _as_signed(args[0], step.params)
+    w2, b2, qs2, qsh2 = step.consts
+    p = step.params
+    y = kops.quantized_matmul_planned(
+        x, w2, b2, qs2, qsh2, p["shape"],
+        out_dtype=DTYPES[p["out_dtype"]], relu=p["relu"], two_mul=p["two_mul"],
+        interpret=interpret,
+    )
+    return [y]
+
+
+@register("qlinear_matmul", backend="interpret")
+def _qlinear_matmul_interpret(step, args):
+    return _qlinear_matmul_tiled(step, args, interpret=True)
+
+
+@register("qlinear_matmul", backend="pallas")
+def _qlinear_matmul_pallas(step, args):
+    return _qlinear_matmul_tiled(step, args, interpret=False)
+
+
+@register("qlinear_conv2d")
+def _qlinear_conv2d(step, args):
+    w, b, qs, qsh = step.consts
+    p = step.params
+    y = kops.quantized_conv2d(
+        args[0], w, b, qs, qsh,
+        strides=p["strides"], pads=p["pads"],
+        out_dtype=DTYPES[p["out_dtype"]], relu=p["relu"], two_mul=p["two_mul"],
+    )
+    return [y]
+
+
+def _qact_lut(step, args, *, backend: str):
+    (lut,) = step.consts
+    return [kops.quantized_activation(args[0], lut, backend=backend)]
+
+
+@register("qact_lut", backend="ref")
+def _qact_lut_ref(step, args):
+    return _qact_lut(step, args, backend="ref")
+
+
+@register("qact_lut", backend="interpret")
+def _qact_lut_interpret(step, args):
+    return _qact_lut(step, args, backend="interpret")
+
+
+@register("qact_lut", backend="pallas")
+def _qact_lut_pallas(step, args):
+    return _qact_lut(step, args, backend="pallas")

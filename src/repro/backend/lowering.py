@@ -1,0 +1,143 @@
+"""Lowering: step drafts → buffer-planned :class:`ExecutionPlan`.
+
+The compiler's builders emit :class:`StepDraft`\\ s — kernel id + symbolic
+operands (graph-tensor names, baked constants, absent optionals) in execution
+order.  :func:`build_plan` turns those into the typed plan:
+
+* **slot allocation (liveness-planned):** every tensor gets an integer buffer
+  slot; a slot returns to the free pool the moment its tensor's last reader
+  has consumed it, so later intermediates reuse storage.  Inputs of a step
+  are released *before* its outputs are allocated — an output may alias a
+  dead input's slot, which is safe because the executor reads all operands
+  before writing results.  Graph outputs are pinned (never freed).
+* **static typing:** each produced value is annotated with the dtype/shape
+  that :mod:`repro.passes.analysis` inferred on the optimized graph, making
+  the plan self-describing for co-design inspection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..core.pqir import Graph
+from ..passes.analysis import GraphAnalysis
+from .plan import CONST, NONE, SLOT, Arg, ExecutionPlan, PlanStep, ValueInfo
+
+#: Draft operand kinds: ("tensor", name) | ("const", value) | ("none", None)
+DraftArg = Tuple[str, Any]
+
+
+def tensor_arg(name: str) -> DraftArg:
+    return ("tensor", name)
+
+
+def const_arg(value: Any) -> DraftArg:
+    return ("const", value)
+
+
+def none_arg() -> DraftArg:
+    return ("none", None)
+
+
+@dataclasses.dataclass
+class StepDraft:
+    """A lowered-but-unplanned step: symbolic operands, no slots yet."""
+
+    kernel: str
+    args: List[DraftArg]
+    outputs: List[str]
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    consts: Tuple[Any, ...] = ()  # bag constants (read via step.consts)
+    kind: str = "generic"
+    name: str = ""
+
+
+def build_plan(
+    graph: Graph,
+    analysis: GraphAnalysis,
+    drafts: List[StepDraft],
+    backend: str,
+) -> ExecutionPlan:
+    """Assign liveness-planned buffer slots and produce the ExecutionPlan."""
+    out_names = {t.name for t in graph.outputs}
+
+    uses: Dict[str, int] = {}
+    for d in drafts:
+        for kind, val in d.args:
+            if kind == "tensor":
+                uses[val] = uses.get(val, 0) + 1
+
+    slot_of: Dict[str, int] = {}
+    free: List[int] = []
+    num_slots = 0
+
+    def alloc(name: str) -> int:
+        nonlocal num_slots
+        if free:
+            s = free.pop()
+        else:
+            s = num_slots
+            num_slots += 1
+        slot_of[name] = s
+        return s
+
+    def release(name: str) -> None:
+        if name not in out_names and name in slot_of:
+            free.append(slot_of.pop(name))
+
+    inputs = tuple((t.name, alloc(t.name)) for t in graph.inputs)
+    # graph inputs nobody reads die immediately
+    for t in graph.inputs:
+        if uses.get(t.name, 0) == 0:
+            release(t.name)
+
+    steps: List[PlanStep] = []
+    for d in drafts:
+        consts = list(d.consts)
+        args: List[Arg] = []
+        for kind, val in d.args:
+            if kind == "tensor":
+                args.append(Arg(SLOT, slot_of[val], val))
+            elif kind == "const":
+                consts.append(val)
+                args.append(Arg(CONST, len(consts) - 1))
+            else:
+                args.append(Arg(NONE))
+        # inputs whose last use this is free their slots now, so this step's
+        # outputs may alias them (safe: operands are read before results land)
+        for kind, val in d.args:
+            if kind != "tensor":
+                continue
+            uses[val] -= 1
+            if uses[val] == 0:
+                release(val)
+        out_slots = tuple(alloc(o) for o in d.outputs)
+        for o in d.outputs:  # never-read, non-output results die immediately
+            if uses.get(o, 0) == 0:
+                release(o)
+        out_info = tuple(ValueInfo(analysis.dtype(o), analysis.shape(o)) for o in d.outputs)
+        steps.append(
+            PlanStep(
+                kernel=d.kernel,
+                args=tuple(args),
+                out_slots=out_slots,
+                params=d.params,
+                consts=tuple(consts),
+                kind=d.kind,
+                name=d.name,
+                outputs=tuple(d.outputs),
+                out_info=out_info,
+            )
+        )
+
+    missing = [n for n in out_names if n not in slot_of]
+    if missing:
+        raise ValueError(f"graph outputs never lowered: {missing}")
+    outputs = tuple((t.name, slot_of[t.name]) for t in graph.outputs)
+    return ExecutionPlan(
+        backend=backend,
+        steps=steps,
+        num_slots=num_slots,
+        inputs=inputs,
+        outputs=outputs,
+    )

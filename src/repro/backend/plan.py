@@ -1,0 +1,216 @@
+"""Typed ExecutionPlan: the lowered form of a compiled PQ-IR artifact.
+
+A plan is a flat list of :class:`PlanStep`\\ s over integer *buffer slots*.
+Slots are storage, not tensors: liveness planning (see
+:mod:`repro.backend.lowering`) lets intermediates reuse the slot of a value
+that is already dead, so executing a deep model touches a small, fixed pool
+of buffers instead of growing a name-keyed dict.  Each step declares
+
+* a **kernel id** resolved through :mod:`repro.backend.registry` at
+  execution time (``ref`` / ``interpret`` / ``pallas`` register per-id
+  implementations — no backend conditionals in the executor),
+* **args** — slot reads, baked constants, or absent optional operands,
+* **static params** — everything specialized at *plan* time: ONNX attributes,
+  output dtypes, and for the fused qmatmul path the chosen tile sizes and
+  true (unpadded) problem shape,
+* **consts** — parameter arrays baked into the step (for the shape-
+  specialized qmatmul these are already padded to tile multiples, so the hot
+  path never pads weights/bias/scales per call).
+
+The plan's :meth:`ExecutionPlan.pretty` rendering is the co-design artifact a
+hardware designer reads: one line per step with slots, dtypes/shapes, kernel
+ids and static params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+#: Arg kinds.
+SLOT, CONST, NONE = "slot", "const", "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class Arg:
+    """One operand reference of a :class:`PlanStep`.
+
+    kind   "slot" (read buffer ``index``), "const" (read
+           ``step.consts[index]``) or "none" (absent optional input)
+    index  slot number or const index
+    name   source PQ-IR tensor name (debug / dict-env baseline executor)
+    """
+
+    kind: str
+    index: int = -1
+    name: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ValueInfo:
+    """Static dtype/shape of a produced value (best-effort; None = unknown)."""
+
+    dtype: Optional[str]
+    shape: Optional[Tuple[Optional[int], ...]]
+
+    def __str__(self) -> str:
+        dt = self.dtype or "?"
+        if self.shape is None:
+            return f"{dt}[?]"
+        dims = ",".join("?" if d is None else str(d) for d in self.shape)
+        return f"{dt}[{dims}]"
+
+
+@dataclasses.dataclass
+class PlanStep:
+    """One lowered operation: kernel id + operand refs + static params."""
+
+    kernel: str  # registry kernel id ("qlinear_matmul", "op.Relu", ...)
+    args: Tuple[Arg, ...]
+    out_slots: Tuple[int, ...]
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    consts: Tuple[Any, ...] = ()
+    kind: str = "generic"  # stats bucket: fused_qlinear|fused_qconv|fused_lut|generic
+    name: str = ""  # source node / pattern name
+    outputs: Tuple[str, ...] = ()  # source tensor names of out_slots
+    out_info: Tuple[ValueInfo, ...] = ()
+
+    @property
+    def in_slots(self) -> Tuple[int, ...]:
+        return tuple(a.index for a in self.args if a.kind == SLOT)
+
+    def describe(self) -> str:
+        ins = ", ".join(
+            f"%{a.index}" if a.kind == SLOT else ("·" if a.kind == NONE else f"c{a.index}")
+            for a in self.args
+        )
+        outs = ", ".join(
+            f"%{s}:{info}" if info is not None else f"%{s}"
+            for s, info in zip(self.out_slots, self.out_info or (None,) * len(self.out_slots))
+        )
+        rendered = (
+            (k, _fmt_param(v)) for k, v in sorted(self.params.items())
+        )
+        params = ",".join(f"{k}={v}" for k, v in rendered if v is not None)
+        consts = ",".join(_arr_sig(c) for c in self.consts)
+        tail = ""
+        if params:
+            tail += f" {{{params}}}"
+        if consts:
+            tail += f" consts[{consts}]"
+        src = f"  # {self.name}" if self.name else ""
+        return f"{outs} = {self.kernel}({ins}){tail}{src}"
+
+
+def _fmt_param(v: Any) -> Optional[str]:
+    """Compact static-param rendering; nested records (the qmatmul shape
+    spec, generic ONNX attrs) flatten inline so the tile choices and
+    attributes the plan was specialized with are visible in the printout.
+    Embedded arrays are elided (their values live in ``consts``)."""
+    if isinstance(v, np.ndarray):
+        return None
+    if isinstance(v, dict):
+        inner = ",".join(
+            f"{k}={fv}" for k, fv in ((k, _fmt_param(val)) for k, val in sorted(v.items()))
+            if fv is not None
+        )
+        return "{" + inner + "}"
+    if isinstance(v, (list, tuple)):
+        return "(" + ",".join(str(x) for x in v) + ")"
+    return str(v)
+
+
+def _arr_sig(c: Any) -> str:
+    if c is None:
+        return "·"
+    if hasattr(c, "dtype") and hasattr(c, "shape"):
+        return f"{c.dtype}{tuple(int(d) for d in c.shape)}"
+    return type(c).__name__
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """A lowered, buffer-planned program for one backend.
+
+    backend    kernel-resolution namespace ("ref" | "interpret" | "pallas")
+    steps      lowered ops in execution order
+    num_slots  size of the buffer pool (≤ number of distinct tensors thanks
+               to liveness-driven slot reuse)
+    inputs     (graph-input name, slot) feeds land here
+    outputs    (graph-output name, slot) results are read from here
+    """
+
+    backend: str
+    steps: List[PlanStep]
+    num_slots: int
+    inputs: Tuple[Tuple[str, int], ...]
+    outputs: Tuple[Tuple[str, int], ...]
+
+    # -- execution -----------------------------------------------------------
+    def execute(self, feeds: Dict[str, Any]) -> Dict[str, Any]:
+        """Slot-indexed interpretation (the hot path; jit-able as a whole)."""
+        from .registry import lookup
+
+        env: List[Any] = [None] * self.num_slots
+        for name, slot in self.inputs:
+            env[slot] = feeds[name]
+        for step in self.steps:
+            impl = lookup(self.backend, step.kernel)
+            args = [
+                env[a.index] if a.kind == SLOT
+                else (step.consts[a.index] if a.kind == CONST else None)
+                for a in step.args
+            ]
+            outs = impl(step, args)
+            for slot, val in zip(step.out_slots, outs):
+                env[slot] = val
+        return {name: env[slot] for name, slot in self.outputs}
+
+    def execute_dict_env(self, feeds: Dict[str, Any]) -> Dict[str, Any]:
+        """Name-keyed dict-env interpretation — the pre-plan execution model,
+        kept as the baseline for the ``sys_plan_overhead`` benchmark.  Runs
+        the *same* registry kernels; only the storage discipline differs
+        (a monotonically growing dict vs the fixed slot pool)."""
+        from .registry import lookup
+
+        env: Dict[str, Any] = dict(feeds)
+        for step in self.steps:
+            impl = lookup(self.backend, step.kernel)
+            args = [
+                env[a.name] if a.kind == SLOT
+                else (step.consts[a.index] if a.kind == CONST else None)
+                for a in step.args
+            ]
+            outs = impl(step, args)
+            for name, val in zip(step.outputs, outs):
+                env[name] = val
+        return {name: env[name] for name, _ in self.outputs}
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def kinds(self) -> Dict[str, int]:
+        agg: Dict[str, int] = {}
+        for s in self.steps:
+            agg[s.kind] = agg.get(s.kind, 0) + 1
+        return agg
+
+    def pretty(self) -> str:
+        """Human-readable lowering — the artifact a hardware designer reads."""
+        head = (
+            f"ExecutionPlan(backend={self.backend}, steps={len(self.steps)}, "
+            f"slots={self.num_slots})"
+        )
+        ins = "  inputs:  " + ", ".join(f"{n} -> %{s}" for n, s in self.inputs)
+        outs = "  outputs: " + ", ".join(f"%{s} -> {n}" for n, s in self.outputs)
+        body = [f"  {i:3d}: {s.describe()}" for i, s in enumerate(self.steps)]
+        return "\n".join([head, ins, outs] + body)
+
+    def __str__(self) -> str:
+        return self.pretty()
+
+    def __repr__(self) -> str:
+        return (
+            f"ExecutionPlan(backend={self.backend!r}, steps={len(self.steps)}, "
+            f"slots={self.num_slots}, kinds={self.kinds})"
+        )

@@ -1,16 +1,17 @@
-"""The hardware-specific compilation stage: PQ-IR → fused JAX/Pallas executable.
+"""The hardware-specific compilation stage: PQ-IR → typed ExecutionPlan →
+JAX/Pallas kernels.
 
 This is the *other side* of the paper's co-design contract, structured as a
-two-stage flow:
+three-level flow (QNN / onnx-mlir style multi-level lowering):
 
 1. **Optimize** — the artifact first runs through the
    :mod:`repro.passes` pipeline (constant folding, identity/dead-node
-   elimination, Reshape/Transpose sinking, §3.1 two-Mul rescale folding,
-   Quantize/Dequantize round-trip cancellation).  Every pass is
-   semantics-preserving — bit-exact on integer paths — and the caller's
-   artifact is never mutated (the pipeline clones it).
+   elimination, Reshape/Transpose/Flatten sinking, §3.1 two-Mul rescale and
+   integer Add-bias folding, Quantize/Dequantize round-trip cancellation).
+   Every pass is semantics-preserving — bit-exact on integer paths — and the
+   caller's artifact is never mutated (the pipeline clones it).
 
-2. **Fuse + lower** — fusion candidates are *declarative pattern specs*
+2. **Fuse** — fusion candidates are *declarative pattern specs*
    (:class:`repro.passes.rewrite.Pattern`): an op chain with
    dtype/arity/constness preconditions and capture names, matched along
    single-consumer edges by the shared pattern-rewrite engine.  The specs in
@@ -25,164 +26,46 @@ two-stage flow:
          ⇒ exact 256-entry VMEM LUT (repro.kernels.qact_lut), built with
            reference-runtime semantics (incl. the fp16 casts) ⇒ bit-exact.
 
-Adding a fusion means adding a Pattern + a builder — there is no hand-written
-chain-walking left here.  Anything unmatched falls back to a generic jnp op
-mirror, so *every* valid artifact compiles.  Conformance: integer paths are
-bit-exact vs :mod:`repro.core.runtime`; float fallbacks are allclose.
+3. **Lower** — matches and fallback nodes become
+   :class:`repro.backend.StepDraft`\\ s, and :func:`repro.backend.build_plan`
+   turns them into a typed, liveness-planned :class:`ExecutionPlan`
+   (integer buffer slots, per-step kernel ids resolved through the backend
+   registry, shapes/dtypes from :mod:`repro.passes.analysis`).  Shape
+   specialization happens *here*, at plan time: fused-qmatmul parameters are
+   pre-padded to tile multiples and (bm, bk, bn) chosen per static shape, so
+   the hot path never pads weights/bias/scales per call.  uint8 activations
+   fold to the signed-int8 MXU fast path at plan time too (bias correction
+   computed once).  ``CompiledModel.plan`` is printable — the artifact a
+   hardware designer reads.
+
+Adding a fusion means adding a Pattern + a builder; adding a backend means
+registering kernels — there is no hand-written chain-walking or backend
+conditional left here.  Anything unmatched falls back to the generic jnp op
+mirror (:mod:`repro.backend.generic`), so *every* valid artifact compiles.
+Conformance: integer paths are bit-exact vs :mod:`repro.core.runtime`; float
+fallbacks are allclose.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..backend import StepDraft, build_plan, const_arg, none_arg, tensor_arg
+from ..backend.generic import _JOPS  # noqa: F401  (re-export; conformance sweep)
+from ..backend.plan import ExecutionPlan
 from ..kernels import ops as kops
 from ..kernels.qact_lut import build_lut
 from ..passes import PassManager, PipelineReport
 from ..passes.analysis import GraphAnalysis
 from ..passes.rewrite import Match, OpSpec, Pattern, match_chain, ql_params
-from .pqir import DTYPES, Model, Node
+from .pqir import Model, Node
 
 # ---------------------------------------------------------------------------
-# generic jnp op mirror (fallback path)
+# fusion: declarative pattern specs + plan-step builders
 # ---------------------------------------------------------------------------
-
-_JOPS: Dict[str, Callable] = {}
-
-
-def _jop(name):
-    def deco(fn):
-        _JOPS[name] = fn
-        return fn
-
-    return deco
-
-
-@_jop("MatMulInteger")
-def _j_matmuli(node, ins):
-    a, b = ins[0], ins[1]
-    a32 = a.astype(jnp.int32) - (ins[2].astype(jnp.int32) if len(ins) > 2 and ins[2] is not None else 0)
-    b32 = b.astype(jnp.int32) - (ins[3].astype(jnp.int32) if len(ins) > 3 and ins[3] is not None else 0)
-    return [jax.lax.dot_general(a32, b32, (((a32.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.int32)]
-
-
-@_jop("ConvInteger")
-def _j_convi(node, ins):
-    x, w = ins[0], ins[1]
-    pads = tuple(node.attrs.get("pads", (0, 0, 0, 0)))
-    acc = jax.lax.conv_general_dilated(
-        x.astype(jnp.int8) if x.dtype != jnp.uint8 else x.astype(jnp.int32),
-        w.astype(jnp.int8),
-        window_strides=tuple(node.attrs.get("strides", (1, 1))),
-        padding=((pads[0], pads[2]), (pads[1], pads[3])),
-        dimension_numbers=("NCHW", "OIHW", "NCHW"),
-        feature_group_count=int(node.attrs.get("group", 1)),
-        preferred_element_type=jnp.int32,
-    )
-    return [acc]
-
-
-@_jop("QuantizeLinear")
-def _j_ql(node, ins):
-    x, scale = ins[0], ins[1]
-    zp = ins[2] if len(ins) > 2 else jnp.zeros((), jnp.int8)
-    info = jnp.iinfo(zp.dtype)
-    y = jnp.rint(x.astype(jnp.float32) / scale.astype(jnp.float32)) + zp.astype(jnp.float32)
-    return [jnp.clip(y, info.min, info.max).astype(zp.dtype)]
-
-
-@_jop("DequantizeLinear")
-def _j_dql(node, ins):
-    x, scale = ins[0], ins[1]
-    zp = ins[2].astype(jnp.int32) if len(ins) > 2 else 0
-    return [(x.astype(jnp.int32) - zp).astype(jnp.float32) * scale.astype(jnp.float32)]
-
-
-@_jop("Cast")
-def _j_cast(node, ins):
-    return [ins[0].astype(DTYPES[node.attrs["to"]])]
-
-
-for _name, _fn in {
-    "Mul": lambda node, ins: [ins[0] * ins[1]],
-    "Add": lambda node, ins: [ins[0] + ins[1]],
-    "Sub": lambda node, ins: [ins[0] - ins[1]],
-    "Div": lambda node, ins: [ins[0] // ins[1] if jnp.issubdtype(ins[0].dtype, jnp.integer) else ins[0] / ins[1]],
-    "Relu": lambda node, ins: [jnp.maximum(ins[0], jnp.zeros((), ins[0].dtype))],
-    "Tanh": lambda node, ins: [jnp.tanh(ins[0]).astype(ins[0].dtype)],
-    "Sigmoid": lambda node, ins: [jax.nn.sigmoid(ins[0].astype(jnp.float32)).astype(ins[0].dtype)],
-    "Erf": lambda node, ins: [jax.lax.erf(ins[0].astype(jnp.float32)).astype(ins[0].dtype)],
-    "Sqrt": lambda node, ins: [jnp.sqrt(ins[0])],
-    "Pow": lambda node, ins: [jnp.power(ins[0], ins[1])],
-    "Clip": lambda node, ins: [jnp.clip(ins[0], ins[1] if len(ins) > 1 else None, ins[2] if len(ins) > 2 else None)],
-    "Softmax": lambda node, ins: [jax.nn.softmax(ins[0].astype(jnp.float32), axis=int(node.attrs.get("axis", -1))).astype(ins[0].dtype)],
-    "MatMul": lambda node, ins: [ins[0] @ ins[1]],
-    "Reshape": lambda node, ins: [ins[0].reshape(tuple(int(s) for s in np.asarray(ins[1])))],
-    "Transpose": lambda node, ins: [jnp.transpose(ins[0], node.attrs.get("perm"))],
-    "Flatten": lambda node, ins: [ins[0].reshape((int(np.prod(ins[0].shape[: int(node.attrs.get("axis", 1))])) if int(node.attrs.get("axis", 1)) else 1, -1))],
-    "Concat": lambda node, ins: [jnp.concatenate(ins, axis=int(node.attrs["axis"]))],
-    "Gather": lambda node, ins: [jnp.take(ins[0], ins[1].astype(jnp.int32), axis=int(node.attrs.get("axis", 0)))],
-    "GlobalAveragePool": lambda node, ins: [ins[0].mean(axis=(2, 3), keepdims=True).astype(ins[0].dtype)],
-    "ReduceMean": lambda node, ins: [ins[0].mean(axis=tuple(node.attrs.get("axes")) if node.attrs.get("axes") else None, keepdims=bool(node.attrs.get("keepdims", 1))).astype(ins[0].dtype)],
-}.items():
-    _JOPS[_name] = _fn
-
-
-@_jop("Gemm")
-def _j_gemm(node, ins):
-    a, b = ins[0], ins[1]
-    if node.attrs.get("transA", 0):
-        a = a.T
-    if node.attrs.get("transB", 0):
-        b = b.T
-    y = float(node.attrs.get("alpha", 1.0)) * (a @ b)
-    if len(ins) > 2 and ins[2] is not None:
-        y = y + float(node.attrs.get("beta", 1.0)) * ins[2]
-    return [y.astype(ins[0].dtype)]
-
-
-@_jop("MaxPool")
-def _j_maxpool(node, ins):
-    x = ins[0]
-    kh, kw = node.attrs["kernel_shape"]
-    sh, sw = tuple(node.attrs.get("strides", (kh, kw)))
-    pads = tuple(node.attrs.get("pads", (0, 0, 0, 0)))
-    init = -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min
-    y = jax.lax.reduce_window(
-        x, init, jax.lax.max, (1, 1, kh, kw), (1, 1, sh, sw),
-        ((0, 0), (0, 0), (pads[0], pads[2]), (pads[1], pads[3])),
-    )
-    return [y]
-
-
-@_jop("AveragePool")
-def _j_avgpool(node, ins):
-    x = ins[0].astype(jnp.float32)
-    kh, kw = node.attrs["kernel_shape"]
-    sh, sw = tuple(node.attrs.get("strides", (kh, kw)))
-    pads = tuple(node.attrs.get("pads", (0, 0, 0, 0)))
-    y = jax.lax.reduce_window(
-        x, 0.0, jax.lax.add, (1, 1, kh, kw), (1, 1, sh, sw),
-        ((0, 0), (0, 0), (pads[0], pads[2]), (pads[1], pads[3])),
-    ) / (kh * kw)
-    return [y.astype(ins[0].dtype)]
-
-
-# ---------------------------------------------------------------------------
-# fusion: declarative pattern specs + kernel builders
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class Step:
-    fn: Callable
-    inputs: List[str]  # graph-tensor inputs (non-initializer)
-    outputs: List[str]
-    kind: str  # "fused_qlinear" | "fused_qconv" | "fused_lut" | "generic"
-
 
 _NP_ACT = {"Tanh": np.tanh, "Sigmoid": lambda x: (1.0 / (1.0 + np.exp(-x.astype(np.float32)))).astype(x.dtype)}
 
@@ -239,54 +122,86 @@ LUT_PATTERN = Pattern(
 )
 
 
-def _build_qlinear(compiler: "Compiler", m: Match) -> Step:
-    """Lower a QLINEAR_PATTERN match onto the fused int8 matmul / conv."""
+def _static_m(shape) -> Optional[int]:
+    """Product of the leading (batch) dims if fully known, else None."""
+    if shape is None or len(shape) < 1:
+        return None
+    lead = shape[:-1]
+    m = 1
+    for d in lead:
+        if d is None:
+            return None
+        m *= int(d)
+    return m
+
+
+def _build_qlinear(compiler: "Compiler", m: Match) -> StepDraft:
+    """Lower a QLINEAR_PATTERN match onto the fused int8 matmul / conv,
+    shape-specializing the matmul parameters at plan time."""
     core = m.anchor
     is_conv = core.op_type == "ConvInteger"
-    zp = compiler.analysis.const(m.node("ql").inputs[2]) if len(m.node("ql").inputs) > 2 else np.zeros((), np.int8)
-    out_dtype = DTYPES[str(np.asarray(zp).dtype)]
+    ga = compiler.analysis
+    zp = ga.const(m.node("ql").inputs[2]) if len(m.node("ql").inputs) > 2 else np.zeros((), np.int8)
+    out_dtype = str(np.asarray(zp).dtype)
     relu = m.node("relu") is not None
 
     muls = [np.asarray(m.consts["mul1_c"], np.float32)]
     if "mul2" in m:
         muls.append(np.asarray(m.consts["mul2_c"], np.float32))
     two_mul = len(muls) == 2
-    qs = jnp.asarray(muls[0])
-    qsh = jnp.asarray(muls[1]) if two_mul else jnp.asarray(np.float32(1.0))
-    wj = jnp.asarray(m.consts["weight"])
+    qs = muls[0]
+    qsh = muls[1] if two_mul else np.float32(1.0)
+    w = np.asarray(m.consts["weight"])
     bias = m.consts.get("bias_c")
-    bj = None if bias is None else jnp.asarray(np.asarray(bias).reshape(-1).astype(np.int32))
-    backend = compiler.backend
+    b = None if bias is None else np.asarray(bias).reshape(-1).astype(np.int32)
+    x_name = core.inputs[0]
+    params = {"out_dtype": out_dtype, "relu": relu, "two_mul": two_mul}
 
     if is_conv:
         attrs = core.attrs
+        params.update(
+            strides=tuple(attrs.get("strides", (1, 1))),
+            pads=tuple(attrs.get("pads", (0, 0, 0, 0))),
+        )
+        consts = (
+            jnp.asarray(w),
+            None if b is None else jnp.asarray(b),
+            jnp.asarray(qs),
+            jnp.asarray(np.asarray(qsh, np.float32)),
+        )
+        return StepDraft(
+            "qlinear_conv2d", [tensor_arg(x_name)], [m.out_tensor],
+            params=params, consts=consts, kind="fused_qconv", name=core.name,
+        )
 
-        def fn(x, _w=wj, _b=bj, _qs=qs, _qsh=qsh):
-            return [
-                kops.quantized_conv2d(
-                    x, _w, _b, _qs, _qsh,
-                    strides=tuple(attrs.get("strides", (1, 1))),
-                    pads=tuple(attrs.get("pads", (0, 0, 0, 0))),
-                    out_dtype=out_dtype, relu=relu, two_mul=two_mul,
-                )
-            ]
+    if compiler.backend == "ref":
+        # pure-jnp oracle: unpadded params, uint8 handled by int32 widening
+        consts = (
+            jnp.asarray(w),
+            None if b is None else jnp.asarray(b),
+            jnp.asarray(qs),
+            jnp.asarray(np.asarray(qsh, np.float32)),
+        )
+        return StepDraft(
+            "qlinear_matmul", [tensor_arg(x_name)], [m.out_tensor],
+            params=params, consts=consts, kind="fused_qlinear", name=core.name,
+        )
 
-        kind = "fused_qconv"
-    else:
+    # tiled Pallas path: fold uint8 → signed int8 and pre-pad at plan time
+    if ga.dtype(x_name) == "uint8":
+        b = np.asarray(kops.fold_uint8_input(jnp.asarray(w), None if b is None else jnp.asarray(b)))
+        params["x_uint8"] = True
+    consts, shape = kops.specialize_qmatmul_params(
+        w, b, qs, np.asarray(qsh, np.float32), m=_static_m(ga.shape(x_name))
+    )
+    params["shape"] = shape
+    return StepDraft(
+        "qlinear_matmul", [tensor_arg(x_name)], [m.out_tensor],
+        params=params, consts=consts, kind="fused_qlinear", name=core.name,
+    )
 
-        def fn(x, _w=wj, _b=bj, _qs=qs, _qsh=qsh):
-            return [
-                kops.quantized_matmul(
-                    x, _w, _b, _qs, _qsh,
-                    out_dtype=out_dtype, relu=relu, two_mul=two_mul, backend=backend,
-                )
-            ]
 
-        kind = "fused_qlinear"
-    return Step(fn, [core.inputs[0]], [m.out_tensor], kind)
-
-
-def _build_lut(compiler: "Compiler", m: Match) -> Step:
+def _build_lut(compiler: "Compiler", m: Match) -> StepDraft:
     """Lower a LUT_PATTERN match onto the exact 256-entry VMEM LUT."""
     ga = compiler.analysis
     in_scale, _ = ql_params(ga, m.node("dql"))
@@ -296,16 +211,14 @@ def _build_lut(compiler: "Compiler", m: Match) -> Step:
     act = m.node("act").op_type
 
     lut = build_lut(_NP_ACT[act], float(in_scale), float(out_scale), out_dtype, compute_dtype)
-    lut_j = jnp.asarray(lut)
-    backend = compiler.backend
-
-    def fn(x, _lut=lut_j):
-        return [kops.quantized_activation(x, _lut, backend=backend)]
-
-    return Step(fn, [m.node("dql").inputs[0]], [m.out_tensor], "fused_lut")
+    return StepDraft(
+        "qact_lut", [tensor_arg(m.node("dql").inputs[0])], [m.out_tensor],
+        params={"act": act, "out_dtype": out_dtype}, consts=(jnp.asarray(lut),),
+        kind="fused_lut", name=m.node("act").name,
+    )
 
 
-#: The compiler's fusion table: (declarative pattern, kernel builder).
+#: The compiler's fusion table: (declarative pattern, plan-step builder).
 #: New fusions plug in here — describe the chain as data, lower in a builder.
 FUSIONS = (
     (QLINEAR_PATTERN, _build_qlinear),
@@ -336,7 +249,6 @@ class Compiler:
         self.fuse = fuse
         self.inits = {k: v for k, v in self.graph.initializers.items()}
         self.analysis = GraphAnalysis(self.graph)
-        self.steps: List[Step] = []
         self.stats = {
             "fused_qlinear": 0,
             "fused_qconv": 0,
@@ -350,84 +262,76 @@ class Compiler:
     def compile(self) -> "CompiledModel":
         order = self.graph.toposorted()
         consumed = set()
+        drafts: List[StepDraft] = []
         for node in order:
             if id(node) in consumed:
                 continue
-            step = self._fused_step(node, consumed) if self.fuse else None
-            if step is None:
-                step = self._generic_step(node)
-            self.steps.append(step)
-            self.stats[step.kind] += 1
-        return CompiledModel(self.model, self.steps, self.stats, self.pass_report)
+            draft = self._fused_draft(node, consumed) if self.fuse else None
+            if draft is None:
+                draft = self._generic_draft(node)
+            drafts.append(draft)
+            self.stats[draft.kind] += 1
+        plan = build_plan(self.graph, self.analysis, drafts, self.backend)
+        self.stats["plan_slots"] = plan.num_slots
+        return CompiledModel(self.model, plan, self.stats, self.pass_report)
 
-    def _fused_step(self, node: Node, consumed: set) -> Optional[Step]:
+    def _fused_draft(self, node: Node, consumed: set) -> Optional[StepDraft]:
         for pattern, builder in FUSIONS:
             if node.op_type not in pattern.anchor_ops:
                 continue
             m = match_chain(self.analysis, node, pattern)
             if m is None:
                 continue
-            step = builder(self, m)
-            if step is None:
+            draft = builder(self, m)
+            if draft is None:
                 continue
             consumed.update(id(n) for n in m.nodes)
-            return step
+            return draft
         return None
 
-    def _generic_step(self, node: Node) -> Step:
-        fn_impl = _JOPS.get(node.op_type)
-        if fn_impl is None:
+    def _generic_draft(self, node: Node) -> StepDraft:
+        if node.op_type not in _JOPS:
             raise NotImplementedError(f"compiler has no lowering for op {node.op_type!r}")
-        graph_inputs = []
-        slots = []  # per node-input: ("env", idx) or ("const", array)
+        args = []
         for name in node.inputs:
             if not name:
-                slots.append(("none", None))
+                args.append(none_arg())
             elif name in self.inits:
-                slots.append(("const", jnp.asarray(self.inits[name])))
+                args.append(const_arg(np.asarray(self.inits[name])))
             else:
-                slots.append(("env", len(graph_inputs)))
-                graph_inputs.append(name)
-
-        def fn(*args, _impl=fn_impl, _node=node, _slots=slots):
-            ins = []
-            for kind, v in _slots:
-                if kind == "none":
-                    ins.append(None)
-                elif kind == "const":
-                    ins.append(v)
-                else:
-                    ins.append(args[v])
-            return _impl(_node, ins)
-
-        return Step(fn, graph_inputs, list(node.outputs), "generic")
+                args.append(tensor_arg(name))
+        return StepDraft(
+            f"op.{node.op_type}", args, list(node.outputs),
+            params={"attrs": node.attrs}, kind="generic", name=node.name,
+        )
 
 
 class CompiledModel:
-    """A compiled artifact: jitted end-to-end executable + fusion report."""
+    """A compiled artifact: typed ExecutionPlan + jitted slot-indexed
+    executor + fusion report.  ``print(cm.plan)`` shows the full lowering."""
 
     def __init__(
         self,
         model: Model,
-        steps: List[Step],
+        plan: ExecutionPlan,
         stats: Dict[str, int],
         pass_report: Optional[PipelineReport] = None,
     ) -> None:
         self.model = model
-        self.steps = steps
+        self.plan = plan
+        self.steps = plan.steps
         self.stats = stats
         self.pass_report = pass_report if pass_report is not None else PipelineReport()
         self.input_names = [t.name for t in model.graph.inputs]
         self.output_names = [t.name for t in model.graph.outputs]
         self._jitted = jax.jit(self._execute)
 
+    @property
+    def backend(self) -> str:
+        return self.plan.backend
+
     def _execute(self, feeds: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-        env = dict(feeds)
-        for step in self.steps:
-            outs = step.fn(*[env[n] for n in step.inputs])
-            for name, v in zip(step.outputs, outs):
-                env[name] = v
-        return {o: env[o] for o in self.output_names}
+        return self.plan.execute(feeds)
 
     def run(self, feeds: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
         res = self._jitted({k: jnp.asarray(v) for k, v in feeds.items()})

@@ -38,6 +38,78 @@ def fold_uint8_input(w_q: jax.Array, bias_q: Optional[jax.Array]):
     return corr if bias_q is None else bias_q.astype(jnp.int32) + corr
 
 
+# ---------------------------------------------------------------------------
+# plan-time shape specialization (repro.backend lowering)
+# ---------------------------------------------------------------------------
+
+
+def specialize_qmatmul_params(
+    w_q: np.ndarray,  # (K, N) int8
+    bias_q: Optional[np.ndarray],  # (N,) int32
+    quant_scale: np.ndarray,  # scalar or (N,) f32
+    quant_shift: np.ndarray,  # scalar or (N,) f32
+    *,
+    m: Optional[int] = None,  # static M if known, else None (dynamic batch)
+):
+    """Pre-pad the fused-qmatmul parameters to tile multiples **once**, at
+    plan time, and pick tile sizes for the static (K, N) problem shape.
+
+    Returns ``(consts, params)``: ``consts = (w2, b2, qs2, qsh2)`` jnp arrays
+    already shaped ``(kp, np)/(1, np)`` for the kernel, and ``params`` the
+    static shape record ``{m, k, n, kp, np, bm, bk, bn}`` the runtime wrapper
+    needs to pad *only the activation* (and only when its shape demands it).
+    Zero padding is exact for integer matmul; scale/shift pad with 1.0 so the
+    padded epilogue stays finite."""
+    k, n = int(w_q.shape[0]), int(w_q.shape[1])
+    bm, bk, bn = _qmm.choose_tiles(m, k, n)
+    kp, np_ = _round_up(k, bk), _round_up(n, bn)
+    w2 = np.zeros((kp, np_), np.int8)
+    w2[:k, :n] = np.asarray(w_q, np.int8)
+    b2 = np.zeros((1, np_), np.int32)
+    if bias_q is not None:
+        b2[0, :n] = np.asarray(bias_q, np.int32).reshape(-1)
+    qs2 = np.ones((1, np_), np.float32)
+    qs2[0, :n] = np.broadcast_to(np.asarray(quant_scale, np.float32).reshape(1, -1), (1, n))
+    qsh2 = np.ones((1, np_), np.float32)
+    qsh2[0, :n] = np.broadcast_to(np.asarray(quant_shift, np.float32).reshape(1, -1), (1, n))
+    consts = (jnp.asarray(w2), jnp.asarray(b2), jnp.asarray(qs2), jnp.asarray(qsh2))
+    params = {"m": m, "k": k, "n": n, "kp": kp, "np": np_, "bm": bm, "bk": bk, "bn": bn}
+    return consts, params
+
+
+def quantized_matmul_planned(
+    x_q: jax.Array,  # (..., K) int8 (uint8 already folded at plan time)
+    w2: jax.Array,  # (kp, np) int8 — pre-padded
+    b2: jax.Array,  # (1, np) int32 — pre-padded
+    qs2: jax.Array,  # (1, np) f32 — pre-padded
+    qsh2: jax.Array,  # (1, np) f32 — pre-padded
+    shape: dict,  # the params record from specialize_qmatmul_params
+    *,
+    out_dtype=jnp.int8,
+    relu: bool = False,
+    two_mul: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Shape-specialized fused matmul: parameters arrive pre-padded, so the
+    per-call work is at most an activation pad (skipped entirely when the
+    traced shape is already a tile multiple)."""
+    k, n, kp = shape["k"], shape["n"], shape["kp"]
+    bm, bk, bn = shape["bm"], shape["bk"], shape["bn"]
+    orig_shape = x_q.shape
+    assert orig_shape[-1] == k, (orig_shape, k)
+    x2 = x_q.reshape(-1, k)
+    m = x2.shape[0]
+    mp = _round_up(max(m, 1), bm)
+    if mp != m or kp != k:
+        x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    out = _qmm.qmatmul(
+        x2, w2, b2, qs2, qsh2,
+        out_dtype=out_dtype, relu=relu, two_mul=two_mul,
+        bm=bm, bk=bk, bn=bn, interpret=interpret,
+    )
+    return out[:m, :n].reshape(orig_shape[:-1] + (n,))
+
+
 def quantized_matmul(
     x_q: jax.Array,  # (..., K) int8 or uint8
     w_q: jax.Array,  # (K, N) int8

@@ -36,6 +36,27 @@ from jax.experimental.pallas import tpu as pltpu
 # Default MXU-aligned tile sizes.
 BM, BK, BN = 128, 256, 128
 
+# Minimum tile granularity: int8 operands want (32, 128)-aligned tiles and the
+# int32 accumulator (8, 128) — 32-multiple sublanes × 128-lane last dims
+# satisfy both.
+_MIN_SUBLANE, _MIN_LANE = 32, 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def choose_tiles(m, k: int, n: int, *, bm: int = BM, bk: int = BK, bn: int = BN):
+    """Pick (bm, bk, bn) for a *static* problem shape at plan time.
+
+    Shrinks the default blocks toward the (hardware-minimum-aligned) problem
+    size so small layers don't pad 33→256; ``m`` may be None when the batch
+    dimension is dynamic, in which case the default ``bm`` stands."""
+    bm_ = min(bm, _ceil_to(int(m), _MIN_SUBLANE)) if m else bm
+    bk_ = min(bk, _ceil_to(int(k), _MIN_LANE))
+    bn_ = min(bn, _ceil_to(int(n), _MIN_LANE))
+    return bm_, bk_, bn_
+
 
 def _epilogue(acc, bias, qscale, qshift, *, relu: bool, two_mul: bool, out_dtype):
     """The artifact's rescale chain, op-for-op (order matters for bit-exactness)."""

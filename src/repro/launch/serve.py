@@ -27,6 +27,9 @@ def serve_demo(
     int8_kv: bool = False,
     reduced: bool = True,
     seed: int = 0,
+    greedy: bool = True,
+    temperature: float = 1.0,
+    top_k: int = 0,
 ):
     import jax
 
@@ -36,7 +39,10 @@ def serve_demo(
     if cfg.family == "encdec" or cfg.frontend is not None:
         raise SystemExit(f"serve demo supports text decoder archs; {arch} needs frontend feeds")
     params = M.init_params(jax.random.PRNGKey(seed), cfg)
-    ecfg = EngineConfig(slots=slots, max_len=prompt_len + new_tokens + 8)
+    ecfg = EngineConfig(
+        slots=slots, max_len=prompt_len + new_tokens + 8,
+        greedy=greedy, temperature=temperature, top_k=top_k, seed=seed,
+    )
     eng = ServeEngine(params, cfg, ecfg)
     rng = np.random.default_rng(seed)
     reqs = []
@@ -65,10 +71,14 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--int8-kv", action="store_true")
+    ap.add_argument("--sample", action="store_true", help="temperature/top-k sampling instead of greedy")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args(argv)
     serve_demo(
         args.arch, requests=args.requests, prompt_len=args.prompt_len,
         new_tokens=args.new_tokens, slots=args.slots, int8_kv=args.int8_kv,
+        greedy=not args.sample, temperature=args.temperature, top_k=args.top_k,
     )
 
 

@@ -17,10 +17,12 @@ Optimization pipeline
     │ PassManager (repro.passes.manager)                           │
     │   1. const_fold      evaluate all-initializer nodes          │
     │   2. identity_elim   same-dtype Cast, ×1, +0, no-op shapes   │
-    │   3. sink_shapes     Reshape/Transpose past elementwise ops  │
+    │   3. sink_shapes     Reshape/Transpose/Flatten past          │
+    │                      elementwise ops                         │
     │   4. mul_fold        §3.1 quant_scale·2⁻ⁿ pair → one Mul     │
-    │   5. qdq_cancel      Dequantize→Quantize round trips         │
-    │   6. dead_code       unused nodes + initializers             │
+    │   5. add_fold        integer bias Add pairs → one Add        │
+    │   6. qdq_cancel      Dequantize→Quantize round trips         │
+    │   7. dead_code       unused nodes + initializers             │
     │   (sweeps repeat until a fixpoint, bounded by max_iterations)│
     └──────────────────────────────────────────────────────────────┘
         │                         │
@@ -31,7 +33,9 @@ Optimization pipeline
         │                             ConformanceError names the pass
         ▼
     repro.core.compile — declarative fusion patterns (qlinear / qconv /
-    int8-LUT) expressed on repro.passes.rewrite, then JAX/Pallas codegen
+    int8-LUT) expressed on repro.passes.rewrite, lowered through the typed
+    repro.backend ExecutionPlan (buffer slots + kernel registry) onto the
+    JAX/Pallas kernels
 
 Layout
 ======
@@ -53,7 +57,7 @@ IEEE-identical — the pipeline's output is interchangeable with its input for
 any conforming runtime.
 """
 from .analysis import GraphAnalysis, clone_graph, clone_model, infer_dtypes, infer_shapes  # noqa: F401
-from .canonicalize import ConstantFold, DeadCode, IdentityElim, MulFold, Pass, QdqCancel  # noqa: F401
+from .canonicalize import AddFold, ConstantFold, DeadCode, IdentityElim, MulFold, Pass, QdqCancel  # noqa: F401
 from .manager import (  # noqa: F401
     ConformanceError,
     PassManager,

@@ -186,6 +186,23 @@ def _node_shape(node: Node, sh, const) -> Shape:  # noqa: C901 (dispatch table)
             return None
         axis = int(node.attrs.get("axis", 0))
         return tuple(s0[:axis]) + tuple(s1) + tuple(s0[axis + 1 :])
+    if t == "Slice":
+        starts = const(node.inputs[1]) if len(node.inputs) > 1 else None
+        ends = const(node.inputs[2]) if len(node.inputs) > 2 else None
+        if s0 is None or starts is None or ends is None:
+            return None
+        starts = [int(v) for v in np.asarray(starts).reshape(-1)]
+        ends = [int(v) for v in np.asarray(ends).reshape(-1)]
+        axes_c = const(node.inputs[3]) if len(node.inputs) > 3 and node.inputs[3] else None
+        steps_c = const(node.inputs[4]) if len(node.inputs) > 4 and node.inputs[4] else None
+        axes = [int(v) for v in np.asarray(axes_c).reshape(-1)] if axes_c is not None else list(range(len(starts)))
+        steps = [int(v) for v in np.asarray(steps_c).reshape(-1)] if steps_c is not None else [1] * len(starts)
+        dims = list(s0)
+        for s, e, a, st in zip(starts, ends, axes, steps):
+            if dims[a] is None:
+                continue  # unknown stays unknown
+            dims[a] = len(range(*slice(s, e, st).indices(int(dims[a]))))
+        return tuple(dims)
     if t in ("Squeeze", "Unsqueeze"):
         axes = const(node.inputs[1]) if len(node.inputs) > 1 else None
         if s0 is None or axes is None:

@@ -20,6 +20,11 @@ IEEE-identical, not merely close:
                        ``RN(RN(x·c)·2**k) == RN(x·(c·2**k))``.  This is
                        precisely the paper's §3.1 quant_scale × 2**−shift
                        rescale pair.
+* ``add_fold``       — consecutive constant integer ``Add``s fold to one:
+                       two's-complement addition is associative even under
+                       wrap-around, so ``(x+c1)+c2 == x+(c1+c2)`` exactly for
+                       any int dtype (float pairs are left alone — float
+                       addition does not associate).
 * ``identity_elim``  — same-dtype Cast, ×1.0 / ÷1.0, +0 / −0, identity
                        Transpose/Reshape.
 * ``dead_code``      — drop nodes whose outputs are never consumed, and
@@ -35,7 +40,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from ..core import runtime as _rt
-from ..core.pqir import Graph, Node
+from ..core.pqir import DTYPES, Graph, Node
 from .analysis import GraphAnalysis
 from .rewrite import OpSpec, Pattern, bypass_tensor, match_chain, ql_params, remove_nodes, unique_name
 
@@ -190,6 +195,79 @@ class MulFold(Pass):
                 idx = next(i for i, n in enumerate(graph.nodes) if n is m1)
                 graph.nodes[idx] = fused
                 remove_nodes(graph, [m2])
+                folded += 1
+                eliminated += 1
+                applied = True
+                break
+            if not applied:
+                return {"folded": folded, "eliminated": eliminated}
+
+
+# ---------------------------------------------------------------------------
+# consecutive-Add bias folding
+# ---------------------------------------------------------------------------
+
+_ADDADD = Pattern(
+    "add_add",
+    (
+        OpSpec("Add", capture="a1", const_operand="c1"),
+        OpSpec("Add", capture="a2", const_operand="c2"),
+    ),
+)
+
+
+class AddFold(Pass):
+    """Fold consecutive constant ``Add``s: ``(x + c1) + c2 → x + (c1 + c2)``.
+
+    Bit-exactness gate: **integer** operands only.  Two's-complement addition
+    is associative even under wrap-around, so the fold is exact for any int
+    dtype; float addition is not associative, so float pairs are left alone
+    (the ``+0`` identity case is already :class:`IdentityElim`'s job).  This
+    is the bias-pair analogue of :class:`MulFold` — split int32 bias adds
+    around a MatMulInteger collapse to the single Add the QLINEAR fusion
+    pattern consumes."""
+
+    name = "add_fold"
+
+    def run(self, graph: Graph) -> Dict[str, int]:
+        folded = 0
+        eliminated = 0
+        while True:
+            ga = GraphAnalysis(graph)
+            applied = False
+            for node in graph.toposorted():
+                if node.op_type != "Add":
+                    continue
+                m = match_chain(ga, node, _ADDADD)
+                if m is None:
+                    continue
+                c1, c2 = m.consts["c1"], m.consts["c2"]
+                if not (np.issubdtype(c1.dtype, np.integer) and np.issubdtype(c2.dtype, np.integer)):
+                    continue
+                a1 = m.node("a1")
+                x_in = a1.inputs[1] if ga.is_const(a1.inputs[0]) else a1.inputs[0]
+                xd = ga.dtype(x_in)
+                if xd is None or not np.issubdtype(DTYPES.get(xd, np.float32), np.integer):
+                    continue
+                if not (c1.size == 1 or c2.size == 1 or c1.shape == c2.shape):
+                    continue  # keep broadcasting trivially associative
+                # Associativity only holds at one fixed width: the folded
+                # constant must be summed in the sequential chain's compute
+                # dtype d1 = promote(x, c1) (not promote(c1, c2) — narrow
+                # consts would wrap too early), and if the second add widens
+                # (promote(d1, c2) != d1) the first add's wraparound at d1 is
+                # observable and the pair must be kept.
+                d1 = np.promote_types(DTYPES[xd], c1.dtype)
+                if np.promote_types(d1, c2.dtype) != d1:
+                    continue
+                a2 = m.node("a2")
+                cname = unique_name(graph, f"{a2.outputs[0]}_folded_bias")
+                with np.errstate(over="ignore"):
+                    graph.initializers[cname] = c1.astype(d1) + c2.astype(d1)
+                fused = Node("Add", [x_in, cname], [a2.outputs[0]], name=a1.name or "add_fold")
+                idx = next(i for i, n in enumerate(graph.nodes) if n is a1)
+                graph.nodes[idx] = fused
+                remove_nodes(graph, [a2])
                 folded += 1
                 eliminated += 1
                 applied = True

@@ -19,7 +19,7 @@ import numpy as np
 from ..core.pqir import DTYPES, Graph, Model
 from ..core.runtime import ReferenceRuntime
 from .analysis import clone_model
-from .canonicalize import ConstantFold, DeadCode, IdentityElim, MulFold, Pass, QdqCancel
+from .canonicalize import AddFold, ConstantFold, DeadCode, IdentityElim, MulFold, Pass, QdqCancel
 from .sink import SinkShapes
 
 
@@ -30,9 +30,9 @@ class ConformanceError(RuntimeError):
 def default_passes() -> List[Pass]:
     """The canonicalization pipeline, in order: fold constants, drop
     identities, sink shape ops (exposing longer elementwise chains), fold the
-    §3.1 two-Mul rescales, cancel Dequantize→Quantize round trips, then sweep
-    dead nodes/initializers."""
-    return [ConstantFold(), IdentityElim(), SinkShapes(), MulFold(), QdqCancel(), DeadCode()]
+    §3.1 two-Mul rescales and integer Add-bias pairs, cancel
+    Dequantize→Quantize round trips, then sweep dead nodes/initializers."""
+    return [ConstantFold(), IdentityElim(), SinkShapes(), MulFold(), AddFold(), QdqCancel(), DeadCode()]
 
 
 @dataclasses.dataclass

@@ -1,8 +1,10 @@
-"""Reshape/Transpose sinking: move pure data-movement ops *past* elementwise
-ops so compute chains become contiguous and visible to the fusion patterns.
+"""Reshape/Transpose/Flatten sinking: move pure data-movement ops *past*
+elementwise ops so compute chains become contiguous and visible to the fusion
+patterns.
 
     Transpose → Relu → …      ⇒      Relu → Transpose → …
     Reshape → Mul(c) → …      ⇒      Mul(c) → Reshape → …
+    Flatten → Relu → …        ⇒      Relu → Flatten → …
 
 Elementwise ops commute exactly with permutations/reshapes of their data
 input, so the rewrite is bit-exact.  Binary ops only qualify when the other
@@ -21,6 +23,7 @@ from .analysis import GraphAnalysis
 from .canonicalize import Pass
 from .rewrite import unique_name
 
+_SHAPE_OPS = frozenset({"Reshape", "Transpose", "Flatten"})
 _UNARY = frozenset({"Relu", "Tanh", "Sigmoid", "Erf", "Sqrt", "Cast"})
 _BINARY = frozenset({"Mul", "Add", "Sub", "Div"})
 _SCALAR_PARAM = frozenset({"QuantizeLinear", "DequantizeLinear", "Clip"})
@@ -83,10 +86,10 @@ class SinkShapes(Pass):
     @staticmethod
     def _find(ga: GraphAnalysis, graph: Graph):
         for node in graph.toposorted():
-            if node.op_type not in ("Reshape", "Transpose"):
+            if node.op_type not in _SHAPE_OPS:
                 continue
             consumer = ga.single_consumer(node.outputs[0])
-            if consumer is None or consumer.op_type in ("Reshape", "Transpose"):
+            if consumer is None or consumer.op_type in _SHAPE_OPS:
                 continue
             if _sinkable_through(ga, consumer, node.outputs[0]):
                 return node, consumer

@@ -45,6 +45,35 @@ class EngineConfig:
     max_len: int = 256
     prefill_bucket: int = 32  # prompts right-padded to a multiple of this
     greedy: bool = True
+    temperature: float = 1.0  # sampling path only (greedy=False)
+    top_k: int = 0  # 0 ⇒ sample the full vocab
+    seed: int = 0  # host-side sampling rng seed
+
+
+def sample_token(
+    logits: np.ndarray,
+    *,
+    temperature: float = 1.0,
+    top_k: int = 0,
+    rng: Optional[np.random.Generator] = None,
+) -> int:
+    """Sample one token id from a logits row (host-side, numpy).
+
+    ``temperature <= 0`` degenerates to argmax; ``top_k > 0`` restricts
+    sampling to the k highest logits (ties at the k-th value are all kept,
+    so the candidate set is never smaller than k)."""
+    z = np.asarray(logits, np.float64).reshape(-1)
+    if temperature <= 0.0:
+        return int(z.argmax())
+    if top_k and top_k < z.size:
+        kth = np.partition(z, -top_k)[-top_k]
+        z = np.where(z >= kth, z, -np.inf)
+    z = z / temperature
+    z = z - z.max()
+    p = np.exp(z)
+    p /= p.sum()
+    rng = rng if rng is not None else np.random.default_rng()
+    return int(rng.choice(z.size, p=p))
 
 
 class ServeEngine:
@@ -67,7 +96,20 @@ class ServeEngine:
             lambda p, t, pos, c: M.decode_step(p, t, pos, c, cfg, compute_dtype=compute_dtype)
         )
         self._prefill_cache: Dict[int, Callable] = {}
+        self._rng = np.random.default_rng(ecfg.seed)
         self.metrics = {"decode_steps": 0, "prefills": 0, "completed": 0}
+
+    def _select(self, logits_row) -> int:
+        """Next-token choice for one slot: argmax (greedy) or
+        temperature/top-k sampling."""
+        if self.ecfg.greedy:
+            return int(np.asarray(logits_row).argmax())
+        return sample_token(
+            np.asarray(logits_row),
+            temperature=self.ecfg.temperature,
+            top_k=self.ecfg.top_k,
+            rng=self._rng,
+        )
 
     # -- request lifecycle ----------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -101,7 +143,7 @@ class ServeEngine:
             # positions < plen, and decode continues exactly at plen.
             first_logits, _ = self._logits_at(padded, plen, logits, pcache)
             self._scatter_cache(slot, pcache)
-            tok = int(jnp.argmax(first_logits)) if self.ecfg.greedy else int(jnp.argmax(first_logits))
+            tok = self._select(first_logits)
             req.generated.append(tok)
             req.t_first = time.monotonic()
             self.active[slot] = req
@@ -143,12 +185,18 @@ class ServeEngine:
         pos = jnp.asarray(self.slot_pos)
         logits, self.cache = self._decode(self.params, jnp.asarray(toks), pos, self.cache)
         self.metrics["decode_steps"] += 1
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        if self.ecfg.greedy:
+            # argmax on device: transfers `slots` ints, not slots×vocab floats
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            pick = lambda slot: int(nxt[slot])  # noqa: E731
+        else:
+            logits_np = np.asarray(logits)
+            pick = lambda slot: self._select(logits_np[slot])  # noqa: E731
         for slot in list(self.active):
             if not self.slot_live[slot]:
                 continue
             req = self.active[slot]
-            req.generated.append(int(nxt[slot]))
+            req.generated.append(pick(slot))
             self.slot_pos[slot] += 1
             self.slot_budget[slot] -= 1
             if self.slot_budget[slot] <= 0 or self.slot_pos[slot] >= self.ecfg.max_len - 1:

@@ -1,0 +1,223 @@
+"""E5: the typed ExecutionPlan backend layer.
+
+Covers: liveness-planned slot reuse, plan-time shape specialization
+(pre-padded fused-qmatmul parameters, static tile choice), the backend
+kernel registry, plan printing, the dict-env baseline executor, and
+bit-exact conformance of the slot-indexed interpreter.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.backend import UnknownKernelError, backends_for, kernel_ids, lookup
+from repro.core import patterns, pqir, quant
+from repro.core.compile import compile_model
+from repro.core.runtime import ReferenceRuntime
+from repro.core.toolchain import MLPSpec, quantize_mlp
+
+
+def _fc_model(rng, n_in=100, n_out=60, batch=None, activation="Relu"):
+    x = rng.normal(size=(8, n_in)).astype(np.float32)
+    w = rng.normal(size=(n_in, n_out)).astype(np.float32) * 0.1
+    b = rng.normal(size=(n_out,)).astype(np.float32) * 0.2
+    scale_x = quant.choose_scale(float(np.abs(x).max()), "int8")
+    p = quant.quantize_linear_layer(w, b, scale_x, 0.1)
+    xq = quant.quantize(x, scale_x, "int8")
+    gb = pqir.GraphBuilder("m")
+    xi = gb.add_input("input_q", "int8", (batch, n_in))
+    y = patterns.fc_layer(gb, xi, p, "fc0", two_mul=True, activation=activation)
+    gb.add_output(y, "int8", (batch, n_out))
+    return gb.build(), xq, y
+
+
+def _mlp(rng):
+    spec = MLPSpec(
+        weights=[rng.normal(size=(32, 64)).astype(np.float32) * 0.2,
+                 rng.normal(size=(64, 64)).astype(np.float32) * 0.2,
+                 rng.normal(size=(64, 10)).astype(np.float32) * 0.2],
+        biases=[rng.normal(size=(64,)).astype(np.float32) * 0.1,
+                rng.normal(size=(64,)).astype(np.float32) * 0.1,
+                rng.normal(size=(10,)).astype(np.float32) * 0.1],
+        activations=["Relu", "Relu", None],
+    )
+    calib = rng.normal(size=(128, 32)).astype(np.float32)
+    model = quantize_mlp(spec, calib)
+    xq = quant.quantize(rng.normal(size=(8, 32)).astype(np.float32),
+                        eval(model.metadata["input_scale"]), "int8")
+    return model, xq
+
+
+class TestShapeSpecialization:
+    def test_qmatmul_params_prepadded_at_plan_time(self):
+        """The acceptance criterion: no per-call padding of the fused qmatmul
+        parameters — weight/bias/scales arrive at the kernel already padded
+        to the tile multiples chosen for the static shape."""
+        rng = np.random.default_rng(0)
+        model, xq, y = _fc_model(rng, n_in=100, n_out=60)
+        cm = compile_model(model, backend="interpret")
+        (step,) = [s for s in cm.plan.steps if s.kernel == "qlinear_matmul"]
+        shape = step.params["shape"]
+        assert shape["k"] == 100 and shape["n"] == 60
+        assert shape["kp"] % shape["bk"] == 0 and shape["np"] % shape["bn"] == 0
+        assert shape["kp"] > shape["k"] and shape["np"] > shape["n"]  # ragged ⇒ padded
+        w2, b2, qs2, qsh2 = step.consts
+        assert w2.shape == (shape["kp"], shape["np"])
+        assert b2.shape == qs2.shape == qsh2.shape == (1, shape["np"])
+        # padded lanes of the epilogue scales are 1.0 (finite epilogue)
+        assert float(np.asarray(qs2)[0, -1]) == 1.0
+        # and the specialized plan is still bit-exact
+        ref = ReferenceRuntime(model).run({"input_q": xq})[y]
+        np.testing.assert_array_equal(cm.run({"input_q": xq})[y], ref)
+
+    def test_static_batch_shrinks_tiles(self):
+        rng = np.random.default_rng(1)
+        model, xq, y = _fc_model(rng, n_in=256, n_out=128, batch=8)
+        cm = compile_model(model, backend="interpret")
+        (step,) = [s for s in cm.plan.steps if s.kernel == "qlinear_matmul"]
+        shape = step.params["shape"]
+        assert shape["m"] == 8
+        assert shape["bm"] == 32  # hardware minimum sublane tile, not BM=128
+        ref = ReferenceRuntime(model).run({"input_q": xq})[y]
+        np.testing.assert_array_equal(cm.run({"input_q": xq})[y], ref)
+
+    def test_uint8_activation_folded_at_plan_time(self):
+        """uint8 activations fold to signed int8 (+128 into the bias) when
+        the plan is built, not per call — and stay bit-exact."""
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(8, 32)).astype(np.float32)
+        w1 = rng.normal(size=(32, 16)).astype(np.float32) * 0.3
+        b1 = rng.normal(size=(16,)).astype(np.float32) * 0.1
+        w2 = rng.normal(size=(16, 8)).astype(np.float32) * 0.3
+        b2 = rng.normal(size=(8,)).astype(np.float32) * 0.1
+        scale_x = quant.choose_scale(float(np.abs(x).max()), "int8")
+        p1 = quant.quantize_linear_layer(w1, b1, scale_x, patterns.SIGMOID_INPUT_ABSMAX / 127.0)
+        p2 = quant.quantize_linear_layer(w2, b2, 1.0 / 255.0, 0.1)
+        gb = pqir.GraphBuilder("m")
+        xi = gb.add_input("input_q", "int8", (None, 32))
+        h = patterns.fc_fp16_sigmoid(gb, xi, p1, "fc0")  # uint8 output
+        y = patterns.fc_layer(gb, h, p2, "fc1", two_mul=True)
+        gb.add_output(y, "int8", (None, 8))
+        model = gb.build()
+        xq = quant.quantize(x, scale_x, "int8")
+        cm = compile_model(model, backend="interpret")
+        steps = [s for s in cm.plan.steps if s.kernel == "qlinear_matmul"]
+        uint8_steps = [s for s in steps if s.params.get("x_uint8")]
+        assert len(uint8_steps) == 1  # the second layer consumes uint8
+        ref = ReferenceRuntime(model).run({"input_q": xq})[y]
+        np.testing.assert_array_equal(cm.run({"input_q": xq})[y], ref)
+
+
+class TestSlotPlanning:
+    def test_elementwise_chain_runs_in_one_slot(self):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (None, 16))
+        t = x
+        for _ in range(6):
+            t = gb.op("Relu", [t], out_hint="r")
+        gb.add_output(t, "float32", (None, 16))
+        model = gb.build()
+        cm = compile_model(model, fuse=False, optimize=False)
+        assert cm.plan.num_slots == 1  # every step aliases its input's slot
+        xv = np.random.default_rng(0).normal(size=(4, 16)).astype(np.float32)
+        np.testing.assert_array_equal(
+            cm.run({"x": xv})[t], ReferenceRuntime(model).run({"x": xv})[t]
+        )
+
+    def test_multi_consumer_tensor_not_freed_early(self):
+        """Diamond: r feeds two later steps — its slot must survive until the
+        second read."""
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (None, 8))
+        c = gb.add_initializer("c", np.float32(2.0))
+        r = gb.op("Relu", [x], out_hint="r")
+        m = gb.op("Mul", [r, c], out_hint="m")
+        a = gb.op("Add", [r, m], out_hint="a")
+        gb.add_output(a, "float32", (None, 8))
+        model = gb.build()
+        cm = compile_model(model, fuse=False, optimize=False)
+        assert cm.plan.num_slots >= 2
+        xv = np.random.default_rng(1).normal(size=(4, 8)).astype(np.float32)
+        np.testing.assert_array_equal(
+            cm.run({"x": xv})[a], ReferenceRuntime(model).run({"x": xv})[a]
+        )
+
+    def test_mlp_uses_fewer_slots_than_tensors(self):
+        rng = np.random.default_rng(3)
+        model, xq = _mlp(rng)
+        cm = compile_model(model)
+        plan = cm.plan
+        n_tensors = len({t for s in plan.steps for t in s.outputs}) + len(plan.inputs)
+        assert plan.num_slots < n_tensors
+        assert cm.stats["plan_slots"] == plan.num_slots
+
+    def test_graph_output_slot_is_pinned(self):
+        """A tensor that is both consumed downstream and a graph output keeps
+        its slot to the end."""
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (None, 8))
+        r = gb.op("Relu", [x], out_hint="r")
+        s = gb.op("Sqrt", [r], out_hint="s")
+        gb.add_output(r, "float32", (None, 8))
+        gb.add_output(s, "float32", (None, 8))
+        model = gb.build()
+        cm = compile_model(model, fuse=False, optimize=False)
+        xv = np.abs(np.random.default_rng(2).normal(size=(4, 8))).astype(np.float32)
+        got = cm.run({"x": xv})
+        ref = ReferenceRuntime(model).run({"x": xv})
+        for k in ref:
+            np.testing.assert_allclose(got[k], ref[k], rtol=1e-6)
+
+
+class TestExecutors:
+    def test_slot_plan_matches_dict_env_baseline(self):
+        rng = np.random.default_rng(4)
+        model, xq = _mlp(rng)
+        cm = compile_model(model)
+        feeds = {"input_q": jnp.asarray(xq)}
+        a = jax.jit(cm.plan.execute)(feeds)
+        b = jax.jit(cm.plan.execute_dict_env)(feeds)
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+class TestRegistry:
+    def test_shared_fallback_resolution(self):
+        impl_ref = lookup("ref", "op.Relu")
+        impl_pallas = lookup("pallas", "op.Relu")
+        assert impl_ref is impl_pallas  # both hit the "*" registration
+
+    def test_backend_specific_beats_fallback(self):
+        assert lookup("ref", "qlinear_matmul") is not lookup("interpret", "qlinear_matmul")
+
+    def test_unknown_kernel_raises(self):
+        with pytest.raises(UnknownKernelError, match="nope"):
+            lookup("ref", "nope")
+
+    def test_fused_kernels_cover_all_backends(self):
+        assert backends_for("qlinear_matmul") == ["interpret", "pallas", "ref"]
+        assert backends_for("qact_lut") == ["interpret", "pallas", "ref"]
+        assert "op.MatMulInteger" in kernel_ids() and "op.Slice" in kernel_ids()
+
+
+class TestPlanInspection:
+    def test_pretty_print_is_the_codesign_artifact(self):
+        rng = np.random.default_rng(5)
+        model, xq = _mlp(rng)
+        cm = compile_model(model, backend="interpret")
+        text = str(cm.plan)
+        assert "ExecutionPlan(backend=interpret" in text
+        assert "qlinear_matmul" in text
+        assert "%0" in text and "int8" in text
+        assert "inputs:" in text and "outputs:" in text
+        assert repr(cm.plan).startswith("ExecutionPlan(")
+
+    def test_step_typing_from_analysis(self):
+        rng = np.random.default_rng(6)
+        model, xq, y = _fc_model(rng, n_in=64, n_out=32, batch=8)
+        cm = compile_model(model)
+        (step,) = [s for s in cm.plan.steps if s.kernel == "qlinear_matmul"]
+        (info,) = step.out_info
+        assert info.dtype == "int8"
+        assert info.shape == (8, 32)

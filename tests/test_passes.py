@@ -14,7 +14,7 @@ from repro.core import patterns, pqir, quant
 from repro.core.compile import compile_model
 from repro.core.runtime import ReferenceRuntime
 from repro.core.toolchain import CNNSpec, ConvLayerSpec, MLPSpec, quantize_cnn, quantize_mlp
-from repro.passes.canonicalize import ConstantFold, DeadCode, IdentityElim, MulFold, QdqCancel
+from repro.passes.canonicalize import AddFold, ConstantFold, DeadCode, IdentityElim, MulFold, QdqCancel
 from repro.passes.sink import SinkShapes
 
 
@@ -161,6 +161,83 @@ class TestMulFold:
         assert counters["folded"] == 0
 
 
+class TestAddFold:
+    def _bias_chain(self, c1, c2, dtype="int32", xdtype="int32"):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", xdtype, (None, 4))
+        a = gb.add_initializer("b1", np.asarray(c1, dtype))
+        b = gb.add_initializer("b2", np.asarray(c2, dtype))
+        a1 = gb.op("Add", [x, a], out_hint="a1")
+        a2 = gb.op("Add", [a1, b], out_hint="a2")
+        gb.add_output(a2, xdtype, (None, 4))
+        return gb.build(), a2
+
+    def test_folds_integer_bias_pair_bitexact(self):
+        model, y = self._bias_chain([1, 2, 3, 4], [10, 20, 30, 40])
+        opt, counters = _run_one(AddFold(), model)
+        assert counters == {"folded": 1, "eliminated": 1}
+        assert _ops(opt.graph) == ["Add"]
+        x = np.random.default_rng(0).integers(-(2**20), 2**20, (16, 4)).astype(np.int32)
+        np.testing.assert_array_equal(
+            ReferenceRuntime(model).run({"x": x})[y], ReferenceRuntime(opt).run({"x": x})[y]
+        )
+
+    def test_wraparound_stays_exact(self):
+        """Two's-complement associativity: folding is exact even when the
+        intermediate sum overflows int32."""
+        big = np.iinfo(np.int32).max - 1
+        model, y = self._bias_chain([big] * 4, [big] * 4)
+        opt, counters = _run_one(AddFold(), model)
+        assert counters["folded"] == 1
+        x = np.random.default_rng(1).integers(-100, 100, (8, 4)).astype(np.int32)
+        with np.errstate(over="ignore"):
+            np.testing.assert_array_equal(
+                ReferenceRuntime(model).run({"x": x})[y], ReferenceRuntime(opt).run({"x": x})[y]
+            )
+
+    def test_narrow_consts_fold_in_compute_dtype(self):
+        """Regression: c1 = c2 = int8 100 feeding an int32 x must fold to
+        +200 (the sequential adds compute at int32), not wrap to -56 in
+        int8."""
+        model, y = self._bias_chain([100] * 4, [100] * 4, dtype="int8", xdtype="int32")
+        opt, counters = _run_one(AddFold(), model)
+        assert counters["folded"] == 1
+        folded_c = next(v for k, v in opt.graph.initializers.items() if "folded_bias" in k)
+        assert folded_c.dtype == np.int32 and int(folded_c[0]) == 200
+        x = np.random.default_rng(2).integers(-100, 100, (8, 4)).astype(np.int32)
+        np.testing.assert_array_equal(
+            ReferenceRuntime(model).run({"x": x})[y], ReferenceRuntime(opt).run({"x": x})[y]
+        )
+
+    def test_refuses_widening_second_add(self):
+        """(x_int8 + c1_int8) wraps at int8 before the int32 second add sees
+        it — folding at int32 would skip that wraparound, so keep the pair."""
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "int8", (None, 4))
+        a = gb.add_initializer("b1", np.asarray([100] * 4, np.int8))
+        b = gb.add_initializer("b2", np.asarray([100] * 4, np.int32))
+        a1 = gb.op("Add", [x, a], out_hint="a1")
+        a2 = gb.op("Add", [a1, b], out_hint="a2")
+        gb.add_output(a2, "int32", (None, 4))
+        model = gb.build()
+        _, counters = _run_one(AddFold(), model)
+        assert counters["folded"] == 0
+
+    def test_refuses_float_pair(self):
+        """Float addition does not associate — the pair must be kept."""
+        model, _ = self._bias_chain([0.1] * 4, [0.2] * 4, dtype="float32", xdtype="float32")
+        _, counters = _run_one(AddFold(), model)
+        assert counters["folded"] == 0
+
+    def test_idempotent_in_pipeline(self):
+        model, _ = self._bias_chain([1, 2, 3, 4], [10, 20, 30, 40])
+        once, rep1 = passes.optimize(model)
+        twice, rep2 = passes.optimize(once)
+        assert rep1.total("folded") >= 1
+        assert not rep2.changed
+        assert json.dumps(once.to_json()) == json.dumps(twice.to_json())
+
+
 class TestIdentityAndDeadCode:
     def test_same_dtype_cast_and_mul_by_one(self):
         gb = pqir.GraphBuilder("g")
@@ -244,6 +321,37 @@ class TestSinkShapes:
         np.testing.assert_array_equal(
             ReferenceRuntime(model).run({"x": xv})[r], ReferenceRuntime(opt).run({"x": xv})[r]
         )
+
+    def test_flatten_sinks_past_relu_golden(self):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (2, 3, 4))
+        f = gb.op("Flatten", [x], out_hint="f", axis=1)
+        r = gb.op("Relu", [f], out_hint="r")
+        gb.add_output(r, "float32", (2, 12))
+        model = gb.build()
+        opt, counters = _run_one(SinkShapes(), model)
+        assert counters["sunk"] == 1
+        assert _ops(opt.graph) == ["Relu", "Flatten"]
+        xv = np.random.default_rng(2).normal(size=(2, 3, 4)).astype(np.float32)
+        np.testing.assert_array_equal(
+            ReferenceRuntime(model).run({"x": xv})[r], ReferenceRuntime(opt).run({"x": xv})[r]
+        )
+
+    def test_flatten_sink_idempotent_in_pipeline(self):
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "float32", (2, 3, 4))
+        c = gb.add_initializer("c", np.float32(0.5))
+        f = gb.op("Flatten", [x], out_hint="f", axis=1)
+        m = gb.op("Mul", [f, c], out_hint="m")
+        r = gb.op("Relu", [m], out_hint="r")
+        gb.add_output(r, "float32", (2, 12))
+        model = gb.build()
+        once, rep1 = passes.optimize(model)
+        twice, rep2 = passes.optimize(once)
+        assert rep1.total("sunk") == 2  # Flatten sinks past Mul, then Relu
+        assert not rep2.changed
+        assert json.dumps(once.to_json()) == json.dumps(twice.to_json())
+        assert _ops(once.graph) == ["Mul", "Relu", "Flatten"]
 
     def test_per_channel_operand_blocks_sinking(self):
         gb = pqir.GraphBuilder("g")
