@@ -14,13 +14,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
   sys_plan_overhead      — slot-indexed ExecutionPlan execution vs the old
                            name-keyed dict-env interpretation of the same
                            kernels (derived: slot/tensor counts)
+  sys_per_channel_overhead — per-channel vs scalar fused requant on the same
+                           FC layer (derived: ratio; pinned at near-parity)
   sys_w8a8_decode        — reduced-arch decode step: bf16 vs W8A8+int8-KV
   sys_grad_compress      — int8 cross-pod gradient all-reduce (derived: wire-
                            bytes ratio vs f32)
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--smoke]
 
-``--smoke`` runs the fast subset (fig1, pass pipeline, plan overhead) for CI.
+``--smoke`` runs the fast subset (fig1, pass pipeline, plan overhead,
+per-channel overhead) for CI.
 """
 from __future__ import annotations
 
@@ -252,6 +255,39 @@ def bench_plan_overhead():
     )
 
 
+def bench_per_channel_overhead():
+    """Per-channel fused requant vs scalar: the epilogue multiplies by a
+    pre-padded (1, np) vector either way (scalars are broadcast at plan
+    time), so per-channel quantization should ride the fused kernels at
+    (near-)parity — this row pins that."""
+    from repro.core import patterns, pqir, quant
+    from repro.core.compile import compile_model
+
+    rng = np.random.default_rng(6)
+    w = rng.normal(size=(256, 256)).astype(np.float32) * 0.05
+    b = rng.normal(size=(256,)).astype(np.float32) * 0.1
+    xq = rng.integers(-128, 128, (64, 256)).astype(np.int8)
+
+    def build(per_channel):
+        p = quant.quantize_linear_layer(w, b, 0.05, 0.1, per_channel=per_channel)
+        gb = pqir.GraphBuilder("bench_pc")
+        xi = gb.add_input("x", "int8", (None, 256))
+        y = patterns.fc_layer(gb, xi, p, "fc0", two_mul=True, activation="Relu")
+        gb.add_output(y, "int8", (None, 256))
+        return compile_model(gb.build())
+
+    cm_scalar, cm_pc = build(False), build(True)
+    assert cm_scalar.stats["fused_qlinear"] == 1 and cm_pc.stats["fused_qlinear"] == 1
+    us_scalar = _timeit(lambda: cm_scalar.run({"x": xq}))
+    us_pc = _timeit(lambda: cm_pc.run({"x": xq}))
+    row(
+        "sys_per_channel_overhead",
+        us_scalar,
+        f"per_channel_us={us_pc:.1f};ratio={us_pc / us_scalar:.2f}x;"
+        f"fused_scalar={cm_scalar.stats['fused_qlinear']};fused_pc={cm_pc.stats['fused_qlinear']}",
+    )
+
+
 def bench_grad_compress():
     import jax
     import jax.numpy as jnp
@@ -295,6 +331,7 @@ def main(argv=None) -> None:
         bench_rescale_table()
     bench_pass_pipeline()
     bench_plan_overhead()
+    bench_per_channel_overhead()
     if not args.smoke:
         bench_w8a8_decode()
         bench_grad_compress()

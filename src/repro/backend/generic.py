@@ -154,6 +154,18 @@ def _j_gemm(attrs, ins):
         a = a.T
     if attrs.get("transB", 0):
         b = b.T
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        # integer Gemm: int32 accumulation, alpha/beta fixed at 1 (dialect
+        # rule mirrored from repro.core.runtime)
+        if float(attrs.get("alpha", 1.0)) != 1.0 or float(attrs.get("beta", 1.0)) != 1.0:
+            raise NotImplementedError("integer Gemm requires alpha == beta == 1")
+        y = jax.lax.dot_general(
+            a.astype(jnp.int32), b.astype(jnp.int32),
+            (((a.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.int32,
+        )
+        if len(ins) > 2 and ins[2] is not None:
+            y = y + ins[2].astype(jnp.int32)
+        return [y]
     y = float(attrs.get("alpha", 1.0)) * (a @ b)
     if len(ins) > 2 and ins[2] is not None:
         y = y + float(attrs.get("beta", 1.0)) * ins[2]

@@ -20,7 +20,14 @@ three-level flow (QNN / onnx-mlir style multi-level lowering):
      QLINEAR_PATTERN: {MatMulInteger|ConvInteger → [Add] → Cast(f32) →
                        Mul [→ Mul] → [Relu] → QuantizeLinear(1,0)}
          ⇒ one fused int8 MXU kernel (repro.kernels.qmatmul), or XLA int8
-           conv + fused epilogue (repro.kernels.ops.quantized_conv2d)
+           conv + fused epilogue (repro.kernels.ops.quantized_conv2d).
+           The rescale Mul constants may be scalar or per-channel vectors
+           along the output-feature axis; per-channel multiplier/shift
+           arrays ride through plan-time specialization pre-padded to tile
+           multiples like every other qmatmul parameter.
+     GEMM_PATTERN:    same epilogue anchored on an integer Gemm (the form
+                      Gemm-based MLP exports emit) ⇒ same fused kernel;
+                      transB and the C bias operand fold at plan time.
      LUT_PATTERN:     {DequantizeLinear(int8) → [Cast f16] → Tanh|Sigmoid →
                        [Cast f32] → QuantizeLinear}
          ⇒ exact 256-entry VMEM LUT (repro.kernels.qact_lut), built with
@@ -95,17 +102,51 @@ def _dql_int8_sym(ga: GraphAnalysis, node: Node) -> bool:
     return ga.dtype(node.inputs[0]) == "int8" and _is_sym_scalar_q(ga, node)
 
 
+def _gemm_q_anchor(ga: GraphAnalysis, node: Node) -> bool:
+    """Integer Gemm usable as a fused-qlinear core: int8/uint8 activation,
+    constant 2-D int8 weight, optional constant integer bias, default
+    alpha/beta, no transA (transB folds into the constant at plan time)."""
+    if ga.dtype(node.inputs[0]) not in ("int8", "uint8"):
+        return False
+    if node.attrs.get("transA", 0):
+        return False
+    if float(node.attrs.get("alpha", 1.0)) != 1.0 or float(node.attrs.get("beta", 1.0)) != 1.0:
+        return False
+    w = ga.const(node.inputs[1])
+    if w is None or w.ndim != 2 or w.dtype != np.int8:
+        return False
+    if len(node.inputs) > 2 and node.inputs[2]:
+        c = ga.const(node.inputs[2])
+        if c is None or not np.issubdtype(c.dtype, np.integer):
+            return False
+    return True
+
+
+#: The Fig 1/2 epilogue every qlinear core shares:
+#: [Add bias] → Cast(f32) → Mul [→ Mul] → [Relu] → QuantizeLinear(1, 0).
+#: The Mul constants may be scalars or per-channel vectors along the
+#: output-feature axis — the builder validates the broadcast direction.
+_QL_EPILOGUE = (
+    OpSpec("Add", capture="bias", optional=True, const_operand="bias_c"),
+    OpSpec("Cast", attrs={"to": "float32"}),
+    OpSpec("Mul", capture="mul1", const_operand="mul1_c"),
+    OpSpec("Mul", capture="mul2", optional=True, const_operand="mul2_c"),
+    OpSpec("Relu", capture="relu", optional=True),
+    OpSpec("QuantizeLinear", capture="ql", where=_is_round_clip_ql),
+)
+
 QLINEAR_PATTERN = Pattern(
     "qlinear",
-    (
-        OpSpec(("MatMulInteger", "ConvInteger"), capture="core", arity=2, const_inputs={1: "weight"}),
-        OpSpec("Add", capture="bias", optional=True, const_operand="bias_c"),
-        OpSpec("Cast", attrs={"to": "float32"}),
-        OpSpec("Mul", capture="mul1", const_operand="mul1_c"),
-        OpSpec("Mul", capture="mul2", optional=True, const_operand="mul2_c"),
-        OpSpec("Relu", capture="relu", optional=True),
-        OpSpec("QuantizeLinear", capture="ql", where=_is_round_clip_ql),
-    ),
+    (OpSpec(("MatMulInteger", "ConvInteger"), capture="core", arity=2, const_inputs={1: "weight"}),)
+    + _QL_EPILOGUE,
+)
+
+#: Gemm-codified FC chains (some MLP exporters emit one integer Gemm instead
+#: of MatMulInteger + Add) lower onto the same fused qlinear kernel.
+GEMM_PATTERN = Pattern(
+    "qlinear_gemm",
+    (OpSpec("Gemm", capture="core", const_inputs={1: "weight"}, where=_gemm_q_anchor),)
+    + _QL_EPILOGUE,
 )
 
 LUT_PATTERN = Pattern(
@@ -122,6 +163,31 @@ LUT_PATTERN = Pattern(
 )
 
 
+def _channel_const(c, n_out: int, tail: int, acc_ndim: Optional[int]) -> Optional[np.ndarray]:
+    """Normalize a captured epilogue constant to a scalar ``()`` or an
+    ``(n_out,)`` vector that broadcasts along the accumulator's
+    output-feature axis (``tail`` = trailing spatial singleton dims: 0 for
+    the (..., N) matmul layout, 2 for conv's NCHW).  Any other broadcast
+    direction (per-row constants, rank-expanding constants whose extra
+    leading dims would grow the output shape) returns None — the chain then
+    stays unfused rather than fusing incorrectly.  ``acc_ndim`` is the
+    accumulator rank when statically known (None ⇒ only rank ≤ 1 constants
+    are provably non-expanding)."""
+    c = np.asarray(c)
+    if c.ndim > (acc_ndim if acc_ndim is not None else 1):
+        return None  # broadcasting would prepend dims to the output
+    if c.size == 1:
+        return c.reshape(())
+    shape = c.shape
+    if tail:
+        if len(shape) <= tail or any(d != 1 for d in shape[len(shape) - tail:]):
+            return None
+        shape = shape[: len(shape) - tail]
+    if not shape or shape[-1] != c.size or c.size != n_out:
+        return None
+    return c.reshape(-1)
+
+
 def _static_m(shape) -> Optional[int]:
     """Product of the leading (batch) dims if fully known, else None."""
     if shape is None or len(shape) < 1:
@@ -135,25 +201,53 @@ def _static_m(shape) -> Optional[int]:
     return m
 
 
-def _build_qlinear(compiler: "Compiler", m: Match) -> StepDraft:
-    """Lower a QLINEAR_PATTERN match onto the fused int8 matmul / conv,
-    shape-specializing the matmul parameters at plan time."""
+def _build_qlinear(compiler: "Compiler", m: Match) -> Optional[StepDraft]:
+    """Lower a QLINEAR/GEMM_PATTERN match onto the fused int8 matmul / conv,
+    shape-specializing the matmul parameters at plan time.  Returns None
+    (fall back unfused) when an epilogue constant does not broadcast along
+    the output-feature axis."""
     core = m.anchor
     is_conv = core.op_type == "ConvInteger"
+    is_gemm = core.op_type == "Gemm"
     ga = compiler.analysis
     zp = ga.const(m.node("ql").inputs[2]) if len(m.node("ql").inputs) > 2 else np.zeros((), np.int8)
     out_dtype = str(np.asarray(zp).dtype)
     relu = m.node("relu") is not None
 
-    muls = [np.asarray(m.consts["mul1_c"], np.float32)]
-    if "mul2" in m:
-        muls.append(np.asarray(m.consts["mul2_c"], np.float32))
-    two_mul = len(muls) == 2
-    qs = muls[0]
-    qsh = muls[1] if two_mul else np.float32(1.0)
     w = np.asarray(m.consts["weight"])
-    bias = m.consts.get("bias_c")
-    b = None if bias is None else np.asarray(bias).reshape(-1).astype(np.int32)
+    if is_gemm and core.attrs.get("transB", 0):
+        w = np.ascontiguousarray(w.T)
+    n_out = int(w.shape[0]) if is_conv else int(w.shape[1])
+    tail = 2 if is_conv else 0
+    # conv accumulators are NCHW by construction; matmul/Gemm rank comes from
+    # shape inference (unknown ⇒ _channel_const only admits rank ≤ 1 consts)
+    acc_shape = ga.shape(core.outputs[0])
+    acc_ndim = 4 if is_conv else (len(acc_shape) if acc_shape is not None else None)
+
+    two_mul = "mul2" in m
+    qs = _channel_const(np.asarray(m.consts["mul1_c"], np.float32), n_out, tail, acc_ndim)
+    qsh = (
+        _channel_const(np.asarray(m.consts["mul2_c"], np.float32), n_out, tail, acc_ndim)
+        if two_mul else np.float32(1.0)
+    )
+    if qs is None or qsh is None:
+        return None
+
+    b = None
+    if is_gemm and len(core.inputs) > 2 and core.inputs[2]:
+        b = _channel_const(ga.const(core.inputs[2]), n_out, 0, acc_ndim)
+        if b is None:
+            return None
+        b = b.astype(np.int32)
+    add_c = m.consts.get("bias_c")
+    if add_c is not None:
+        bc = _channel_const(add_c, n_out, tail, acc_ndim)
+        if bc is None:
+            return None
+        # int32 addition wraps associatively, so folding the Gemm C operand
+        # and a trailing Add into one bias is exact even under overflow
+        with np.errstate(over="ignore"):
+            b = bc.astype(np.int32) if b is None else b + bc.astype(np.int32)
     x_name = core.inputs[0]
     params = {"out_dtype": out_dtype, "relu": relu, "two_mul": two_mul}
 
@@ -222,6 +316,7 @@ def _build_lut(compiler: "Compiler", m: Match) -> StepDraft:
 #: New fusions plug in here — describe the chain as data, lower in a builder.
 FUSIONS = (
     (QLINEAR_PATTERN, _build_qlinear),
+    (GEMM_PATTERN, _build_qlinear),
     (LUT_PATTERN, _build_lut),
 )
 

@@ -28,6 +28,17 @@ TANH_INPUT_ABSMAX = 4.0  # |tanh(4)| ≈ 0.9993: "full input range of tanh"
 SIGMOID_INPUT_ABSMAX = 8.0
 
 
+def _codify_scale(value, channel_tail: int) -> np.ndarray:
+    """A rescale constant as codified in the artifact: a f32 scalar, or — per
+    channel — a f32 vector reshaped to broadcast along the output-feature
+    axis (``channel_tail`` trailing singleton dims: 0 for FC's (..., N)
+    accumulators, 2 for conv's NCHW)."""
+    v = np.asarray(value, np.float32)
+    if v.ndim == 0:
+        return v
+    return v.reshape((-1,) + (1,) * channel_tail)
+
+
 def emit_rescale(
     gb: GraphBuilder,
     x: str,
@@ -35,17 +46,22 @@ def emit_rescale(
     prefix: str,
     *,
     two_mul: bool = True,
+    channel_tail: int = 0,
 ) -> str:
     """Cast(int32→f32) then the §3.1 codification: 2 Muls (integer scale +
-    right-shift) or 1 Mul (plain fp32 multiplier)."""
+    right-shift) or 1 Mul (plain fp32 multiplier).
+
+    ``rescale`` may be a per-channel :class:`repro.core.quant.RescaleVector`,
+    in which case the Mul constants are vectors along the output-feature axis
+    (``channel_tail`` positions the channel axis for conv's NCHW layout)."""
     f = gb.op("Cast", [x], out_hint=f"{prefix}_f32", to="float32")
     if two_mul:
-        qs = gb.add_initializer(f"{prefix}_quant_scale", np.float32(rescale.quant_scale))
-        sh = gb.add_initializer(f"{prefix}_quant_shift", np.float32(rescale.quant_shift))
+        qs = gb.add_initializer(f"{prefix}_quant_scale", _codify_scale(rescale.quant_scale, channel_tail))
+        sh = gb.add_initializer(f"{prefix}_quant_shift", _codify_scale(rescale.quant_shift, channel_tail))
         f = gb.op("Mul", [f, qs], out_hint=f"{prefix}_scaled")
         f = gb.op("Mul", [f, sh], out_hint=f"{prefix}_shifted")
     else:
-        m = gb.add_initializer(f"{prefix}_quant_multiplier", np.float32(rescale.multiplier))
+        m = gb.add_initializer(f"{prefix}_quant_multiplier", _codify_scale(rescale.multiplier, channel_tail))
         f = gb.op("Mul", [f, m], out_hint=f"{prefix}_scaled")
     return f
 
@@ -81,6 +97,32 @@ def fc_layer(
     return emit_round_clip(gb, f, prefix, p.out_dtype)
 
 
+def fc_layer_gemm(
+    gb: GraphBuilder,
+    x: str,
+    p: QuantizedLinearParams,
+    prefix: str,
+    *,
+    two_mul: bool = True,
+    activation: Optional[str] = None,
+    trans_b: bool = False,
+) -> str:
+    """The Fig 1/2 pattern as some MLP exporters codify it: one integer
+    ``Gemm`` (X @ W [+ B], int32 accumulation, alpha = beta = 1) instead of
+    MatMulInteger + Add.  Compiles onto the same fused qlinear kernel."""
+    w_q = p.weight_q.T if trans_b else p.weight_q
+    w = gb.add_initializer(f"{prefix}_weight_q", np.ascontiguousarray(w_q))
+    ins = [x, w]
+    if p.bias_q is not None:
+        ins.append(gb.add_initializer(f"{prefix}_bias_q", p.bias_q))
+    attrs = {"transB": 1} if trans_b else {}
+    acc = gb.op("Gemm", ins, out_hint=f"{prefix}_acc", **attrs)
+    f = emit_rescale(gb, acc, p.rescale, prefix, two_mul=two_mul)
+    if activation is not None:
+        f = gb.op(activation, [f], out_hint=f"{prefix}_{activation.lower()}")
+    return emit_round_clip(gb, f, prefix, p.out_dtype)
+
+
 def conv_layer(
     gb: GraphBuilder,
     x: str,
@@ -96,13 +138,14 @@ def conv_layer(
     out_dtype: str = "int8",
 ) -> str:
     """Fig 3 convolution pattern.  ``weight_q`` is (M, C, kH, kW) int8;
-    ``bias_q`` is int32 (M,), added broadcast as (1, M, 1, 1)."""
+    ``bias_q`` is int32 (M,), added broadcast as (1, M, 1, 1).  ``rescale``
+    may be per-channel (one multiplier per output channel M)."""
     w = gb.add_initializer(f"{prefix}_weight_q", weight_q)
     acc = gb.op("ConvInteger", [x, w], out_hint=f"{prefix}_acc", strides=list(strides), pads=list(pads))
     if bias_q is not None:
         b = gb.add_initializer(f"{prefix}_bias_q", bias_q.reshape(1, -1, 1, 1).astype(np.int32))
         acc = gb.op("Add", [acc, b], out_hint=f"{prefix}_biased")
-    f = emit_rescale(gb, acc, rescale, prefix, two_mul=two_mul)
+    f = emit_rescale(gb, acc, rescale, prefix, two_mul=two_mul, channel_tail=2)
     if activation is not None:
         f = gb.op(activation, [f], out_hint=f"{prefix}_{activation.lower()}")
     return emit_round_clip(gb, f, prefix, out_dtype)

@@ -72,6 +72,15 @@ def choose_scale(absmax: float, dtype: str = "int8") -> float:
     return absmax / float(qmax)
 
 
+def choose_scales(absmax: np.ndarray, dtype: str = "int8") -> np.ndarray:
+    """Vector form of :func:`choose_scale`: one scale per channel, with the
+    same degenerate-range guard (non-positive / non-finite absmax → 1.0)."""
+    absmax = np.asarray(absmax, np.float64)
+    qmax = float(qrange(dtype)[1])  # symmetric qmax for int8, full 255 for uint8
+    ok = np.isfinite(absmax) & (absmax > 0.0)
+    return np.where(ok, absmax / qmax, 1.0).astype(np.float32)
+
+
 def quantize(x: np.ndarray, scale: Union[float, np.ndarray], dtype: str = "int8") -> np.ndarray:
     """X_q = saturate(round(X / scale)) — eq. (1) inverted, with round+clip."""
     scale = np.asarray(scale, dtype=np.float32)
@@ -117,6 +126,61 @@ class Rescale:
     def realized(self) -> float:
         """The multiplier value actually realized by (quant_scale, shift)."""
         return float(self.quant_scale) * self.quant_shift
+
+    @property
+    def per_channel(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class RescaleVector:
+    """Per-channel §3.1 rescale: one (quant_scale, shift) pair per output
+    channel, codified as two *vector* Mul constants along the output-feature
+    axis.  Same exactness contract as :class:`Rescale`, applied elementwise:
+    every ``quant_scale`` is an integer ≤ 2**24 (exact as FLOAT) and every
+    ``quant_shift`` is a power of two."""
+
+    quant_scale: np.ndarray  # int64 (C,) — integer values, stored as FLOAT in the artifact
+    shift: np.ndarray  # int64 (C,) — per-channel right bit-shift N
+    multiplier: np.ndarray  # float32 (C,) — original fp32 multipliers
+
+    @property
+    def quant_shift(self) -> np.ndarray:
+        """The FLOAT vector codified in the second Mul: 2**-shift per channel."""
+        return (2.0 ** (-self.shift.astype(np.float64))).astype(np.float32)
+
+    @property
+    def realized(self) -> np.ndarray:
+        return self.quant_scale.astype(np.float64) * 2.0 ** (-self.shift.astype(np.float64))
+
+    @property
+    def per_channel(self) -> bool:
+        return True
+
+    def __len__(self) -> int:
+        return int(self.quant_scale.shape[0])
+
+
+def decompose_multipliers(
+    multipliers: np.ndarray,
+    *,
+    max_scale_bits: int = 24,
+    reduce: bool = False,
+    max_shift: int = 62,
+) -> RescaleVector:
+    """Per-channel §3.1 decomposition: apply :func:`decompose_multiplier` to
+    each channel's multiplier independently (each channel gets its own shift,
+    maximizing per-channel precision)."""
+    ms = np.asarray(multipliers, dtype=np.float64).reshape(-1)
+    parts = [
+        decompose_multiplier(float(m), max_scale_bits=max_scale_bits, reduce=reduce, max_shift=max_shift)
+        for m in ms
+    ]
+    return RescaleVector(
+        quant_scale=np.asarray([p.quant_scale for p in parts], np.int64),
+        shift=np.asarray([p.shift for p in parts], np.int64),
+        multiplier=ms.astype(np.float32),
+    )
 
 
 def decompose_multiplier(
@@ -175,13 +239,16 @@ def apply_rescale_reference(
     QuantizeLinear(scale=1, zp=0) ≡ round-half-even + saturate.
     With ``two_mul=False`` a single Mul by the fp32 multiplier is used
     (the paper's 1-Mul codification).
+
+    ``rescale`` may be a per-channel :class:`RescaleVector`; its vectors
+    broadcast along the accumulator's last (output-feature) axis.
     """
     x = acc_i32.astype(np.float32)
     if two_mul:
-        x = x * np.float32(rescale.quant_scale)
-        x = x * np.float32(rescale.quant_shift)
+        x = x * np.asarray(rescale.quant_scale, np.float32)
+        x = x * np.asarray(rescale.quant_shift, np.float32)
     else:
-        x = x * np.float32(rescale.multiplier)
+        x = x * np.asarray(rescale.multiplier, np.float32)
     return saturate(round_half_even(x), out_dtype)
 
 
@@ -194,7 +261,7 @@ class QuantizedLinearParams:
     scale_x: float
     scale_w: np.ndarray  # scalar or per-channel (out,)
     scale_y: float
-    rescale: Rescale
+    rescale: Union[Rescale, RescaleVector]  # RescaleVector iff per_channel
     in_dtype: str = "int8"  # int8 or uint8 activations
     out_dtype: str = "int8"
 
@@ -221,14 +288,18 @@ def quantize_linear_layer(
     """
     w = np.asarray(w, dtype=np.float32)
     if per_channel:
-        absmax = np.maximum(np.abs(w).max(axis=0), 1e-12)
-        scale_w = (absmax / 127.0).astype(np.float32)
+        scale_w = choose_scales(np.abs(w).max(axis=0), "int8")
     else:
         scale_w = np.float32(choose_scale(float(np.abs(w).max()), "int8"))
     w_q = quantize(w, scale_w, "int8")
     b_q = None if b is None else quantize_bias(b, scale_w, scale_x)
-    mult = float(np.max(scale_w)) * scale_x / scale_y if per_channel else float(scale_w) * scale_x / scale_y
-    rescale = decompose_multiplier(mult, reduce=reduce)
+    if per_channel:
+        # True per-channel rescale: every output channel carries its own
+        # multiplier M_c = scale_w[c] * scale_x / scale_y, decomposed
+        # independently into (quant_scale_c, shift_c).
+        rescale = decompose_multipliers(scale_w.astype(np.float64) * scale_x / scale_y, reduce=reduce)
+    else:
+        rescale = decompose_multiplier(float(scale_w) * scale_x / scale_y, reduce=reduce)
     return QuantizedLinearParams(
         weight_q=w_q,
         bias_q=b_q,

@@ -207,6 +207,16 @@ def _gemm(node: Node, inputs):
         a = a.T
     if node.attrs.get("transB", 0):
         b = b.T
+    if np.issubdtype(a.dtype, np.integer):
+        # Integer Gemm (the form quantized MLP exporters emit in place of
+        # MatMulInteger + Add): accumulate in int32; alpha/beta must be the
+        # default 1 so the op stays exact.
+        if alpha != 1.0 or beta != 1.0:
+            raise NotImplementedError("integer Gemm requires alpha == beta == 1")
+        y = a.astype(np.int32) @ b.astype(np.int32)
+        if len(inputs) > 2 and inputs[2] is not None:
+            y = y + inputs[2].astype(np.int32)
+        return [y]
     y = alpha * (a @ b)
     if len(inputs) > 2 and inputs[2] is not None:
         y = y + beta * inputs[2]

@@ -16,7 +16,15 @@ import numpy as np
 from . import patterns
 from .calibrate import make_observer
 from .pqir import GraphBuilder, Model
-from .quant import choose_scale, quantize, quantize_linear_layer
+from .quant import (
+    choose_scale,
+    choose_scales,
+    decompose_multiplier,
+    decompose_multipliers,
+    quantize,
+    quantize_bias,
+    quantize_linear_layer,
+)
 
 
 @dataclasses.dataclass
@@ -149,9 +157,12 @@ def quantize_cnn(
     observer: str = "absmax",
     name: str = "prequantized_cnn",
     two_mul: bool = False,
+    per_channel: bool = False,
 ) -> Model:
     """Produce the paper's §5 CNN artifact (ConvInteger pattern), optionally
-    followed by a flattened FC head."""
+    followed by a flattened FC head.  With ``per_channel=True`` every conv
+    filter (output channel) and FC output feature gets its own weight scale
+    and §3.1 rescale decomposition, codified as vector Mul constants."""
     obs_in = make_observer(observer)
     obs_in.observe(calib_data)
     conv_outs = spec.forward_convs(calib_data)
@@ -166,17 +177,19 @@ def quantize_cnn(
         o = make_observer(observer)
         o.observe(out_f32)
         scale_y = choose_scale(_absmax_of(o), "int8")
-        wmax = float(np.abs(conv.weight).max())
-        scale_w = choose_scale(wmax, "int8")
-        w_q = quantize(conv.weight, scale_w, "int8")
+        if per_channel:
+            # One weight scale per conv filter (output channel M), quantized
+            # against the (C, kH, kW) slice it scales.
+            scale_w = choose_scales(np.abs(conv.weight).max(axis=(1, 2, 3)), "int8")
+            w_q = quantize(conv.weight, scale_w.reshape(-1, 1, 1, 1), "int8")
+            rescale = decompose_multipliers(scale_w.astype(np.float64) * cur_scale / scale_y)
+        else:
+            scale_w = choose_scale(float(np.abs(conv.weight).max()), "int8")
+            w_q = quantize(conv.weight, scale_w, "int8")
+            rescale = decompose_multiplier(scale_w * cur_scale / scale_y)
         b_q = None
         if conv.bias is not None:
-            from .quant import quantize_bias
-
             b_q = quantize_bias(conv.bias, scale_w, cur_scale)
-        from .quant import decompose_multiplier
-
-        rescale = decompose_multiplier(scale_w * cur_scale / scale_y)
         x = patterns.conv_layer(
             gb,
             x,
@@ -202,7 +215,9 @@ def quantize_cnn(
             o.observe(head_outs[j])
             out_dtype = "uint8" if act == "Sigmoid" else "int8"
             scale_y = choose_scale(_absmax_of(o), out_dtype)
-            p = quantize_linear_layer(wgt, b, cur_scale, scale_y, in_dtype="int8", out_dtype=out_dtype)
+            p = quantize_linear_layer(
+                wgt, b, cur_scale, scale_y, per_channel=per_channel, in_dtype="int8", out_dtype=out_dtype
+            )
             x = patterns.fc_layer(gb, x, p, f"head{j}", two_mul=two_mul, activation=act)
             cur_scale = scale_y
         gb.add_output(x, out_dtype, (None, spec.head.weights[-1].shape[1]))

@@ -20,7 +20,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.pqir import Graph, Model, Node
+from ..core.pqir import DTYPES, Graph, Model, Node
 
 Shape = Optional[Tuple[Optional[int], ...]]
 
@@ -45,6 +45,11 @@ def infer_dtypes(graph: Graph) -> Dict[str, str]:
         t = node.op_type
         if t in ("MatMulInteger", "ConvInteger"):
             dt[o] = "int32"
+        elif t == "Gemm":
+            # integer Gemm accumulates in int32 (dialect rule, see
+            # repro.core.runtime); float Gemm preserves its input dtype
+            a = dt.get(node.inputs[0], "float32")
+            dt[o] = "int32" if np.issubdtype(DTYPES.get(a, np.float32), np.integer) else a
         elif t == "QuantizeLinear":
             dt[o] = dt.get(node.inputs[2], "int8") if len(node.inputs) > 2 else "int8"
         elif t == "DequantizeLinear":

@@ -19,7 +19,10 @@ IEEE-identical, not merely close:
                        and commutes with round-to-nearest, so
                        ``RN(RN(x·c)·2**k) == RN(x·(c·2**k))``.  This is
                        precisely the paper's §3.1 quant_scale × 2**−shift
-                       rescale pair.
+                       rescale pair.  The argument is elementwise, so the
+                       constants may be scalars, per-channel vectors, or any
+                       broadcast-compatible mix — the per-channel 2**-N shift
+                       vector is a power of two in every lane.
 * ``add_fold``       — consecutive constant integer ``Add``s fold to one:
                        two's-complement addition is associative even under
                        wrap-around, so ``(x+c1)+c2 == x+(c1+c2)`` exactly for
@@ -121,6 +124,17 @@ class QdqCancel(Pass):
                     continue
                 if not (np.array_equal(s1, s2) and np.array_equal(np.asarray(z1, np.int64), np.asarray(z2, np.int64))):
                     continue
+                # per-channel scales cancel too (the round trip is exact
+                # elementwise), but only if both ops quantize along the same
+                # axis (ONNX default: 1) and the scale/zero-point constants
+                # broadcast *into* the data — a rank- or dim-expanding
+                # constant makes the chain reshape its input, so removing it
+                # would change the output shape.  (s2/z2 have identical
+                # shapes: np.array_equal above requires it.)
+                if np.asarray(s1).ndim and dql.attrs.get("axis", 1) != ql.attrs.get("axis", 1):
+                    continue
+                if not (_broadcast_preserves(ga, dql.inputs[0], s1) and _broadcast_preserves(ga, dql.inputs[0], z1)):
+                    continue
                 # The round-trip only restores x if the output integer dtype
                 # is the dtype x already has, and only for 8-bit data — wide
                 # dtypes (int32) lose bits in the f32 round trip.
@@ -163,6 +177,37 @@ def _all_pow2(a: np.ndarray) -> bool:
     return all(math.frexp(float(v))[0] == 0.5 for v in flat)
 
 
+def _broadcastable(c1: np.ndarray, c2: np.ndarray) -> bool:
+    """Whether two constants may be folded into one.  Broadcast shapes
+    compose associatively — broadcast(broadcast(x, c1), c2) ==
+    broadcast(x, broadcast(c1, c2)) — so folding two broadcast-compatible
+    constants (scalar, per-channel vector, or any mix) never changes the
+    chain's output shape or which element pairs meet.  Orthogonal vectors
+    (e.g. (1, K) × (K, 1)) are excluded: they broadcast, but the folded
+    constant would materialize their O(K²) outer product in the artifact."""
+    try:
+        folded = np.broadcast_shapes(c1.shape, c2.shape)
+    except ValueError:
+        return False
+    return int(np.prod(folded, dtype=np.int64)) <= max(c1.size, c2.size)
+
+
+def _broadcast_preserves(ga: GraphAnalysis, tensor: str, c) -> bool:
+    """True iff combining ``tensor`` with constant ``c`` cannot change the
+    tensor's shape: ``c`` broadcasts *into* it (never expands rank or any
+    size-1 dim).  Needs a known static shape for non-scalar ``c``."""
+    c = np.asarray(c)
+    if c.ndim == 0:
+        return True
+    sh = ga.shape(tensor)
+    if sh is None or c.ndim > len(sh):
+        return False
+    for cd, xd in zip(c.shape[::-1], tuple(sh)[::-1]):
+        if cd != 1 and (xd is None or cd != xd):
+            return False
+    return True
+
+
 class MulFold(Pass):
     name = "mul_fold"
 
@@ -183,10 +228,13 @@ class MulFold(Pass):
                     continue
                 # bit-exactness gate: power-of-two scaling commutes with
                 # rounding, anything else would double-round differently.
+                # Element-wise, so per-channel vectors qualify as long as
+                # *every* entry of one constant is a power of two (the §3.1
+                # per-channel decomposition makes the whole 2**-N vector so).
                 if not (_all_pow2(c1) or _all_pow2(c2)):
                     continue
-                if not (c1.size == 1 or c2.size == 1 or c1.shape == c2.shape):
-                    continue  # keep broadcasting trivially associative
+                if not _broadcastable(c1, c2):
+                    continue
                 m1, m2 = m.node("m1"), m.node("m2")
                 x_in = m1.inputs[1] if ga.is_const(m1.inputs[0]) else m1.inputs[0]
                 cname = unique_name(graph, f"{m2.outputs[0]}_folded_scale")
@@ -249,8 +297,8 @@ class AddFold(Pass):
                 xd = ga.dtype(x_in)
                 if xd is None or not np.issubdtype(DTYPES.get(xd, np.float32), np.integer):
                     continue
-                if not (c1.size == 1 or c2.size == 1 or c1.shape == c2.shape):
-                    continue  # keep broadcasting trivially associative
+                if not _broadcastable(c1, c2):
+                    continue
                 # Associativity only holds at one fixed width: the folded
                 # constant must be summed in the sequential chain's compute
                 # dtype d1 = promote(x, c1) (not promote(c1, c2) — narrow

@@ -87,6 +87,72 @@ class TestFusionBitExact:
         assert cm.stats["fused_qconv"] == 1
         np.testing.assert_array_equal(cm.run({"x": x})[y], ref_out)
 
+    def test_per_row_mul_constant_falls_back_unfused(self):
+        """A Mul constant broadcasting along the *batch* axis is not a
+        per-channel rescale — the chain must not fuse (the fused kernel only
+        knows output-feature vectors) but must still compile correctly via
+        the generic mirror."""
+        rng = np.random.default_rng(9)
+        gb = pqir.GraphBuilder("m")
+        xi = gb.add_input("x", "int8", (4, 16))
+        w = gb.add_initializer("w", rng.integers(-128, 128, (16, 8)).astype(np.int8))
+        acc = gb.op("MatMulInteger", [xi, w], out_hint="acc")
+        f = gb.op("Cast", [acc], out_hint="f", to="float32")
+        per_row = gb.add_initializer("per_row", np.full((4, 1), 2.0**-9, np.float32))
+        m = gb.op("Mul", [f, per_row], out_hint="m")
+        y = patterns.emit_round_clip(gb, m, "out")
+        gb.add_output(y, "int8", (4, 8))
+        model = gb.build()
+        xq = rng.integers(-128, 128, (4, 16)).astype(np.int8)
+        ref_out = ReferenceRuntime(model).run({"x": xq})[y]
+        cm = compile_model(model)
+        assert cm.stats["fused_qlinear"] == 0 and cm.stats["generic"] > 0, cm.stats
+        np.testing.assert_array_equal(cm.run({"x": xq})[y], ref_out)
+
+    def test_rank_expanding_mul_constant_falls_back(self):
+        """A (1, 1, N) rescale constant broadcasts the 2-D accumulator up to
+        rank 3 in the reference runtime — fusing it would silently drop that
+        dim, so the chain must compile via the generic mirror instead."""
+        rng = np.random.default_rng(11)
+        gb = pqir.GraphBuilder("m")
+        xi = gb.add_input("x", "int8", (4, 16))
+        w = gb.add_initializer("w", rng.integers(-128, 128, (16, 8)).astype(np.int8))
+        acc = gb.op("MatMulInteger", [xi, w], out_hint="acc")
+        f = gb.op("Cast", [acc], out_hint="f", to="float32")
+        c = gb.add_initializer("c", np.full((1, 1, 8), 2.0**-9, np.float32))
+        m = gb.op("Mul", [f, c], out_hint="m")
+        y = patterns.emit_round_clip(gb, m, "out")
+        gb.add_output(y, "int8", (1, 4, 8))
+        model = gb.build()
+        xq = rng.integers(-128, 128, (4, 16)).astype(np.int8)
+        ref_out = ReferenceRuntime(model).run({"x": xq})[y]
+        assert ref_out.shape == (1, 4, 8)
+        cm = compile_model(model, optimize=False)
+        assert cm.stats["fused_qlinear"] == 0 and cm.stats["generic"] > 0, cm.stats
+        got = cm.run({"x": xq})[y]
+        np.testing.assert_array_equal(got, ref_out)
+
+    def test_gemm_codified_fc_fuses(self):
+        """ROADMAP follow-up #2: a Gemm-based MLP export hits the fused
+        qlinear path (transB and the C bias fold at plan time)."""
+        rng = np.random.default_rng(10)
+        w = rng.normal(size=(48, 24)).astype(np.float32) * 0.1
+        b = rng.normal(size=(24,)).astype(np.float32) * 0.2
+        for per_channel in (False, True):
+            p = quant.quantize_linear_layer(w, b, 0.05, 0.1, per_channel=per_channel)
+            for trans_b in (False, True):
+                gb = pqir.GraphBuilder("g")
+                xi = gb.add_input("input_q", "int8", (None, 48))
+                y = patterns.fc_layer_gemm(gb, xi, p, "fc0", activation="Relu", trans_b=trans_b)
+                gb.add_output(y, "int8", (None, 24))
+                model = gb.build()
+                xq = rng.integers(-128, 128, (8, 48)).astype(np.int8)
+                ref_out = ReferenceRuntime(model).run({"input_q": xq})[y]
+                for backend in ("ref", "interpret"):
+                    cm = compile_model(model, backend=backend)
+                    assert cm.stats["fused_qlinear"] == 1 and cm.stats["generic"] == 0, cm.stats
+                    np.testing.assert_array_equal(cm.run({"input_q": xq})[y], ref_out)
+
     def test_unfused_fallback_still_exact(self):
         """fuse=False exercises the generic jnp mirror — still bit-exact on
         this all-integer graph."""

@@ -1,4 +1,5 @@
-"""E6: compiler-vs-reference conformance sweep over every generic lowering.
+"""E6: compiler-vs-reference conformance sweep over every generic lowering,
+plus the per-channel differential sweep over every *fused* kernel.
 
 One randomized case per op in the compiler's ``_JOPS`` table, executed by
 both :mod:`repro.core.runtime` (the oracle) and the compiled generic path
@@ -6,13 +7,26 @@ both :mod:`repro.core.runtime` (the oracle) and the compiled generic path
 Integer outputs must match bit-exactly; float outputs allclose.  The
 parametrization is driven by ``_JOPS`` itself, so adding a generic lowering
 without a sweep case fails loudly.
+
+``TestPerChannelFusedSweep`` is the differential conformance harness for the
+axis-aware lowering: per-channel variants of every fused requant kernel
+(qlinear matmul two-Mul/one-Mul, uint8 activations, the Gemm-codified form,
+conv, and the LUT composition) compiled on every registered backend — ``ref``
+and ``interpret``; ``interpret`` *is* the Pallas kernel run in interpret mode,
+so the ``pallas`` backend differs only by ``interpret=False`` at dispatch —
+and asserted bit-exact against the reference runtime.
 """
 import numpy as np
 import pytest
 
-from repro.core import pqir
+from repro.core import patterns, pqir, quant
 from repro.core.compile import _JOPS, compile_model
 from repro.core.runtime import ReferenceRuntime
+
+#: Backends every fused case is swept across.  "interpret" executes the same
+#: Pallas tile kernels as "pallas", in the Pallas interpreter (CPU-hosted
+#: CI); real-TPU pallas coverage is the ROADMAP CI-lane follow-up.
+BACKENDS = ("ref", "interpret")
 
 
 def _g(name):
@@ -297,6 +311,101 @@ def test_generic_lowering_matches_reference(op):
             np.testing.assert_array_equal(have, want, err_msg=op)
         else:
             np.testing.assert_allclose(have, want, rtol=1e-5, atol=1e-6, err_msg=op)
+
+
+def _pc_params(rng, n_in, n_out, *, bias=True, out_dtype="int8"):
+    """A per-channel-quantized FC layer with a deliberately hot channel, so
+    per-tensor and per-channel scales genuinely differ."""
+    w = rng.normal(size=(n_in, n_out)).astype(np.float32) * 0.2
+    w[:, rng.integers(0, n_out)] *= 25.0
+    b = rng.normal(size=(n_out,)).astype(np.float32) * 0.1 if bias else None
+    return quant.quantize_linear_layer(w, b, 0.05, 0.1, per_channel=True, out_dtype=out_dtype)
+
+
+def _pc_fc(rng, *, two_mul=True, activation=None, bias=True, in_dtype="int8", out_dtype="int8"):
+    p = _pc_params(rng, 32, 24, bias=bias, out_dtype=out_dtype)
+    gb = _g("pc_fc")
+    x = gb.add_input("x", in_dtype, (None, 32))
+    y = patterns.fc_layer(gb, x, p, "fc0", two_mul=two_mul, activation=activation)
+    gb.add_output(y, out_dtype, (None, 24))
+    lo, hi = (0, 256) if in_dtype == "uint8" else (-128, 128)
+    return gb.build(), {"x": rng.integers(lo, hi, (8, 32)).astype(in_dtype)}, {"fused_qlinear": 1}
+
+
+def _pc_gemm(rng, *, trans_b=False):
+    p = _pc_params(rng, 32, 24)
+    gb = _g("pc_gemm")
+    x = gb.add_input("x", "int8", (None, 32))
+    y = patterns.fc_layer_gemm(gb, x, p, "fc0", activation="Relu", trans_b=trans_b)
+    gb.add_output(y, "int8", (None, 24))
+    return gb.build(), {"x": _rng8(rng, (8, 32))}, {"fused_qlinear": 1}
+
+
+def _pc_conv(rng, *, two_mul=False, activation="Relu", bias=True):
+    m, c = 6, 3
+    w = rng.normal(size=(m, c, 3, 3)).astype(np.float32) * 0.4
+    w[rng.integers(0, m)] *= 20.0
+    absmax = np.maximum(np.abs(w).max(axis=(1, 2, 3)), 1e-12)
+    scale_w = (absmax / 127.0).astype(np.float32)
+    w_q = quant.quantize(w, scale_w.reshape(-1, 1, 1, 1), "int8")
+    b_q = quant.quantize_bias(rng.normal(size=(m,)).astype(np.float32) * 0.1, scale_w, 0.05) if bias else None
+    rescale = quant.decompose_multipliers(scale_w.astype(np.float64) * 0.05 / 0.1)
+    gb = _g("pc_conv")
+    x = gb.add_input("x", "int8", (None, c, 8, 8))
+    y = patterns.conv_layer(
+        gb, x, w_q, b_q, rescale, "c0", pads=(1, 1, 1, 1), two_mul=two_mul, activation=activation
+    )
+    gb.add_output(y, "int8", (None, m, 8, 8))
+    return gb.build(), {"x": _rng8(rng, (2, c, 8, 8))}, {"fused_qconv": 1}
+
+
+def _pc_fc_then_lut(rng):
+    """Per-channel FC feeding the int8-tanh LUT: the vector rescale composes
+    with the (scalar-scale) LUT fusion — both chains still fuse."""
+    p = _pc_params(rng, 32, 16)
+    p = quant.quantize_linear_layer(
+        p.weight_q.astype(np.float32) * 0.01, None, 0.05, patterns.TANH_INPUT_ABSMAX / 127.0, per_channel=True
+    )
+    gb = _g("pc_lut")
+    x = gb.add_input("x", "int8", (None, 32))
+    y = patterns.fc_int8_tanh(gb, x, p, "fc0")
+    gb.add_output(y, "int8", (None, 16))
+    return gb.build(), {"x": _rng8(rng, (8, 32))}, {"fused_qlinear": 1, "fused_lut": 1}
+
+
+PER_CHANNEL_CASES = {
+    "fc_two_mul": lambda rng: _pc_fc(rng, two_mul=True, bias=True),
+    "fc_one_mul_relu": lambda rng: _pc_fc(rng, two_mul=False, activation="Relu"),
+    "fc_no_bias": lambda rng: _pc_fc(rng, two_mul=True, bias=False),
+    "fc_uint8_in": lambda rng: _pc_fc(rng, two_mul=True, in_dtype="uint8"),
+    "fc_uint8_out": lambda rng: _pc_fc(rng, two_mul=True, activation="Relu", out_dtype="uint8"),
+    "gemm": lambda rng: _pc_gemm(rng),
+    "gemm_transB": lambda rng: _pc_gemm(rng, trans_b=True),
+    "conv_one_mul": lambda rng: _pc_conv(rng, two_mul=False),
+    "conv_two_mul": lambda rng: _pc_conv(rng, two_mul=True),
+    "conv_no_bias": lambda rng: _pc_conv(rng, two_mul=True, bias=False, activation=None),
+    "fc_then_lut": _pc_fc_then_lut,
+}
+
+
+class TestPerChannelFusedSweep:
+    """Differential conformance: per-channel variants of every fused kernel,
+    every backend, bit-exact against the reference runtime — and actually
+    *fused* (no silent scalar-only fallback)."""
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("case", sorted(PER_CHANNEL_CASES))
+    def test_per_channel_fused_matches_reference(self, case, backend):
+        rng = np.random.default_rng(abs(hash(case)) % (2**31))
+        model, feeds, want_fused = PER_CHANNEL_CASES[case](rng)
+        ref = ReferenceRuntime(model).run(feeds)
+        cm = compile_model(model, backend=backend, verify_passes=True)
+        for kind, count in want_fused.items():
+            assert cm.stats[kind] == count, (case, cm.stats)
+        assert cm.stats["generic"] == 0, (case, cm.stats)
+        got = cm.run(feeds)
+        for k, want in ref.items():
+            np.testing.assert_array_equal(got[k], want, err_msg=f"{case}/{backend}")
 
 
 class TestShapePlumbingEndToEnd:

@@ -14,6 +14,9 @@ import textwrap
 
 import pytest
 
+# heavyweight model/serving tier — excluded from the fast CI tier (scripts/check.sh)
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

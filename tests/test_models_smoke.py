@@ -10,6 +10,9 @@ import pytest
 from repro.configs import ARCH_IDS, get_config
 from repro.models import model as M
 
+# heavyweight model/serving tier — excluded from the fast CI tier (scripts/check.sh)
+pytestmark = pytest.mark.slow
+
 B, S = 2, 16
 
 

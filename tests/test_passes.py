@@ -107,6 +107,58 @@ class TestQdqCancel:
         _, counters = _run_one(QdqCancel(), model)
         assert counters["eliminated"] == 0
 
+    def test_cancels_per_channel_roundtrip(self):
+        """Per-channel scale vectors cancel too — the round trip is the
+        identity elementwise."""
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "int8", (None, 8))
+        r = gb.op("Relu", [x], out_hint="r")
+        s = gb.add_initializer("s", np.linspace(0.1, 0.8, 8).astype(np.float32))
+        z = gb.add_initializer("z", np.zeros((8,), "int8"))
+        d = gb.op("DequantizeLinear", [r, s, z], out_hint="d")
+        q = gb.op("QuantizeLinear", [d, s, z], out_hint="q")
+        gb.add_output(q, "int8", (None, 8))
+        model = gb.build()
+        opt, counters = _run_one(QdqCancel(), model)
+        assert counters["eliminated"] == 2
+        xv = np.random.default_rng(3).integers(-128, 128, (4, 8)).astype(np.int8)
+        np.testing.assert_array_equal(
+            ReferenceRuntime(model).run({"x": xv})[q], ReferenceRuntime(opt).run({"x": xv})[q]
+        )
+
+    def test_keeps_rank_expanding_scale(self):
+        """A (1, 1, N) scale broadcasts the 2-D data up to rank 3, so the
+        'round trip' actually reshapes its input — cancelling it would change
+        the graph's output shape.  Keep the pair."""
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "int8", (4, 8))
+        r = gb.op("Relu", [x], out_hint="r")
+        s = gb.add_initializer("s", np.full((1, 1, 8), 0.5, np.float32))
+        z = gb.add_initializer("z", np.zeros((1, 1, 8), "int8"))
+        d = gb.op("DequantizeLinear", [r, s, z], out_hint="d")
+        q = gb.op("QuantizeLinear", [d, s, z], out_hint="q")
+        gb.add_output(q, "int8", (1, 4, 8))
+        model = gb.build()
+        assert ReferenceRuntime(model).run(
+            {"x": np.zeros((4, 8), np.int8)}
+        )[q].shape == (1, 4, 8)
+        _, counters = _run_one(QdqCancel(), model)
+        assert counters["eliminated"] == 0
+
+    def test_keeps_per_channel_axis_mismatch(self):
+        """Same scale vector but different quantization axes is not a
+        round trip — keep the pair."""
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "int8", (None, 8))
+        r = gb.op("Relu", [x], out_hint="r")
+        s = gb.add_initializer("s", np.linspace(0.1, 0.8, 8).astype(np.float32))
+        z = gb.add_initializer("z", np.zeros((8,), "int8"))
+        d = gb.op("DequantizeLinear", [r, s, z], out_hint="d", axis=0)
+        q = gb.op("QuantizeLinear", [d, s, z], out_hint="q", axis=1)
+        gb.add_output(q, "int8", (None, 8))
+        _, counters = _run_one(QdqCancel(), gb.build())
+        assert counters["eliminated"] == 0
+
     def test_keeps_wide_integer_dtype(self):
         """int32 round-trips are NOT cancelled: above 2**24 the f32 products
         lose bits, so the chain is not the identity."""
@@ -157,6 +209,57 @@ class TestMulFold:
         # make the first Mul's output observable → no longer single-consumer
         m1_out = model.graph.nodes[0].outputs[0]
         model.graph.outputs.append(pqir.TensorInfo(m1_out, "float32", (None, 8)))
+        _, counters = _run_one(MulFold(), model)
+        assert counters["folded"] == 0
+
+    def test_folds_per_channel_pair_bitexact(self):
+        """The §3.1 pair with *vector* constants: per-channel quant_scale ×
+        per-channel 2**-N (every shift lane a power of two) folds to one
+        vector Mul, bit-exactly."""
+        rng = np.random.default_rng(7)
+        qs = rng.integers(1, 2**24, 8).astype(np.float32)
+        sh = (2.0 ** -rng.integers(10, 30, 8)).astype(np.float32)
+        model, y = self._rescale_chain(qs, sh)
+        opt, counters = _run_one(MulFold(), model)
+        assert counters == {"folded": 1, "eliminated": 1}
+        x = rng.normal(size=(64, 8)).astype(np.float32) * 1e4
+        np.testing.assert_array_equal(
+            ReferenceRuntime(model).run({"x": x})[y], ReferenceRuntime(opt).run({"x": x})[y]
+        )
+
+    def test_folds_mixed_scalar_vector_broadcast(self):
+        """Scalar pow2 shift against a per-channel scale vector (and the
+        reverse) — broadcast-compatible pairs fold."""
+        qs = np.arange(1, 9, dtype=np.float32).reshape(1, 8)
+        model, y = self._rescale_chain(qs, 2.0**-5)
+        opt, counters = _run_one(MulFold(), model)
+        assert counters["folded"] == 1
+        x = np.random.default_rng(8).normal(size=(4, 8)).astype(np.float32)
+        np.testing.assert_array_equal(
+            ReferenceRuntime(model).run({"x": x})[y], ReferenceRuntime(opt).run({"x": x})[y]
+        )
+
+    def test_refuses_incompatible_shapes(self):
+        model, _ = self._rescale_chain(np.full((3,), 2.0, np.float32), np.full((8,), 2.0, np.float32))
+        _, counters = _run_one(MulFold(), model)
+        assert counters["folded"] == 0
+
+    def test_refuses_orthogonal_outer_product(self):
+        """(1, K) × (K, 1) broadcasts, but folding would materialize the
+        O(K²) outer product as an initializer — keep the pair."""
+        model, _ = self._rescale_chain(
+            np.full((1, 8), 2.0, np.float32), np.full((8, 1), 4.0, np.float32)
+        )
+        _, counters = _run_one(MulFold(), model)
+        assert counters["folded"] == 0
+
+    def test_refuses_per_channel_non_pow2_pair(self):
+        """Two non-pow2 vectors stay split — per-channel relaxation does not
+        weaken the rounding-exactness gate."""
+        rng = np.random.default_rng(9)
+        model, _ = self._rescale_chain(
+            rng.uniform(0.1, 0.9, 8).astype(np.float32), rng.uniform(0.1, 0.9, 8).astype(np.float32)
+        )
         _, counters = _run_one(MulFold(), model)
         assert counters["folded"] == 0
 
@@ -228,6 +331,24 @@ class TestAddFold:
         model, _ = self._bias_chain([0.1] * 4, [0.2] * 4, dtype="float32", xdtype="float32")
         _, counters = _run_one(AddFold(), model)
         assert counters["folded"] == 0
+
+    def test_folds_broadcast_compatible_pair(self):
+        """Per-channel bias against a scalar correction (mixed shapes) folds —
+        integer addition associates elementwise under any broadcast."""
+        gb = pqir.GraphBuilder("g")
+        x = gb.add_input("x", "int32", (None, 4))
+        a = gb.add_initializer("b1", np.asarray([1, 2, 3, 4], np.int32))
+        b = gb.add_initializer("b2", np.asarray(7, np.int32))
+        a1 = gb.op("Add", [x, a], out_hint="a1")
+        a2 = gb.op("Add", [a1, b], out_hint="a2")
+        gb.add_output(a2, "int32", (None, 4))
+        model = gb.build()
+        opt, counters = _run_one(AddFold(), model)
+        assert counters["folded"] == 1
+        xv = np.random.default_rng(5).integers(-100, 100, (8, 4)).astype(np.int32)
+        np.testing.assert_array_equal(
+            ReferenceRuntime(model).run({"x": xv})[a2], ReferenceRuntime(opt).run({"x": xv})[a2]
+        )
 
     def test_idempotent_in_pipeline(self):
         model, _ = self._bias_chain([1, 2, 3, 4], [10, 20, 30, 40])

@@ -1,0 +1,96 @@
+"""Golden-plan snapshot tests.
+
+``print(cm.plan)`` is the co-design artifact a hardware designer reads —
+buffer slots, kernel ids, plan-time specialization params (tile choices,
+pre-padded parameter shapes, uint8 folds).  Pinning the rendering for the
+quickstart MLP and a per-channel CNN catches plan-level regressions (slot
+counts, kernel ids, specialization params) in review, where a numeric
+conformance test would stay green.
+
+To update after an *intentional* lowering change:
+
+    REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_plan_golden.py
+
+then review the golden diff like any other code change.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.compile import compile_model
+from repro.core.toolchain import CNNSpec, ConvLayerSpec, MLPSpec, quantize_cnn, quantize_mlp
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+def _check_golden(name: str, text: str) -> None:
+    path = os.path.join(GOLDEN_DIR, name)
+    if os.environ.get("REGEN_GOLDEN"):
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            f.write(text)
+        pytest.skip(f"regenerated {name}")
+    assert os.path.exists(path), f"missing golden file {path} — run with REGEN_GOLDEN=1"
+    with open(path) as f:
+        want = f.read()
+    assert text == want, (
+        f"ExecutionPlan rendering for {name} changed.  If intentional, regenerate "
+        f"with REGEN_GOLDEN=1 and review the diff.\n--- golden ---\n{want}\n--- got ---\n{text}"
+    )
+
+
+def quickstart_mlp():
+    """The examples/quickstart.py model, byte-for-byte (same seed/spec)."""
+    rng = np.random.default_rng(0)
+    spec = MLPSpec(
+        weights=[
+            rng.normal(size=(64, 128)).astype(np.float32) * 0.2,
+            rng.normal(size=(128, 128)).astype(np.float32) * 0.15,
+            rng.normal(size=(128, 10)).astype(np.float32) * 0.2,
+        ],
+        biases=[
+            rng.normal(size=(128,)).astype(np.float32) * 0.1,
+            rng.normal(size=(128,)).astype(np.float32) * 0.1,
+            rng.normal(size=(10,)).astype(np.float32) * 0.1,
+        ],
+        activations=["Relu", "Relu", None],
+    )
+    calib = rng.normal(size=(512, 64)).astype(np.float32)
+    return quantize_mlp(spec, calib, observer="percentile", name="quickstart_mlp")
+
+
+def per_channel_cnn():
+    rng = np.random.default_rng(5)
+    spec = CNNSpec(
+        convs=[
+            ConvLayerSpec(
+                rng.normal(size=(4, 1, 3, 3)).astype(np.float32) * 0.3,
+                rng.normal(size=(4,)).astype(np.float32) * 0.1,
+                strides=(1, 1),
+                pads=(1, 1, 1, 1),
+                activation="Relu",
+            )
+        ],
+        head=MLPSpec(
+            weights=[rng.normal(size=(4 * 8 * 8, 10)).astype(np.float32) * 0.1],
+            biases=[rng.normal(size=(10,)).astype(np.float32) * 0.1],
+            activations=[None],
+        ),
+    )
+    calib = rng.normal(size=(64, 1, 8, 8)).astype(np.float32)
+    return quantize_cnn(spec, calib, per_channel=True, two_mul=True, name="per_channel_cnn")
+
+
+def test_quickstart_mlp_plan_golden():
+    cm = compile_model(quickstart_mlp(), backend="interpret")
+    assert cm.stats["fused_qlinear"] == 3 and cm.stats["generic"] == 0
+    _check_golden("quickstart_mlp.plan.txt", cm.plan.pretty() + "\n")
+
+
+def test_per_channel_cnn_plan_golden():
+    cm = compile_model(per_channel_cnn(), backend="interpret")
+    # per-channel chains fuse — no scalar-only fallback to the generic mirror
+    assert cm.stats["fused_qconv"] == 1 and cm.stats["fused_qlinear"] == 1
+    assert cm.stats["generic"] == 1  # the Flatten between conv stack and head
+    _check_golden("per_channel_cnn.plan.txt", cm.plan.pretty() + "\n")

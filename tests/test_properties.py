@@ -123,6 +123,68 @@ class TestArtifactConformance:
         )
 
 
+class TestRandomGraphConformance:
+    """Randomly composed PQ-IR graphs (mixed scalar/per-channel scales, mixed
+    MatMulInteger/Gemm codification, random activations) must survive the
+    full pass pipeline + ExecutionPlan lowering bit-exactly."""
+
+    layer_st = st.fixed_dictionaries(
+        {
+            "per_channel": st.booleans(),
+            "two_mul": st.booleans(),
+            "gemm": st.booleans(),
+            "trans_b": st.booleans(),
+            "with_bias": st.booleans(),
+            "activation": st.sampled_from([None, "Relu", "Tanh"]),
+            "width": st.integers(min_value=1, max_value=48),
+        }
+    )
+
+    @settings(deadline=None, max_examples=15)
+    @given(
+        layers=st.lists(layer_st, min_size=1, max_size=3),
+        batch=st.integers(min_value=1, max_value=6),
+        backend=st.sampled_from(["ref", "interpret"]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_random_graph_pipeline_and_plan_match_reference(self, layers, batch, backend, seed):
+        rng = np.random.default_rng(seed)
+        gb = pqir.GraphBuilder("rand")
+        n_in = int(rng.integers(1, 48))
+        x = gb.add_input("x", "int8", (None, n_in))
+        cur = n_in
+        for i, cfg in enumerate(layers):
+            w = rng.normal(size=(cur, cfg["width"])).astype(np.float32) * 0.2
+            if cfg["per_channel"] and cfg["width"] > 1:
+                w[:, int(rng.integers(0, cfg["width"]))] *= 20.0
+            b = rng.normal(size=(cfg["width"],)).astype(np.float32) * 0.1 if cfg["with_bias"] else None
+            if cfg["activation"] == "Tanh":
+                p = quant.quantize_linear_layer(
+                    w, b, 0.05, patterns.TANH_INPUT_ABSMAX / 127.0, per_channel=cfg["per_channel"]
+                )
+                x = patterns.fc_int8_tanh(gb, x, p, f"l{i}")
+            else:
+                p = quant.quantize_linear_layer(w, b, 0.05, 0.1, per_channel=cfg["per_channel"])
+                if cfg["gemm"]:
+                    x = patterns.fc_layer_gemm(
+                        gb, x, p, f"l{i}", two_mul=cfg["two_mul"],
+                        activation=cfg["activation"], trans_b=cfg["trans_b"],
+                    )
+                else:
+                    x = patterns.fc_layer(
+                        gb, x, p, f"l{i}", two_mul=cfg["two_mul"], activation=cfg["activation"]
+                    )
+            cur = cfg["width"]
+        gb.add_output(x, "int8", (None, cur))
+        model = gb.build()
+        feeds = {"x": rng.integers(-128, 128, (batch, n_in)).astype(np.int8)}
+        ref = ReferenceRuntime(model).run(feeds)[x]
+        cm = compile_model(model, backend=backend, verify_passes=True)
+        assert cm.stats["generic"] == 0, cm.stats  # every layer fused
+        got = cm.run(feeds)[x]
+        np.testing.assert_array_equal(got, ref)
+
+
 class TestKernelProperties:
     @settings(deadline=None, max_examples=12)
     @given(

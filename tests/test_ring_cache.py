@@ -5,9 +5,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import model as M
+
+# heavyweight model/serving tier — excluded from the fast CI tier (scripts/check.sh)
+pytestmark = pytest.mark.slow
 
 
 def test_ring_equals_full_cache_beyond_window():

@@ -21,6 +21,9 @@ from repro.launch import steps as steps_lib
 from repro.models import model as M
 from repro.optim import adamw, schedule
 
+# heavyweight model/serving tier — excluded from the fast CI tier (scripts/check.sh)
+pytestmark = pytest.mark.slow
+
 
 class TestOptim:
     def test_adamw_converges_quadratic(self):

@@ -11,6 +11,9 @@ from repro.configs import ARCH_IDS, get_config
 from repro.core.convert import W8A8_NAMES, convert_params_w8a8, export_arch_quant_manifest
 from repro.models import model as M
 
+# heavyweight model/serving tier — excluded from the fast CI tier (scripts/check.sh)
+pytestmark = pytest.mark.slow
+
 B, S = 2, 16
 
 
