@@ -16,21 +16,32 @@ Prints ``name,us_per_call,derived`` CSV rows:
                            kernels (derived: slot/tensor counts)
   sys_per_channel_overhead — per-channel vs scalar fused requant on the same
                            FC layer (derived: ratio; pinned at near-parity)
+  sys_serving_compiled   — micro-batched serving of one batch-polymorphic
+                           compiled artifact: requests/s at batch buckets
+                           1/8/32 + plan-cache hit rate (≥2 buckets must be
+                           served from cache after warmup)
   sys_w8a8_decode        — reduced-arch decode step: bf16 vs W8A8+int8-KV
   sys_grad_compress      — int8 cross-pod gradient all-reduce (derived: wire-
                            bytes ratio vs f32)
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--smoke]
+Run:  PYTHONPATH=src python -m benchmarks.run [--smoke] [--json PATH]
 
 ``--smoke`` runs the fast subset (fig1, pass pipeline, plan overhead,
-per-channel overhead) for CI.
+per-channel overhead, serving-compiled) for CI.  ``--json BENCH_<n>.json``
+additionally persists the rows as JSON so the perf trajectory survives
+across PRs (CI uploads the file as a build artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
 
 import numpy as np
+
+#: Rows accumulated by ``row()`` for the optional --json dump.
+_ROWS: list = []
 
 
 def _timeit(fn, *args, repeat: int = 20, warmup: int = 3) -> float:
@@ -43,6 +54,7 @@ def _timeit(fn, *args, repeat: int = 20, warmup: int = 3) -> float:
 
 
 def row(name: str, us: float, derived: str) -> None:
+    _ROWS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -288,6 +300,58 @@ def bench_per_channel_overhead():
     )
 
 
+def bench_serving_compiled():
+    """One batch-polymorphic compiled artifact served through the
+    micro-batching layer at three batch buckets.  After a warmup wave per
+    bucket, every timed wave must be served from the plan cache (no
+    re-specialization) — the derived column carries requests/s per bucket
+    and the cache hit rate, and asserts ≥2 buckets came from cache."""
+    from repro.core.compile import compile_model
+    from repro.serving import CompiledModelServer, CompiledServerConfig
+
+    model, _ = _mlp_artifact(layers=2, width=128)
+    cm = compile_model(model, backend="interpret", batch="dynamic")
+    srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=32))
+    rng = np.random.default_rng(9)
+    xs = rng.integers(-128, 128, (32, 128)).astype(np.int8)
+
+    def serve_wave(n):
+        for i in range(n):
+            srv.submit(xs[i])
+        srv.run_until_drained()
+
+    buckets = (1, 8, 32)
+    rps = {}
+    buckets_from_cache = 0
+    for n in buckets:
+        serve_wave(n)  # warmup: specialize + jit this bucket once
+        misses_before = cm.cache_stats["misses"]
+        repeat = 10
+        t0 = time.perf_counter()
+        for _ in range(repeat):
+            serve_wave(n)
+        dt = time.perf_counter() - t0
+        rps[n] = n * repeat / dt
+        # cache-served: the timed waves for THIS bucket triggered no new
+        # specialization (a re-specialization after eviction would show here)
+        if cm.cache_stats["misses"] == misses_before:
+            buckets_from_cache += 1
+    s = srv.summary()
+    cache = s["plan_cache"]
+    assert buckets_from_cache >= 2, (cache, srv.metrics)
+    assert cache["misses"] == len(buckets), cache  # one specialization per bucket
+    us = 1e6 / rps[8]  # per-request cost at the mid bucket
+    row(
+        "sys_serving_compiled",
+        us,
+        f"rps_b1={rps[1]:.0f};rps_b8={rps[8]:.0f};rps_b32={rps[32]:.0f};"
+        f"cache_hit_rate={s['plan_cache_hit_rate']:.2f};"
+        f"specializations={cache['misses']};cache_size={cache['size']};"
+        f"buckets_from_cache={buckets_from_cache};"
+        f"lat_avg_ms={s['latency_avg_ms']:.2f}",
+    )
+
+
 def bench_grad_compress():
     import jax
     import jax.numpy as jnp
@@ -318,6 +382,11 @@ def main(argv=None) -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="fast CI subset")
+    ap.add_argument(
+        "--json", metavar="PATH",
+        help="also write the rows as JSON (e.g. BENCH_42.json) so the perf "
+        "trajectory persists across PRs; CI uploads it as an artifact",
+    )
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -332,9 +401,24 @@ def main(argv=None) -> None:
     bench_pass_pipeline()
     bench_plan_overhead()
     bench_per_channel_overhead()
+    bench_serving_compiled()
     if not args.smoke:
         bench_w8a8_decode()
         bench_grad_compress()
+
+    if args.json:
+        payload = {
+            "schema": "repro-bench-v1",
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "smoke": bool(args.smoke),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "rows": _ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(_ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

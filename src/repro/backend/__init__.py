@@ -36,9 +36,14 @@ An :class:`~repro.backend.plan.ExecutionPlan` is a flat program over integer
   ``out_slots`` where results land
   ``params``    compile-time statics: ONNX attrs, out dtype, relu/two_mul
                 flags, and the qmatmul shape record (m, k, n, kp, np,
-                bm, bk, bn) chosen per static shape at plan time
+                bm, bk, bn) chosen per static shape at plan time — or, on a
+                ``batch="dynamic"`` *template*, the batch-open record
+                (k, n, kp, np, bk, bn, lead) whose m/bm bind lazily per
+                batch bucket via :func:`specialize_plan` + :class:`PlanCache`
   ``consts``    baked arrays — pre-padded to tile multiples on the fused
                 qmatmul path, so the hot path never pads parameters per call
+                (padding is batch-independent: bucket specializations share
+                these arrays with the template)
   ``out_info``  inferred dtype/shape per result (co-design inspection)
   ============  =====================================================
 
@@ -60,6 +65,20 @@ implementations for the kernel ids it specializes — the executor and the
 compiler never change.
 """
 from . import fused, generic  # noqa: F401  (populate the registry on import)
-from .lowering import StepDraft, build_plan, const_arg, none_arg, tensor_arg  # noqa: F401
-from .plan import Arg, ExecutionPlan, PlanStep, ValueInfo  # noqa: F401
+from .lowering import (  # noqa: F401
+    StepDraft,
+    build_plan,
+    const_arg,
+    none_arg,
+    specialize_plan,
+    tensor_arg,
+)
+from .plan import (  # noqa: F401
+    Arg,
+    ExecutionPlan,
+    PlanCache,
+    PlanStep,
+    ValueInfo,
+    batch_bucket,
+)
 from .registry import UnknownKernelError, backends_for, kernel_ids, lookup, register  # noqa: F401

@@ -51,6 +51,12 @@ def _qlinear_matmul_tiled(step, args, *, interpret: bool):
     x = _as_signed(args[0], step.params)
     w2, b2, qs2, qsh2 = step.consts
     p = step.params
+    if p.get("dynamic_batch"):
+        raise RuntimeError(
+            "batch-polymorphic template plan cannot execute directly: bind it "
+            "to a bucket first (repro.backend.lowering.specialize_plan, or run "
+            "through CompiledModel which caches specializations per bucket)"
+        )
     y = kops.quantized_matmul_planned(
         x, w2, b2, qs2, qsh2, p["shape"],
         out_dtype=DTYPES[p["out_dtype"]], relu=p["relu"], two_mul=p["two_mul"],

@@ -13,14 +13,21 @@ order.  :func:`build_plan` turns those into the typed plan:
 * **static typing:** each produced value is annotated with the dtype/shape
   that :mod:`repro.passes.analysis` inferred on the optimized graph, making
   the plan self-describing for co-design inspection.
+
+Batch polymorphism splits plan building in two: :func:`build_plan` with
+``batch="dynamic"`` produces a shape-generic **template** (all of the above,
+with the symbolic leading dim left open), and :func:`specialize_plan` lazily
+binds a template to a concrete batch bucket — tile choice for the batch dim,
+flat M — without re-running fusion, liveness planning, or parameter padding.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 from ..core.pqir import Graph
-from ..passes.analysis import GraphAnalysis
+from ..kernels import ops as kops
+from ..passes.analysis import GraphAnalysis, bind_batch
 from .plan import CONST, NONE, SLOT, Arg, ExecutionPlan, PlanStep, ValueInfo
 
 #: Draft operand kinds: ("tensor", name) | ("const", value) | ("none", None)
@@ -57,8 +64,14 @@ def build_plan(
     analysis: GraphAnalysis,
     drafts: List[StepDraft],
     backend: str,
+    batch: Union[str, int] = "static",
 ) -> ExecutionPlan:
-    """Assign liveness-planned buffer slots and produce the ExecutionPlan."""
+    """Assign liveness-planned buffer slots and produce the ExecutionPlan.
+
+    ``batch="dynamic"`` marks the result as an unbound template (the drafts
+    must then carry batch-open shape records — see the compiler's fused
+    builders); slot planning, liveness and value typing are identical either
+    way, which is exactly the point: they are batch-independent."""
     out_names = {t.name for t in graph.outputs}
 
     uses: Dict[str, int] = {}
@@ -140,4 +153,36 @@ def build_plan(
         num_slots=num_slots,
         inputs=inputs,
         outputs=outputs,
+        batch=batch,
     )
+
+
+def specialize_plan(template: ExecutionPlan, batch: int) -> ExecutionPlan:
+    """Bind a batch-polymorphic plan template to a concrete batch bucket.
+
+    This is the *late* half of shape specialization: for every fused-qmatmul
+    step carrying a batch-open shape record the flat M and the bm tile are
+    computed for ``batch`` (:func:`repro.kernels.ops.bind_qmatmul_batch`),
+    and every value's symbolic leading dim is substituted in ``out_info`` so
+    the specialized plan renders fully concrete.  Everything else — steps,
+    slots, liveness, padded parameter arrays — is shared with the template
+    (no re-lowering, no array copies): a bucket specialization is O(steps).
+    """
+    if template.batch != "dynamic":
+        raise ValueError(
+            f"only a batch='dynamic' template can be specialized, "
+            f"got a batch={template.batch!r} plan"
+        )
+    batch = int(batch)
+    steps = []
+    for step in template.steps:
+        params = step.params
+        if params.get("dynamic_batch"):
+            params = {k: v for k, v in params.items() if k != "dynamic_batch"}
+            params["shape"] = kops.bind_qmatmul_batch(step.params["shape"], batch)
+        out_info = tuple(
+            ValueInfo(info.dtype, bind_batch(info.shape, batch)) if info is not None else info
+            for info in step.out_info
+        )
+        steps.append(dataclasses.replace(step, params=params, out_info=out_info))
+    return dataclasses.replace(template, steps=steps, batch=batch)

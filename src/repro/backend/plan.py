@@ -20,13 +20,30 @@ of buffers instead of growing a name-keyed dict.  Each step declares
 The plan's :meth:`ExecutionPlan.pretty` rendering is the co-design artifact a
 hardware designer reads: one line per step with slots, dtypes/shapes, kernel
 ids and static params.
+
+Batch polymorphism
+==================
+
+A plan's ``batch`` field says how its leading (batch) dimension was handled:
+
+* ``"static"`` — the classic path: shapes were specialized once at plan time
+  (a symbolic batch falls back to default tiles).
+* ``"dynamic"`` — the plan is a shape-generic **template**: fusion, liveness
+  slot planning and dtype inference are done, but the batch-dependent pieces
+  (flat matmul M, bm tile choice) are left open.  Templates are not directly
+  executable on the tiled backends; they are *bound* to a concrete bucket by
+  :func:`repro.backend.lowering.specialize_plan`.
+* an ``int`` — a per-bucket specialization of a template, produced lazily and
+  held in a bounded :class:`PlanCache` keyed by the padded batch bucket.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import numpy as np
+
+from ..core.cache import LruCache
 
 #: Arg kinds.
 SLOT, CONST, NONE = "slot", "const", "none"
@@ -139,6 +156,8 @@ class ExecutionPlan:
                to liveness-driven slot reuse)
     inputs     (graph-input name, slot) feeds land here
     outputs    (graph-output name, slot) results are read from here
+    batch      "static" | "dynamic" (an unbound template) | int (a bucket
+               specialization of a template) — see the module docstring
     """
 
     backend: str
@@ -146,6 +165,7 @@ class ExecutionPlan:
     num_slots: int
     inputs: Tuple[Tuple[str, int], ...]
     outputs: Tuple[Tuple[str, int], ...]
+    batch: Union[str, int] = "static"
 
     # -- execution -----------------------------------------------------------
     def execute(self, feeds: Dict[str, Any]) -> Dict[str, Any]:
@@ -197,9 +217,10 @@ class ExecutionPlan:
 
     def pretty(self) -> str:
         """Human-readable lowering — the artifact a hardware designer reads."""
+        batch = "" if self.batch == "static" else f", batch={self.batch}"
         head = (
             f"ExecutionPlan(backend={self.backend}, steps={len(self.steps)}, "
-            f"slots={self.num_slots})"
+            f"slots={self.num_slots}{batch})"
         )
         ins = "  inputs:  " + ", ".join(f"{n} -> %{s}" for n, s in self.inputs)
         outs = "  outputs: " + ", ".join(f"%{s} -> {n}" for n, s in self.outputs)
@@ -210,7 +231,41 @@ class ExecutionPlan:
         return self.pretty()
 
     def __repr__(self) -> str:
+        batch = "" if self.batch == "static" else f", batch={self.batch!r}"
         return (
             f"ExecutionPlan(backend={self.backend!r}, steps={len(self.steps)}, "
-            f"slots={self.num_slots}, kinds={self.kinds})"
+            f"slots={self.num_slots}, kinds={self.kinds}{batch})"
         )
+
+
+# ---------------------------------------------------------------------------
+# per-bucket specialization cache
+# ---------------------------------------------------------------------------
+
+
+def batch_bucket(m: int) -> int:
+    """The padded batch bucket for a true batch of ``m``: the smallest power
+    of two ≥ m.  Power-of-two buckets bound the number of specializations
+    (and jit traces) at log₂(max batch) while wasting at most 2× padding —
+    the standard continuous-batching compromise."""
+    if m < 1:
+        raise ValueError(f"batch must be >= 1, got {m}")
+    b = 1
+    while b < m:
+        b <<= 1
+    return b
+
+
+class PlanCache(LruCache):
+    """Bounded LRU of per-bucket plan specializations.
+
+    Keyed by the padded batch bucket; each value is the pair
+    ``(specialized ExecutionPlan, jitted executor)``.  A bucket is
+    specialized at most once while it stays resident (the acceptance
+    criterion for batch-polymorphic serving); ``misses`` therefore counts
+    specializations and ``hits`` counts cache-served requests.  The bound
+    keeps adversarial shape traffic from accumulating jit executors without
+    limit — evicted buckets simply re-specialize on their next use.
+    """
+
+    DEFAULT_CAPACITY = 8

@@ -1,0 +1,74 @@
+"""Small bounded LRU cache shared by the serving layers and the plan cache.
+
+Both per-shape caches in the system — the serving engine's prefill-function
+cache (keyed by prompt bucket) and the backend's :class:`~repro.backend.plan.
+PlanCache` (keyed by batch bucket) — used to be plain dicts that grew without
+bound under adversarial/long-tail traffic.  This is the one eviction policy
+they share: least-recently-used, with hit/miss/eviction counters so the
+caches can surface their behavior in serving metrics.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Dict, Hashable, Optional
+
+
+class LruCache:
+    """Bounded mapping with least-recently-used eviction.
+
+    ``get`` refreshes recency and counts a hit/miss; ``put`` inserts (or
+    refreshes) and evicts the oldest entries beyond ``capacity``.  ``in`` /
+    ``len`` are pure reads — they never touch recency or the counters.
+    """
+
+    def __init__(self, capacity: int = 8) -> None:
+        if capacity < 1:
+            raise ValueError(f"LruCache capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Hashable, default: Any = None) -> Any:
+        if key in self._entries:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return self._entries[key]
+        self.misses += 1
+        return default
+
+    def put(self, key: Hashable, value: Any) -> None:
+        if key in self._entries:
+            self._entries.move_to_end(key)
+        self._entries[key] = value
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def keys(self):
+        """Keys from least- to most-recently used (pure read)."""
+        return list(self._entries.keys())
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {
+            "size": len(self._entries),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
+
+    def __repr__(self) -> str:
+        s = self.stats
+        return (
+            f"{type(self).__name__}(size={s['size']}/{s['capacity']}, "
+            f"hits={s['hits']}, misses={s['misses']}, evictions={s['evictions']})"
+        )

@@ -45,6 +45,18 @@ three-level flow (QNN / onnx-mlir style multi-level lowering):
    computed once).  ``CompiledModel.plan`` is printable — the artifact a
    hardware designer reads.
 
+4. **Specialize (late)** — with ``batch="dynamic"`` the lowering stops one
+   step earlier: the plan is a shape-generic *template* (fusion, slot
+   liveness, dtype inference, and the batch-independent parameter padding
+   all done once; the batch-dependent M/bm left symbolic).  Executing the
+   artifact then binds the template to a power-of-two batch *bucket* on
+   demand (:func:`repro.backend.specialize_plan` — tile choice for the
+   batch dim, nothing re-lowered) through a bounded
+   :class:`repro.backend.PlanCache`, so one compiled artifact serves any
+   batch size with at most one specialization — and one jit trace — per
+   bucket.  This is the serving-side contract
+   :mod:`repro.serving.compiled` builds its micro-batching server on.
+
 Adding a fusion means adding a Pattern + a builder; adding a backend means
 registering kernels — there is no hand-written chain-walking or backend
 conditional left here.  Anything unmatched falls back to the generic jnp op
@@ -60,13 +72,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..backend import StepDraft, build_plan, const_arg, none_arg, tensor_arg
+from ..backend import StepDraft, build_plan, const_arg, none_arg, specialize_plan, tensor_arg
 from ..backend.generic import _JOPS  # noqa: F401  (re-export; conformance sweep)
-from ..backend.plan import ExecutionPlan
+from ..backend.plan import ExecutionPlan, PlanCache, batch_bucket
 from ..kernels import ops as kops
 from ..kernels.qact_lut import build_lut
 from ..passes import PassManager, PipelineReport
-from ..passes.analysis import GraphAnalysis
+from ..passes.analysis import (
+    GraphAnalysis,
+    batch_inputs,
+    batch_mixing_nodes,
+    has_symbolic_batch,
+)
 from ..passes.rewrite import Match, OpSpec, Pattern, match_chain, ql_params
 from .pqir import Model, Node
 
@@ -201,6 +218,17 @@ def _static_m(shape) -> Optional[int]:
     return m
 
 
+def _symbolic_lead(shape) -> Optional[tuple]:
+    """The activation's leading dims for a batch-open shape record: ``None``
+    marks the symbolic batch (leading position); other dims stay concrete so
+    late binding can compute the flat M as their product.  A wholly unknown
+    shape returns None — binding then leaves M unknown and keeps the default
+    bm rather than stamping a flat M it cannot actually know."""
+    if shape is None or len(shape) < 2:
+        return None
+    return tuple(shape[:-1])
+
+
 def _build_qlinear(compiler: "Compiler", m: Match) -> Optional[StepDraft]:
     """Lower a QLINEAR/GEMM_PATTERN match onto the fused int8 matmul / conv,
     shape-specializing the matmul parameters at plan time.  Returns None
@@ -282,13 +310,23 @@ def _build_qlinear(compiler: "Compiler", m: Match) -> Optional[StepDraft]:
         )
 
     # tiled Pallas path: fold uint8 → signed int8 and pre-pad at plan time
+    # (the uint8 bias fold and the K/N padding are both batch-independent,
+    # so they belong to the template either way)
     if ga.dtype(x_name) == "uint8":
         b = np.asarray(kops.fold_uint8_input(jnp.asarray(w), None if b is None else jnp.asarray(b)))
         params["x_uint8"] = True
-    consts, shape = kops.specialize_qmatmul_params(
-        w, b, qs, np.asarray(qsh, np.float32), m=_static_m(ga.shape(x_name))
-    )
-    params["shape"] = shape
+    if compiler.batch == "dynamic":
+        # batch-polymorphic template: leave the batch-dependent (m, bm)
+        # binding to per-bucket specialization (specialize_plan / PlanCache)
+        consts, shape = kops.template_qmatmul_params(w, b, qs, np.asarray(qsh, np.float32))
+        shape["lead"] = _symbolic_lead(ga.shape(x_name))
+        params["shape"] = shape
+        params["dynamic_batch"] = True
+    else:
+        consts, shape = kops.specialize_qmatmul_params(
+            w, b, qs, np.asarray(qsh, np.float32), m=_static_m(ga.shape(x_name))
+        )
+        params["shape"] = shape
     return StepDraft(
         "qlinear_matmul", [tensor_arg(x_name)], [m.out_tensor],
         params=params, consts=consts, kind="fused_qlinear", name=core.name,
@@ -330,8 +368,17 @@ class Compiler:
         fuse: bool = True,
         optimize: bool = True,
         verify_passes: bool = False,
+        batch: str = "static",
+        plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
     ) -> None:
         model.validate()
+        if batch not in ("static", "dynamic"):
+            raise ValueError(f"batch must be 'static' or 'dynamic', got {batch!r}")
+        if batch == "dynamic" and not batch_inputs(model.graph):
+            raise ValueError(
+                "batch='dynamic' needs at least one graph input with a "
+                "symbolic (None) leading dimension to specialize over"
+            )
         if optimize:
             model, self.pass_report = PassManager(verify=verify_passes).run(model)
         else:
@@ -342,8 +389,22 @@ class Compiler:
         self.graph = model.graph
         self.backend = backend
         self.fuse = fuse
+        self.batch = batch
+        self.plan_cache_capacity = plan_cache_capacity
         self.inits = {k: v for k, v in self.graph.initializers.items()}
         self.analysis = GraphAnalysis(self.graph)
+        if batch == "dynamic":
+            # zero-row padding is only exact when no op mixes rows across the
+            # batch axis — reject (rather than silently mis-serve) graphs
+            # with e.g. a global ReduceMean or a batch-folding Reshape
+            problems = batch_mixing_nodes(self.analysis)
+            if problems:
+                raise ValueError(
+                    "batch='dynamic' needs every op to be batch-elementwise "
+                    "along axis 0; cannot prove that for:\n  "
+                    + "\n  ".join(problems)
+                    + "\ncompile with batch='static' instead"
+                )
         self.stats = {
             "fused_qlinear": 0,
             "fused_qconv": 0,
@@ -366,9 +427,12 @@ class Compiler:
                 draft = self._generic_draft(node)
             drafts.append(draft)
             self.stats[draft.kind] += 1
-        plan = build_plan(self.graph, self.analysis, drafts, self.backend)
+        plan = build_plan(self.graph, self.analysis, drafts, self.backend, batch=self.batch)
         self.stats["plan_slots"] = plan.num_slots
-        return CompiledModel(self.model, plan, self.stats, self.pass_report)
+        return CompiledModel(
+            self.model, plan, self.stats, self.pass_report,
+            plan_cache_capacity=self.plan_cache_capacity,
+        )
 
     def _fused_draft(self, node: Node, consumed: set) -> Optional[StepDraft]:
         for pattern, builder in FUSIONS:
@@ -403,7 +467,18 @@ class Compiler:
 
 class CompiledModel:
     """A compiled artifact: typed ExecutionPlan + jitted slot-indexed
-    executor + fusion report.  ``print(cm.plan)`` shows the full lowering."""
+    executor + fusion report.  ``print(cm.plan)`` shows the full lowering.
+
+    With ``batch="dynamic"`` the held plan is a shape-generic *template*:
+    :meth:`run` pads the batch-carrying feeds to the next power-of-two
+    bucket, binds the template to that bucket through a bounded
+    :class:`~repro.backend.plan.PlanCache` (at most one specialization and
+    one jit trace per resident bucket), executes, and slices results back to
+    the true batch.  Zero batch-padding is exact because dynamic compilation
+    *proves* it: the compiler rejects any graph with an op it cannot show to
+    be batch-elementwise along axis 0
+    (:func:`repro.passes.analysis.batch_mixing_nodes`), and the conformance
+    sweep pins dynamic == per-shape-static == reference, bit for bit."""
 
     def __init__(
         self,
@@ -411,6 +486,8 @@ class CompiledModel:
         plan: ExecutionPlan,
         stats: Dict[str, int],
         pass_report: Optional[PipelineReport] = None,
+        *,
+        plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
     ) -> None:
         self.model = model
         self.plan = plan
@@ -419,16 +496,45 @@ class CompiledModel:
         self.pass_report = pass_report if pass_report is not None else PipelineReport()
         self.input_names = [t.name for t in model.graph.inputs]
         self.output_names = [t.name for t in model.graph.outputs]
-        self._jitted = jax.jit(self._execute)
+        if plan.batch == "dynamic":
+            self.plan_cache: Optional[PlanCache] = PlanCache(plan_cache_capacity)
+            self.batch_input_names = batch_inputs(model.graph)
+            # batch-carrying outputs get sliced back to the true batch; union
+            # of the declared signature and the plan's inferred value shapes,
+            # so an output mis-declared with a concrete leading dim is still
+            # recognized as batch-carrying (and vice versa)
+            inferred = {
+                name: info.shape
+                for step in plan.steps
+                for name, info in zip(step.outputs, step.out_info)
+            }
+            self.batch_output_names = {
+                t.name
+                for t in model.graph.outputs
+                if has_symbolic_batch(tuple(t.shape))
+                or has_symbolic_batch(inferred.get(t.name))
+            }
+            self._jitted = None  # a template is only executable once bound
+        else:
+            self.plan_cache = None
+            self.batch_input_names = []
+            self.batch_output_names = set()
+            self._jitted = jax.jit(self._execute)
 
     @property
     def backend(self) -> str:
         return self.plan.backend
 
+    @property
+    def is_dynamic(self) -> bool:
+        return self.plan.batch == "dynamic"
+
     def _execute(self, feeds: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
         return self.plan.execute(feeds)
 
     def run(self, feeds: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        if self.is_dynamic:
+            return self._run_dynamic(feeds)
         res = self._jitted({k: jnp.asarray(v) for k, v in feeds.items()})
         return {k: np.asarray(v) for k, v in res.items()}
 
@@ -436,7 +542,62 @@ class CompiledModel:
         return self.run(feeds)
 
     def lower(self, feeds: Dict[str, jax.ShapeDtypeStruct]):
+        if self.is_dynamic:
+            raise NotImplementedError(
+                "lower() needs a bound plan — use specialized(bucket) and "
+                "inspect/lower the per-bucket executor instead"
+            )
         return self._jitted.lower(feeds)
+
+    # -- batch-polymorphic execution ----------------------------------------
+    def specialized(self, bucket: int):
+        """The (plan, jitted executor) pair for a batch bucket, specializing
+        lazily through the bounded plan cache.  ``cache_stats`` counts a miss
+        (== one specialization) only on first use of a resident bucket."""
+        if not self.is_dynamic:
+            raise ValueError("specialized() is only meaningful on a batch='dynamic' compile")
+        entry = self.plan_cache.get(bucket)
+        if entry is None:
+            plan = specialize_plan(self.plan, bucket)
+            entry = (plan, jax.jit(plan.execute))
+            self.plan_cache.put(bucket, entry)
+        return entry
+
+    @property
+    def cache_stats(self) -> Dict[str, int]:
+        """Plan-cache counters (size/capacity/hits/misses/evictions); misses
+        double as the number of specializations performed."""
+        if self.plan_cache is None:
+            return {}
+        return self.plan_cache.stats
+
+    def _run_dynamic(self, feeds: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        ms = {
+            int(np.asarray(feeds[name]).shape[0])
+            for name in self.batch_input_names
+            if name in feeds
+        }
+        if len(ms) != 1:
+            raise ValueError(
+                f"batch-carrying inputs {self.batch_input_names} must all be fed "
+                f"with one common leading dim, got {sorted(ms)}"
+            )
+        m = ms.pop()
+        bucket = batch_bucket(m)
+        _, fn = self.specialized(bucket)
+        padded: Dict[str, jax.Array] = {}
+        for name, v in feeds.items():
+            v = np.asarray(v)
+            if name in self.batch_input_names and v.shape[0] != bucket:
+                # zero rows are exact: dynamic compilation proved every op
+                # batch-elementwise, and the pad rows are sliced away below
+                v = np.pad(v, [(0, bucket - v.shape[0])] + [(0, 0)] * (v.ndim - 1))
+            padded[name] = jnp.asarray(v)
+        res = fn(padded)
+        return {
+            k: (np.asarray(v)[:m] if k in self.batch_output_names else np.asarray(v))
+            for k, v in res.items()
+        }
 
 
 def compile_model(
@@ -446,6 +607,8 @@ def compile_model(
     fuse: bool = True,
     optimize: bool = True,
     verify_passes: bool = False,
+    batch: str = "static",
+    plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
 ) -> CompiledModel:
     """Compile a PQ-IR artifact for the TPU backend.
 
@@ -457,7 +620,17 @@ def compile_model(
     verify_passes: turn on the pipeline's reference-runtime conformance hook
                    (asserts each pass is semantics-preserving on probe
                    inputs before the backend ever sees the graph).
+    batch:         "static" specializes shapes once at plan time (classic
+                   behavior); "dynamic" builds a batch-polymorphic plan
+                   *template* that is bound lazily to power-of-two batch
+                   buckets at run time — one artifact, any batch size, at
+                   most one specialization per bucket.
+    plan_cache_capacity:
+                   bound on resident per-bucket specializations (dynamic
+                   mode; LRU-evicted beyond this).
     """
     return Compiler(
-        model, backend=backend, fuse=fuse, optimize=optimize, verify_passes=verify_passes
+        model, backend=backend, fuse=fuse, optimize=optimize,
+        verify_passes=verify_passes, batch=batch,
+        plan_cache_capacity=plan_cache_capacity,
     ).compile()

@@ -43,25 +43,28 @@ def fold_uint8_input(w_q: jax.Array, bias_q: Optional[jax.Array]):
 # ---------------------------------------------------------------------------
 
 
-def specialize_qmatmul_params(
+def template_qmatmul_params(
     w_q: np.ndarray,  # (K, N) int8
     bias_q: Optional[np.ndarray],  # (N,) int32
     quant_scale: np.ndarray,  # scalar or (N,) f32
     quant_shift: np.ndarray,  # scalar or (N,) f32
-    *,
-    m: Optional[int] = None,  # static M if known, else None (dynamic batch)
 ):
-    """Pre-pad the fused-qmatmul parameters to tile multiples **once**, at
-    plan time, and pick tile sizes for the static (K, N) problem shape.
+    """The batch-*independent* half of qmatmul shape specialization.
 
-    Returns ``(consts, params)``: ``consts = (w2, b2, qs2, qsh2)`` jnp arrays
-    already shaped ``(kp, np)/(1, np)`` for the kernel, and ``params`` the
-    static shape record ``{m, k, n, kp, np, bm, bk, bn}`` the runtime wrapper
-    needs to pad *only the activation* (and only when its shape demands it).
+    Everything here is a property of the weights alone: the K/N tile choice,
+    and the parameter pre-padding to tile multiples (kp = K and N rounded up
+    to bk/bn).  None of it depends on the batch, so a batch-polymorphic plan
+    template builds — and pays for — it exactly once, and every per-bucket
+    specialization *shares* these padded arrays (binding a bucket copies no
+    parameter data, see :func:`bind_qmatmul_batch`).
+
+    Returns ``(consts, shape)``: ``consts = (w2, b2, qs2, qsh2)`` jnp arrays
+    already shaped ``(kp, np)/(1, np)`` for the kernel, and ``shape`` the
+    batch-open record ``{k, n, kp, np, bk, bn}`` (no ``m``/``bm`` yet).
     Zero padding is exact for integer matmul; scale/shift pad with 1.0 so the
     padded epilogue stays finite."""
     k, n = int(w_q.shape[0]), int(w_q.shape[1])
-    bm, bk, bn = _qmm.choose_tiles(m, k, n)
+    _, bk, bn = _qmm.choose_tiles(None, k, n)
     kp, np_ = _round_up(k, bk), _round_up(n, bn)
     w2 = np.zeros((kp, np_), np.int8)
     w2[:k, :n] = np.asarray(w_q, np.int8)
@@ -73,7 +76,54 @@ def specialize_qmatmul_params(
     qsh2 = np.ones((1, np_), np.float32)
     qsh2[0, :n] = np.broadcast_to(np.asarray(quant_shift, np.float32).reshape(1, -1), (1, n))
     consts = (jnp.asarray(w2), jnp.asarray(b2), jnp.asarray(qs2), jnp.asarray(qsh2))
-    params = {"m": m, "k": k, "n": n, "kp": kp, "np": np_, "bm": bm, "bk": bk, "bn": bn}
+    shape = {"k": k, "n": n, "kp": kp, "np": np_, "bk": bk, "bn": bn}
+    return consts, shape
+
+
+def bind_qmatmul_batch(shape: dict, batch: Optional[int]) -> dict:
+    """The batch-*dependent* half: close a template shape record over a
+    concrete batch bucket.
+
+    ``shape["lead"]`` is the activation's leading (batch) dims as inferred at
+    template-build time, with ``None`` marking the symbolic batch (and the
+    whole tuple ``None`` when inference knew nothing — M then stays unknown
+    and the default bm stands); the flat matmul M is their product with
+    ``batch`` substituted for the leading symbol.  Only ``m`` and the bm tile
+    choice are computed here — the padded parameter arrays and K/N tiles come
+    from the template unchanged, so a bucket specialization is O(1) (no
+    re-lowering, no array copies)."""
+    lead = shape.get("lead")
+    if lead is None:
+        m: Optional[int] = None  # inference knew nothing: keep the default bm
+    else:
+        m = 1
+        for i, d in enumerate(lead):
+            if d is None:
+                d = batch if i == 0 else None  # only the leading dim is the batch
+            if d is None:
+                m = None  # still-unknown dim: fall back to the default bm
+                break
+            m *= int(d)
+    bound = {key: v for key, v in shape.items() if key != "lead"}
+    bound["m"] = m
+    bound["bm"] = _qmm.choose_bm(m)
+    return bound
+
+
+def specialize_qmatmul_params(
+    w_q: np.ndarray,  # (K, N) int8
+    bias_q: Optional[np.ndarray],  # (N,) int32
+    quant_scale: np.ndarray,  # scalar or (N,) f32
+    quant_shift: np.ndarray,  # scalar or (N,) f32
+    *,
+    m: Optional[int] = None,  # static M if known, else None (dynamic batch)
+):
+    """Fully-static specialization (the ``batch="static"`` compile path):
+    template + immediate batch binding in one step.  Returns the same
+    ``(consts, params)`` contract as before the template split — ``params``
+    is the closed record ``{m, k, n, kp, np, bm, bk, bn}``."""
+    consts, shape = template_qmatmul_params(w_q, bias_q, quant_scale, quant_shift)
+    params = bind_qmatmul_batch({**shape, "lead": (m,)}, None)
     return consts, params
 
 

@@ -46,16 +46,28 @@ def _ceil_to(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def choose_bm(m, *, bm: int = BM) -> int:
+    """Per-batch-bucket tile choice for the M dimension.
+
+    The K/N tiles are a property of the *weights* (fixed at template-build
+    time); ``bm`` is the one tile that depends on the batch, so it is the
+    piece re-chosen per bucket by the batch-polymorphic specialization:
+    a bucket of 1 runs with bm=32 (the int8 sublane minimum) instead of
+    padding 1→128.  ``m`` may be None/0 (unknown batch) — the default
+    ``bm`` then stands."""
+    return min(bm, _ceil_to(int(m), _MIN_SUBLANE)) if m else bm
+
+
 def choose_tiles(m, k: int, n: int, *, bm: int = BM, bk: int = BK, bn: int = BN):
     """Pick (bm, bk, bn) for a *static* problem shape at plan time.
 
     Shrinks the default blocks toward the (hardware-minimum-aligned) problem
     size so small layers don't pad 33→256; ``m`` may be None when the batch
-    dimension is dynamic, in which case the default ``bm`` stands."""
-    bm_ = min(bm, _ceil_to(int(m), _MIN_SUBLANE)) if m else bm
+    dimension is dynamic, in which case the default ``bm`` stands (see
+    :func:`choose_bm` for the per-bucket M choice)."""
     bk_ = min(bk, _ceil_to(int(k), _MIN_LANE))
     bn_ = min(bn, _ceil_to(int(n), _MIN_LANE))
-    return bm_, bk_, bn_
+    return choose_bm(m, bm=bm), bk_, bn_
 
 
 def _epilogue(acc, bias, qscale, qshift, *, relu: bool, two_mul: bool, out_dtype):

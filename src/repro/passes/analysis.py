@@ -8,7 +8,13 @@ compiler need about a :class:`repro.core.pqir.Graph`:
   ``repro.core.compile``).
 * :func:`infer_shapes` — best-effort static shape propagation.  Unknown
   dimensions are ``None``; a wholly unknown shape is ``None``.  Passes must
-  treat ``None`` as "don't know" and stay conservative.
+  treat ``None`` as "don't know" and stay conservative.  A ``None`` *leading*
+  dimension doubles as the symbolic batch: artifacts are exported with
+  ``(None, …)`` inputs, the per-op rules (MatMul/Gemm/Conv/Reshape/Flatten/…)
+  propagate that unknown through to the outputs, and the batch-polymorphic
+  compile path (``compile_model(batch="dynamic")``) later *binds* it to a
+  concrete bucket — either by re-running :func:`infer_shapes` with ``batch=``
+  or per-value via :func:`bind_batch`.
 * :class:`GraphAnalysis` — a cached bundle of dtypes, shapes, producer and
   consumer maps plus the constant/initializer view, rebuilt from scratch by
   each pass iteration so it can never go stale against a mutated graph.
@@ -245,9 +251,186 @@ def _node_shape(node: Node, sh, const) -> Shape:  # noqa: C901 (dispatch table)
     return None
 
 
-def infer_shapes(graph: Graph) -> Dict[str, Shape]:
-    """Best-effort static shapes; tensors missing from the map are unknown."""
-    shapes: Dict[str, Shape] = {t.name: tuple(t.shape) for t in graph.inputs}
+# ---------------------------------------------------------------------------
+# symbolic batch (leading-dim) helpers
+# ---------------------------------------------------------------------------
+
+
+def has_symbolic_batch(shape: Shape) -> bool:
+    """True when the leading dimension is the symbolic (unknown) batch."""
+    return shape is not None and len(shape) >= 1 and shape[0] is None
+
+
+def bind_batch(shape: Shape, batch: Optional[int]) -> Shape:
+    """Substitute the symbolic leading dim with a concrete ``batch``.
+
+    ``None`` batch (or a shape without a symbolic leading dim) passes
+    through unchanged — binding is always a no-op on static shapes."""
+    if batch is None or not has_symbolic_batch(shape):
+        return shape
+    return (int(batch),) + tuple(shape[1:])
+
+
+def batch_inputs(graph: Graph) -> List[str]:
+    """Names of graph inputs carrying the symbolic batch (leading ``None``).
+
+    These are the feeds a batch-polymorphic compiled model pads to the
+    bucket size; a graph with none of them has no batch axis to
+    specialize over."""
+    return [t.name for t in graph.inputs if has_symbolic_batch(tuple(t.shape))]
+
+
+#: Ops that are row-elementwise and shape-preserving along axis 0 whenever the
+#: batch rides only the data operand (scales/zero-points are constants).
+_ROWWISE_OPS = frozenset(
+    {"Relu", "Tanh", "Sigmoid", "Erf", "Sqrt", "Clip", "Identity",
+     "Cast", "QuantizeLinear", "DequantizeLinear"}
+)
+#: Contractions whose first operand carries independent rows / the N axis.
+_LEAD0_OPS = frozenset({"MatMul", "MatMulInteger", "Gemm"})
+_NCHW_OPS = frozenset(
+    {"Conv", "ConvInteger", "MaxPool", "AveragePool", "GlobalAveragePool"}
+)
+_BCAST_OPS = frozenset({"Mul", "Add", "Sub", "Div", "Pow"})
+
+
+def batch_mixing_nodes(ga: "GraphAnalysis") -> List[str]:
+    """Nodes that cannot be *proved* batch-elementwise along axis 0.
+
+    Batch-polymorphic execution pads feeds with zero rows and slices results
+    back — exact only when no op mixes information across the leading dim.
+    That holds for the artifact's quantized-inference vocabulary (rowwise
+    elementwise chains, weight contractions, NCHW windows) but is false for
+    e.g. a global ReduceMean, Softmax over axis 0, a batch-folding Reshape,
+    or a Concat on axis 0 — those would silently compute over the zero
+    padding.  ``compile_model(batch="dynamic")`` rejects graphs where this
+    returns a non-empty list of human-readable reasons.  Conservative by
+    construction: an op it cannot reason about (unknown shapes, unlisted op
+    types touching a batch-carrying value) is reported, not assumed safe.
+    """
+
+    def carries(name: str) -> bool:
+        if ga.is_const(name):
+            return False
+        s = ga.shape(name)
+        if s is None:
+            return True  # unknown: assume it may carry the batch
+        return len(s) > 0 and s[0] is None
+
+    def norm_axes(axes, rank):
+        return {int(a) % rank for a in axes}
+
+    problems: List[str] = []
+    for node in ga.graph.toposorted():
+        ins = [i for i in node.inputs if i]
+        batch_ins = [i for i in ins if carries(i)]
+        if not batch_ins:
+            continue
+        t = node.op_type
+        s0 = ga.shape(node.inputs[0]) if node.inputs else None
+        rank = len(s0) if s0 is not None else None
+        only_data = set(batch_ins) <= {node.inputs[0]}
+        reason = None
+
+        if t in _ROWWISE_OPS:
+            reason = None if only_data else "batch rides a non-data operand"
+        elif t in _BCAST_OPS:
+            out = ga.shape(node.outputs[0])
+            if out is None or out[0] is not None:
+                reason = "broadcast result does not keep the batch on axis 0"
+            else:
+                for i in ins:
+                    s = ga.shape(i)
+                    if s is None:
+                        reason = f"operand {i!r} has unknown shape"
+                        break
+                    if len(s) == len(out) and s[0] is not None and s[0] != 1:
+                        reason = f"operand {i!r} pins axis 0 to {s[0]}"
+                        break
+        elif t in _LEAD0_OPS:
+            if not only_data:
+                reason = "batch rides a non-row operand"
+            elif t == "Gemm" and node.attrs.get("transA", 0):
+                reason = "transA moves the batch off the row axis"
+            elif t == "MatMul":
+                s1 = ga.shape(node.inputs[1])
+                if s1 is None or len(s1) != 2:
+                    reason = "rhs is not a known 2-D operand (stacked matmul may broadcast over the batch)"
+        elif t in _NCHW_OPS:
+            reason = None if only_data else "batch rides a non-data operand"
+        elif t == "Softmax":
+            if not only_data or rank is None:
+                reason = "cannot normalize the softmax axis"
+            elif int(node.attrs.get("axis", -1)) % rank == 0:
+                reason = "softmax normalizes over the batch axis"
+        elif t == "ReduceMean":
+            axes = node.attrs.get("axes")
+            if axes is None or rank is None:
+                reason = "reduces over all axes (including the batch)"
+            elif 0 in norm_axes(axes, rank):
+                reason = "reduces over the batch axis"
+        elif t == "Flatten":
+            if int(node.attrs.get("axis", 1)) != 1:
+                reason = "flatten folds the batch into another axis"
+        elif t == "Transpose":
+            perm = node.attrs.get("perm")
+            if not perm or int(perm[0]) != 0:
+                reason = "permutation moves the batch off axis 0"
+        elif t == "Concat":
+            if rank is None or int(node.attrs["axis"]) % rank == 0:
+                reason = "concatenates along the batch axis"
+        elif t == "Gather":
+            if not only_data:
+                reason = "batch rides the indices"
+            elif rank is None or int(node.attrs.get("axis", 0)) % rank == 0:
+                reason = "gathers along the batch axis"
+        elif t == "Slice":
+            axes_c = ga.const(node.inputs[3]) if len(node.inputs) > 3 and node.inputs[3] else None
+            if not only_data or axes_c is None or rank is None:
+                reason = "slice axes unknown (may slice the batch axis)"
+            elif 0 in norm_axes(np.asarray(axes_c).reshape(-1), rank):
+                reason = "slices the batch axis"
+        elif t in ("Squeeze", "Unsqueeze"):
+            axes_c = ga.const(node.inputs[1]) if len(node.inputs) > 1 else None
+            out_rank = rank + (1 if t == "Unsqueeze" else -1) * (
+                np.asarray(axes_c).size if axes_c is not None else 0
+            ) if rank is not None else None
+            if not only_data or axes_c is None or rank is None:
+                reason = "axes unknown"
+            elif 0 in norm_axes(np.asarray(axes_c).reshape(-1), out_rank if t == "Unsqueeze" else rank):
+                reason = "touches axis 0"
+        elif t == "Reshape":
+            target = ga.const(node.inputs[1]) if len(node.inputs) > 1 else None
+            tail = s0[1:] if s0 is not None else None
+            if target is None or tail is None or any(d is None for d in tail):
+                reason = "target/operand shape unknown"
+            else:
+                dims = [int(d) for d in np.asarray(target).reshape(-1)]
+                tail_total = int(np.prod([int(d) for d in tail])) if tail else 1
+                rest = dims[1:]
+                rest_total = int(np.prod(rest)) if rest else 1
+                if not dims or dims[0] != -1 or any(d == -1 for d in rest):
+                    reason = "target pins the batch dim (leading target must be -1)"
+                elif rest_total != tail_total:
+                    reason = "reshape folds batch rows into other axes"
+        else:
+            reason = "op not verified batch-elementwise under zero-row padding"
+
+        if reason:
+            problems.append(f"{node.name or t}[{t}]: {reason}")
+    return problems
+
+
+def infer_shapes(graph: Graph, *, batch: Optional[int] = None) -> Dict[str, Shape]:
+    """Best-effort static shapes; tensors missing from the map are unknown.
+
+    ``batch`` binds the symbolic leading dimension: every graph input whose
+    first dim is ``None`` is seeded as ``(batch, …)`` before propagation, so
+    the whole map comes out specialized for that batch bucket (used by the
+    batch-polymorphic lowering to cross-check per-bucket plans)."""
+    shapes: Dict[str, Shape] = {
+        t.name: bind_batch(tuple(t.shape), batch) for t in graph.inputs
+    }
     for name, arr in graph.initializers.items():
         shapes[name] = tuple(arr.shape)
 

@@ -1,1 +1,6 @@
-from .engine import EngineConfig, Request, ServeEngine  # noqa: F401
+from .compiled import (  # noqa: F401
+    CompiledModelServer,
+    CompiledRequest,
+    CompiledServerConfig,
+)
+from .engine import EngineConfig, Request, ServeEngine, sample_token  # noqa: F401

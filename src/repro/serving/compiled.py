@@ -1,0 +1,181 @@
+"""Micro-batching server for batch-polymorphic compiled PQ-IR artifacts.
+
+The token engine (:mod:`repro.serving.engine`) serves the transformer stack;
+this module serves the *compiled models the paper is actually about*: one
+``compile_model(batch="dynamic")`` artifact, heavy request traffic, no
+per-shape recompiles.  The structure mirrors the token engine's
+request-lifecycle and metrics discipline (submit → step → drain; timestamped
+requests; a flat ``metrics`` dict), specialized to single-shot inference:
+
+* **Coalescing** — each :meth:`~CompiledModelServer.step` takes up to
+  ``max_batch`` queued requests and runs them as one batch.  The compiled
+  model pads that batch to the next power-of-two *bucket* and serves it from
+  its bounded :class:`~repro.backend.plan.PlanCache`, so steady-state traffic
+  of any size mix touches a handful of plan specializations — the vLLM-style
+  shape-bucketing answer to "serve millions of users from one artifact".
+* **Padding/slicing** — zero-row padding is exact for the artifact vocabulary
+  (ops are elementwise along the leading dim); each request gets back exactly
+  its own rows, bit-identical to a solo run.
+* **Metrics** — per-bucket batch counts, padded-row overhead, plan-cache
+  hit/miss/size, and request latency/throughput summaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+import numpy as np
+
+from ..backend.plan import batch_bucket
+from ..core.compile import CompiledModel
+
+
+@dataclasses.dataclass
+class CompiledRequest:
+    """One inference request: a single example (no batch dim)."""
+
+    uid: int
+    x: np.ndarray
+    # filled by the server:
+    outputs: Optional[Dict[str, np.ndarray]] = None
+    done: bool = False
+    t_submit: float = 0.0
+    t_done: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class CompiledServerConfig:
+    max_batch: int = 32  # largest coalesced batch (its bucket bounds jit traces)
+    latency_window: int = 4096  # latency samples kept for summary() aggregates
+
+    def __post_init__(self) -> None:
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.latency_window < 1:
+            raise ValueError(f"latency_window must be >= 1, got {self.latency_window}")
+
+
+class CompiledModelServer:
+    """Queue + micro-batching loop over a batch-polymorphic CompiledModel."""
+
+    def __init__(self, cm: CompiledModel, cfg: Optional[CompiledServerConfig] = None) -> None:
+        if not cm.is_dynamic:
+            raise ValueError(
+                "CompiledModelServer needs a batch-polymorphic artifact — "
+                'compile with compile_model(..., batch="dynamic")'
+            )
+        if len(cm.batch_input_names) != 1 or len(cm.input_names) != 1:
+            raise ValueError(
+                f"the micro-batching server coalesces over exactly one input, "
+                f"which must carry the batch dim — model has inputs "
+                f"{cm.input_names} (batch-carrying: {cm.batch_input_names})"
+            )
+        self.cm = cm
+        self.cfg = cfg if cfg is not None else CompiledServerConfig()
+        self.input_name = cm.batch_input_names[0]
+        in_t = next(t for t in cm.model.graph.inputs if t.name == self.input_name)
+        self._example_shape = tuple(in_t.shape[1:])  # dims may be None (unknown)
+        self._example_dtype = np.dtype(in_t.dtype)
+        self.queue: Deque[CompiledRequest] = deque()
+        self._uid = 0
+        # bounded: a long-lived server keeps a sliding latency window, not
+        # one float per request forever
+        self._latencies: Deque[float] = deque(maxlen=self.cfg.latency_window)
+        self.metrics: Dict[str, Any] = {
+            "requests": 0,
+            "batches": 0,
+            "completed": 0,
+            "padded_rows": 0,  # bucket rows minus real rows, summed
+            "bucket_batches": {},  # bucket -> number of coalesced batches
+        }
+
+    # -- request lifecycle ----------------------------------------------------
+    def submit(self, x: np.ndarray) -> CompiledRequest:
+        """Enqueue one example (shape = model input shape without the batch
+        dim); returns the request handle whose ``outputs`` fill on completion.
+
+        Shape/dtype are validated here, at admission — a bad example must be
+        rejected up front, not blow up a coalesced batch mid-``step`` and
+        take its co-batched requests down with it."""
+        x = np.asarray(x)
+        ok = len(x.shape) == len(self._example_shape) and all(
+            want is None or got == want for got, want in zip(x.shape, self._example_shape)
+        )
+        if not ok or x.dtype != self._example_dtype:
+            raise ValueError(
+                f"request example must have shape {self._example_shape} and "
+                f"dtype {self._example_dtype}, got {x.shape} {x.dtype}"
+            )
+        req = CompiledRequest(uid=self._uid, x=x, t_submit=time.monotonic())
+        self._uid += 1
+        self.queue.append(req)
+        self.metrics["requests"] += 1
+        return req
+
+    # -- main loop ------------------------------------------------------------
+    def step(self) -> List[CompiledRequest]:
+        """One server cycle: coalesce up to ``max_batch`` queued requests into
+        a single bucketed model execution.  Returns the completed requests."""
+        if not self.queue:
+            return []
+        n = min(len(self.queue), self.cfg.max_batch)
+        reqs = [self.queue.popleft() for _ in range(n)]
+        batch = np.stack([r.x for r in reqs])
+        # the compiled model pads n → bucket and serves the bucket's plan
+        # from its PlanCache; we only account for the coalescing here
+        try:
+            outs = self.cm.run({self.input_name: batch})
+        except Exception:
+            # backend/jit failure must not lose the coalesced requests: put
+            # them back at the head of the queue (original order) and let
+            # the caller decide whether to retry
+            self.queue.extendleft(reversed(reqs))
+            raise
+        bucket = batch_bucket(n)
+        self.metrics["batches"] += 1
+        self.metrics["padded_rows"] += bucket - n
+        hist = self.metrics["bucket_batches"]
+        hist[bucket] = hist.get(bucket, 0) + 1
+        now = time.monotonic()
+        batch_outs = self.cm.batch_output_names
+        for i, req in enumerate(reqs):
+            # only batch-carrying outputs scatter per request; anything
+            # batch-independent (e.g. a constant auxiliary output) is shared
+            req.outputs = {k: (v[i] if k in batch_outs else v) for k, v in outs.items()}
+            req.done = True
+            req.t_done = now
+            self._latencies.append(now - req.t_submit)
+        self.metrics["completed"] += n
+        return reqs
+
+    def run_until_drained(self, max_cycles: int = 10_000) -> List[CompiledRequest]:
+        """Step until the queue is empty; returns everything completed."""
+        done: List[CompiledRequest] = []
+        for _ in range(max_cycles):
+            if not self.queue:
+                return done
+            done.extend(self.step())
+        raise RuntimeError("compiled-model serve loop did not drain")
+
+    # -- reporting ------------------------------------------------------------
+    def summary(self) -> Dict[str, Any]:
+        """Serving metrics + plan-cache behavior + latency aggregates."""
+        lat = np.asarray(self._latencies, np.float64)
+        cache = self.cm.cache_stats
+        served = cache["hits"] + cache["misses"]
+        out = dict(self.metrics)
+        out["bucket_batches"] = dict(self.metrics["bucket_batches"])  # snapshot, not alias
+        out.update(
+            plan_cache=cache,
+            plan_cache_hit_rate=(cache["hits"] / served) if served else 0.0,
+            latency_avg_ms=float(lat.mean() * 1e3) if lat.size else None,
+            latency_p95_ms=float(np.percentile(lat, 95) * 1e3) if lat.size else None,
+            latency_max_ms=float(lat.max() * 1e3) if lat.size else None,
+        )
+        return out

@@ -16,13 +16,14 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core.cache import LruCache
 from ..models import model as M
 
 
@@ -48,6 +49,34 @@ class EngineConfig:
     temperature: float = 1.0  # sampling path only (greedy=False)
     top_k: int = 0  # 0 ⇒ sample the full vocab
     seed: int = 0  # host-side sampling rng seed
+    # resident jitted prefill fns (LRU beyond); None = one per possible
+    # prompt bucket (max_len // prefill_bucket) so steady traffic over the
+    # full bucket range never thrashes — the bound exists for configs where
+    # that product is large, not to cause recompiles in the common case
+    prefill_cache_size: Optional[int] = None
+
+
+def _prefill_capacity(ecfg: "EngineConfig") -> int:
+    """Resolve the prefill-cache bound: explicit config wins, else one slot
+    per reachable prompt bucket (prompts are padded to multiples of
+    ``prefill_bucket`` and capped by ``max_len``)."""
+    if ecfg.prefill_cache_size is not None:
+        return ecfg.prefill_cache_size
+    return max(1, ecfg.max_len // ecfg.prefill_bucket)
+
+
+#: Module-level fallback sampler state: callers that don't thread an rng
+#: (the engine always does — see ``ServeEngine._select``) draw from one
+#: seeded stream instead of a fresh ``default_rng()`` per call, so unseeded
+#: use is reproducible run-to-run.  Reset it with :func:`seed_sampler`.
+_FALLBACK_RNG = np.random.default_rng(0)
+
+
+def seed_sampler(seed: int) -> None:
+    """Re-seed the module fallback rng used when ``sample_token`` is called
+    without an explicit generator."""
+    global _FALLBACK_RNG
+    _FALLBACK_RNG = np.random.default_rng(seed)
 
 
 def sample_token(
@@ -61,7 +90,9 @@ def sample_token(
 
     ``temperature <= 0`` degenerates to argmax; ``top_k > 0`` restricts
     sampling to the k highest logits (ties at the k-th value are all kept,
-    so the candidate set is never smaller than k)."""
+    so the candidate set is never smaller than k).  Without an explicit
+    ``rng`` the seeded module fallback stream is used (:func:`seed_sampler`),
+    never a fresh unseeded generator per call."""
     z = np.asarray(logits, np.float64).reshape(-1)
     if temperature <= 0.0:
         return int(z.argmax())
@@ -72,7 +103,7 @@ def sample_token(
     z = z - z.max()
     p = np.exp(z)
     p /= p.sum()
-    rng = rng if rng is not None else np.random.default_rng()
+    rng = rng if rng is not None else _FALLBACK_RNG
     return int(rng.choice(z.size, p=p))
 
 
@@ -95,9 +126,19 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, t, pos, c: M.decode_step(p, t, pos, c, cfg, compute_dtype=compute_dtype)
         )
-        self._prefill_cache: Dict[int, Callable] = {}
+        # bounded: adversarial prompt-length traffic would otherwise pin one
+        # jitted prefill per bucket forever (sizes surface in self.metrics);
+        # the default bound covers every reachable bucket, so it only evicts
+        # when explicitly configured tighter
+        self._prefill_cache: LruCache = LruCache(_prefill_capacity(ecfg))
         self._rng = np.random.default_rng(ecfg.seed)
-        self.metrics = {"decode_steps": 0, "prefills": 0, "completed": 0}
+        self.metrics = {
+            "decode_steps": 0,
+            "prefills": 0,
+            "completed": 0,
+            "prefill_cache_size": 0,
+            "prefill_cache_evictions": 0,
+        }
 
     def _select(self, logits_row) -> int:
         """Next-token choice for one slot: argmax (greedy) or
@@ -118,14 +159,18 @@ class ServeEngine:
         self.queue.append(req)
 
     def _prefill_fn(self, plen: int):
-        if plen not in self._prefill_cache:
+        jitted = self._prefill_cache.get(plen)
+        if jitted is None:
             cfg, dt = self.cfg, self.compute_dtype
 
             def fn(params, tokens, cache):
                 return M.prefill(params, {"tokens": tokens}, cfg, cache, compute_dtype=dt, q_chunk=min(plen, 512), kv_chunk=min(plen, 512))
 
-            self._prefill_cache[plen] = jax.jit(fn)
-        return self._prefill_cache[plen]
+            jitted = jax.jit(fn)
+            self._prefill_cache.put(plen, jitted)
+        self.metrics["prefill_cache_size"] = len(self._prefill_cache)
+        self.metrics["prefill_cache_evictions"] = self._prefill_cache.stats["evictions"]
+        return jitted
 
     def _admit(self) -> None:
         for slot in range(self.ecfg.slots):

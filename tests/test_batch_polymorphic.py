@@ -1,0 +1,376 @@
+"""Differential conformance for batch-polymorphic compilation.
+
+One ``compile_model(batch="dynamic")`` artifact must serve every batch size
+bit-exactly — against the reference runtime AND against a per-shape *static*
+compile of the same model — with at most one specialization (one PlanCache
+miss, no re-lowering) per power-of-two bucket.  Covers the MLP (fused
+qlinear chain) and the CNN (conv + Flatten + head) across batch sizes
+{1, 3, 8, 17} on the ref and interpret backends, plus the plan-cache
+LRU-bounding behavior and the analysis-layer symbolic-batch helpers.
+"""
+import numpy as np
+import pytest
+
+from repro.backend.plan import PlanCache, batch_bucket
+from repro.backend.lowering import specialize_plan
+from repro.core.cache import LruCache
+from repro.core.compile import compile_model
+from repro.core.runtime import ReferenceRuntime
+from repro.core.toolchain import CNNSpec, ConvLayerSpec, MLPSpec, quantize_cnn, quantize_mlp
+from repro.passes import analysis
+
+BATCH_SIZES = (1, 3, 8, 17)
+BACKENDS = ("ref", "interpret")
+
+
+def _mlp_model():
+    rng = np.random.default_rng(11)
+    spec = MLPSpec(
+        weights=[
+            rng.normal(size=(32, 48)).astype(np.float32) * 0.15,
+            rng.normal(size=(48, 10)).astype(np.float32) * 0.2,
+        ],
+        biases=[
+            rng.normal(size=(48,)).astype(np.float32) * 0.1,
+            rng.normal(size=(10,)).astype(np.float32) * 0.1,
+        ],
+        activations=["Relu", None],
+    )
+    calib = rng.normal(size=(128, 32)).astype(np.float32)
+    model = quantize_mlp(spec, calib, name="dyn_mlp")
+
+    def feed(m):
+        return {"input_q": rng.integers(-128, 128, (m, 32)).astype(np.int8)}
+
+    return model, feed
+
+
+def _cnn_model():
+    rng = np.random.default_rng(12)
+    spec = CNNSpec(
+        convs=[
+            ConvLayerSpec(
+                rng.normal(size=(4, 1, 3, 3)).astype(np.float32) * 0.3,
+                rng.normal(size=(4,)).astype(np.float32) * 0.1,
+                strides=(1, 1),
+                pads=(1, 1, 1, 1),
+                activation="Relu",
+            )
+        ],
+        head=MLPSpec(
+            weights=[rng.normal(size=(4 * 8 * 8, 10)).astype(np.float32) * 0.1],
+            biases=[rng.normal(size=(10,)).astype(np.float32) * 0.1],
+            activations=[None],
+        ),
+    )
+    calib = rng.normal(size=(64, 1, 8, 8)).astype(np.float32)
+    model = quantize_cnn(spec, calib, per_channel=True, name="dyn_cnn")
+
+    def feed(m):
+        return {"input_q": rng.integers(-128, 128, (m, 1, 8, 8)).astype(np.int8)}
+
+    return model, feed
+
+
+def _uint8_pc_model():
+    """uint8 activations (plan-time signed fold) + per-channel rescale +
+    two-Mul epilogue — the template path must carry the folded bias and the
+    vector params exactly like the static path does."""
+    from repro.core import patterns, pqir, quant
+
+    rng = np.random.default_rng(13)
+    w = rng.normal(size=(32, 24)).astype(np.float32) * 0.2
+    w[:, 5] *= 25.0
+    b = rng.normal(size=(24,)).astype(np.float32) * 0.1
+    p = quant.quantize_linear_layer(w, b, 0.05, 0.1, per_channel=True)
+    gb = pqir.GraphBuilder("dyn_u8")
+    x = gb.add_input("x", "uint8", (None, 32))
+    y = patterns.fc_layer(gb, x, p, "fc0", two_mul=True, activation="Relu")
+    gb.add_output(y, "int8", (None, 24))
+    model = gb.build()
+
+    def feed(m):
+        return {"x": rng.integers(0, 256, (m, 32)).astype(np.uint8)}
+
+    return model, feed
+
+
+MODELS = {"mlp": _mlp_model, "cnn": _cnn_model, "uint8_pc": _uint8_pc_model}
+
+
+def _static_for_batch(model, m: int, backend: str):
+    """A per-shape static compile: the same artifact with the symbolic batch
+    pinned to ``m`` in its input/output signature."""
+    pinned = analysis.clone_model(model)
+    for t in list(pinned.graph.inputs) + list(pinned.graph.outputs):
+        if analysis.has_symbolic_batch(tuple(t.shape)):
+            t.shape = (m,) + tuple(t.shape[1:])
+    return compile_model(pinned, backend=backend)
+
+
+class TestDynamicConformance:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("name", sorted(MODELS))
+    def test_dynamic_matches_reference_and_static(self, name, backend):
+        model, feed = MODELS[name]()
+        rt = ReferenceRuntime(model)
+        cm = compile_model(model, backend=backend, batch="dynamic")
+        assert cm.is_dynamic and cm.plan.batch == "dynamic"
+        for m in BATCH_SIZES:
+            feeds = feed(m)
+            ref = rt.run(feeds)
+            got = cm.run(feeds)
+            static = _static_for_batch(model, m, backend).run(feeds)
+            for k, want in ref.items():
+                assert got[k].shape == want.shape, (name, backend, m)
+                np.testing.assert_array_equal(got[k], want, err_msg=f"{name}/{backend}/m={m} vs ref")
+                np.testing.assert_array_equal(
+                    static[k], want, err_msg=f"{name}/{backend}/m={m} static vs ref"
+                )
+
+    @pytest.mark.parametrize("name", sorted(MODELS))
+    def test_one_specialization_per_bucket(self, name):
+        model, feed = MODELS[name]()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        for m in BATCH_SIZES:  # buckets {1, 4, 8, 32}
+            cm.run(feed(m))
+        buckets = {batch_bucket(m) for m in BATCH_SIZES}
+        assert cm.cache_stats["misses"] == len(buckets)
+        assert cm.cache_stats["size"] == len(buckets)
+        for m in BATCH_SIZES:  # same buckets again: pure cache hits
+            cm.run(feed(m))
+        assert cm.cache_stats["misses"] == len(buckets)
+        assert cm.cache_stats["hits"] >= len(BATCH_SIZES)
+
+    def test_sizes_sharing_a_bucket_specialize_once(self):
+        model, feed = MODELS["mlp"]()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        for m in (5, 6, 7, 8):  # all land in bucket 8
+            cm.run(feed(m))
+        assert cm.cache_stats == {
+            "size": 1, "capacity": PlanCache.DEFAULT_CAPACITY,
+            "hits": 3, "misses": 1, "evictions": 0,
+        }
+
+    def test_plan_cache_is_bounded(self):
+        model, feed = MODELS["mlp"]()
+        cm = compile_model(model, backend="ref", batch="dynamic", plan_cache_capacity=2)
+        for m in (1, 2, 4):
+            cm.run(feed(m))
+        stats = cm.cache_stats
+        assert stats["size"] == 2 and stats["evictions"] == 1
+        cm.run(feed(1))  # bucket 1 was LRU-evicted → re-specializes
+        assert cm.cache_stats["misses"] == 4
+
+
+class TestTemplatePlan:
+    def test_template_is_not_directly_executable_on_tiled_backends(self):
+        model, feed = MODELS["mlp"]()
+        cm = compile_model(model, backend="interpret", batch="dynamic")
+        with pytest.raises(RuntimeError, match="specialize"):
+            cm.plan.execute({"input_q": feed(4)["input_q"]})
+
+    def test_specialize_binds_m_and_bm_without_copying_params(self):
+        model, _ = MODELS["mlp"]()
+        cm = compile_model(model, backend="interpret", batch="dynamic")
+        spec = specialize_plan(cm.plan, 8)
+        assert spec.batch == 8
+        for tmpl_step, spec_step in zip(cm.plan.steps, spec.steps):
+            if tmpl_step.kind != "fused_qlinear":
+                continue
+            shape = spec_step.params["shape"]
+            assert shape["m"] == 8 and shape["bm"] == 32  # sublane-min tile, not 128
+            assert "lead" not in shape and "dynamic_batch" not in spec_step.params
+            # padded parameter arrays are shared with the template, not copied
+            for a, b in zip(tmpl_step.consts, spec_step.consts):
+                assert a is b
+            # symbolic leading dims bound in the value typing
+            for info in spec_step.out_info:
+                assert info.shape[0] == 8
+
+    def test_specialize_rejects_non_templates(self):
+        model, _ = MODELS["mlp"]()
+        cm = compile_model(model, backend="interpret")
+        with pytest.raises(ValueError, match="dynamic"):
+            specialize_plan(cm.plan, 8)
+
+    def test_dynamic_compile_requires_symbolic_batch_input(self):
+        model, _ = MODELS["mlp"]()
+        pinned = analysis.clone_model(model)
+        for t in pinned.graph.inputs:
+            t.shape = (4,) + tuple(t.shape[1:])
+        with pytest.raises(ValueError, match="symbolic"):
+            compile_model(pinned, batch="dynamic")
+
+    def test_misdeclared_output_batch_dim_still_sliced(self):
+        """An output declared with a concrete leading dim is still recognized
+        as batch-carrying via the plan's inferred value shapes — the result
+        comes back sliced to the true batch, not bucket-padded."""
+        from repro.core import patterns, pqir, quant
+
+        rng = np.random.default_rng(14)
+        p = quant.quantize_linear_layer(
+            rng.normal(size=(16, 8)).astype(np.float32) * 0.2,
+            rng.normal(size=(8,)).astype(np.float32) * 0.1, 0.05, 0.1,
+        )
+        gb = pqir.GraphBuilder("misdeclared")
+        x = gb.add_input("x", "int8", (None, 16))
+        y = patterns.fc_layer(gb, x, p, "fc0", two_mul=True)
+        gb.add_output(y, "int8", (4, 8))  # wrong: leading dim is really dynamic
+        model = gb.build()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        assert cm.batch_output_names == {y}
+        got = cm.run({"x": rng.integers(-128, 128, (3, 16)).astype(np.int8)})
+        assert got[y].shape == (3, 8)
+
+    def test_batch_independent_output_returned_whole(self):
+        """A constant (batch-independent) auxiliary output is not sliced."""
+        from repro.core import pqir
+
+        gb = pqir.GraphBuilder("aux")
+        x = gb.add_input("x", "float32", (None, 4))
+        c1 = gb.add_initializer("c1", np.arange(5, dtype=np.float32))
+        c2 = gb.add_initializer("c2", np.ones(5, np.float32))
+        y = gb.op("Relu", [x])
+        z = gb.op("Add", [c1, c2])
+        gb.add_output(y, "float32", (None, 4))
+        gb.add_output(z, "float32", (5,))
+        model = gb.build()
+        # optimize=False keeps the const-only Add as a live step
+        cm = compile_model(model, backend="ref", batch="dynamic", optimize=False, fuse=False)
+        assert cm.batch_output_names == {y}
+        got = cm.run({"x": np.ones((3, 4), np.float32)})
+        assert got[y].shape == (3, 4)
+        np.testing.assert_array_equal(got[z], np.arange(5, dtype=np.float32) + 1.0)
+
+    def test_zero_batch_rejected(self):
+        model, feed = MODELS["mlp"]()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        with pytest.raises(ValueError, match="batch must be >= 1"):
+            cm.run({"input_q": np.zeros((0, 32), np.int8)})
+
+
+class TestBatchMixingRejection:
+    """compile_model(batch="dynamic") must refuse graphs whose ops mix rows
+    across the batch axis — zero-row padding would silently corrupt them."""
+
+    def _graph(self, build):
+        from repro.core import pqir
+
+        gb = pqir.GraphBuilder("mix")
+        x = gb.add_input("x", "float32", (None, 4, 4))
+        y = build(gb, x)
+        gb.add_output(y, "float32", (None,))
+        return gb.build()
+
+    @pytest.mark.parametrize(
+        "case, build",
+        [
+            ("reduce_all", lambda gb, x: gb.op("ReduceMean", [x])),
+            ("softmax_axis0", lambda gb, x: gb.op("Softmax", [x], axis=0)),
+            ("transpose_batch", lambda gb, x: gb.op("Transpose", [x], perm=[1, 0, 2])),
+            ("flatten_axis0", lambda gb, x: gb.op("Flatten", [x], axis=0)),
+            (
+                "reshape_folds_batch",
+                lambda gb, x: gb.op(
+                    "Reshape", [x, gb.add_initializer("t", np.asarray([-1, 8], np.int64))]
+                ),
+            ),
+            ("concat_axis0", lambda gb, x: gb.op("Concat", [x, x], axis=0)),
+        ],
+    )
+    def test_batch_mixing_op_rejected(self, case, build):
+        model = self._graph(build)
+        with pytest.raises(ValueError, match="batch-elementwise"):
+            compile_model(model, batch="dynamic", fuse=False, optimize=False)
+        compile_model(model, fuse=False, optimize=False)  # static stays fine
+
+    def test_batch_safe_shape_ops_accepted(self):
+        """Row-preserving uses of the same ops compile dynamically."""
+        from repro.core import pqir
+
+        gb = pqir.GraphBuilder("safe")
+        x = gb.add_input("x", "float32", (None, 4, 4))
+        t = gb.add_initializer("t", np.asarray([-1, 16], np.int64))
+        r = gb.op("Reshape", [x, t])  # (-1, 16): batch maps 1:1
+        s = gb.op("Softmax", [r], axis=-1)
+        f = gb.op("Flatten", [s], axis=1)
+        gb.add_output(f, "float32", (None, 16))
+        model = gb.build()
+        cm = compile_model(model, batch="dynamic", fuse=False, optimize=False)
+        ref = ReferenceRuntime(model)
+        for m in (1, 3, 5):
+            feeds = {"x": np.random.default_rng(m).normal(size=(m, 4, 4)).astype(np.float32)}
+            want, got = ref.run(feeds)[f], cm.run(feeds)[f]
+            np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+class TestSymbolicBatchAnalysis:
+    def test_infer_shapes_binds_batch_through_the_graph(self):
+        """Leading-dim-symbolic inference: binding the input batch propagates
+        through Conv → Flatten → MatMulInteger to every value."""
+        model, _ = MODELS["cnn"]()
+        sym = analysis.infer_shapes(model.graph)
+        bound = analysis.infer_shapes(model.graph, batch=8)
+        saw_symbolic = 0
+        for name, shape in sym.items():
+            if name in model.graph.initializers:
+                continue
+            if analysis.has_symbolic_batch(shape):
+                saw_symbolic += 1
+                assert bound[name] == (8,) + tuple(shape[1:]), name
+        assert saw_symbolic >= 3  # input, conv out, flatten out, head out…
+
+    def test_bind_batch_helpers(self):
+        assert analysis.bind_batch((None, 4), 8) == (8, 4)
+        assert analysis.bind_batch((None, 4), None) == (None, 4)
+        assert analysis.bind_batch((2, 4), 8) == (2, 4)
+        assert analysis.bind_batch(None, 8) is None
+        assert analysis.has_symbolic_batch((None, 3))
+        assert not analysis.has_symbolic_batch((2, 3))
+        assert not analysis.has_symbolic_batch(None)
+
+    def test_bind_qmatmul_batch_lead_handling(self):
+        from repro.kernels.ops import bind_qmatmul_batch
+
+        base = {"k": 64, "n": 32, "kp": 128, "np": 128, "bk": 128, "bn": 128}
+        b = bind_qmatmul_batch({**base, "lead": (None,)}, 8)
+        assert b["m"] == 8 and b["bm"] == 32 and "lead" not in b
+        b = bind_qmatmul_batch({**base, "lead": (None, 4)}, 8)
+        assert b["m"] == 32  # flat M = batch × static leading dims
+        # wholly-unknown activation shape: M stays unknown, default bm stands
+        b = bind_qmatmul_batch({**base, "lead": None}, 8)
+        assert b["m"] is None and b["bm"] == 128
+        # non-leading unknown dim: cannot know flat M either
+        b = bind_qmatmul_batch({**base, "lead": (None, None)}, 8)
+        assert b["m"] is None
+
+    def test_batch_bucket(self):
+        assert [batch_bucket(m) for m in (1, 2, 3, 4, 5, 8, 17, 32)] == [1, 2, 4, 4, 8, 8, 32, 32]
+        with pytest.raises(ValueError):
+            batch_bucket(0)
+
+
+class TestLruCache:
+    def test_hit_miss_eviction_accounting(self):
+        c = LruCache(2)
+        assert c.get("a") is None
+        c.put("a", 1)
+        c.put("b", 2)
+        assert c.get("a") == 1  # refreshes "a" → "b" is now LRU
+        c.put("c", 3)  # evicts "b"
+        assert "b" not in c and "a" in c and "c" in c
+        assert c.get("b") is None
+        assert c.stats == {"size": 2, "capacity": 2, "hits": 1, "misses": 2, "evictions": 1}
+
+    def test_put_refreshes_existing_key(self):
+        c = LruCache(2)
+        c.put("a", 1)
+        c.put("b", 2)
+        c.put("a", 10)  # refresh, not insert — "b" stays resident
+        c.put("c", 3)  # evicts "b" (LRU), not "a"
+        assert c.get("a") == 10 and "b" not in c
+
+    def test_capacity_validation(self):
+        with pytest.raises(ValueError):
+            LruCache(0)

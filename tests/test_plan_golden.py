@@ -94,3 +94,22 @@ def test_per_channel_cnn_plan_golden():
     assert cm.stats["fused_qconv"] == 1 and cm.stats["fused_qlinear"] == 1
     assert cm.stats["generic"] == 1  # the Flatten between conv stack and head
     _check_golden("per_channel_cnn.plan.txt", cm.plan.pretty() + "\n")
+
+
+def test_quickstart_mlp_template_plan_golden():
+    """The batch-polymorphic *template* rendering: batch-open shape records
+    (lead marks the symbolic dim; no m/bm) on every fused step."""
+    cm = compile_model(quickstart_mlp(), backend="interpret", batch="dynamic")
+    assert cm.stats["fused_qlinear"] == 3 and cm.stats["generic"] == 0
+    _check_golden("quickstart_mlp.template.plan.txt", cm.plan.pretty() + "\n")
+
+
+def test_specialized_plan_binds_bucket_in_rendering():
+    """A bucket specialization of the template renders fully concrete —
+    same slots/kernels, m/bm bound, batch stamped in the header."""
+    cm = compile_model(quickstart_mlp(), backend="interpret", batch="dynamic")
+    plan8, _ = cm.specialized(8)
+    text = plan8.pretty()
+    assert "batch=8" in text.splitlines()[0]
+    assert "m=8" in text and "bm=32" in text
+    assert "lead=" not in text and "dynamic_batch" not in text

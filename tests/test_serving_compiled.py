@@ -1,0 +1,192 @@
+"""Micro-batching server over a batch-polymorphic compiled artifact.
+
+The server coalesces queued single-example requests into power-of-two batch
+buckets served through the CompiledModel's PlanCache; every request must get
+back exactly the rows a solo reference-runtime run would produce.
+"""
+import numpy as np
+import pytest
+
+from repro.core.compile import compile_model
+from repro.core.runtime import ReferenceRuntime
+from repro.core.toolchain import MLPSpec, quantize_mlp
+from repro.serving import CompiledModelServer, CompiledServerConfig
+
+
+def _artifact():
+    rng = np.random.default_rng(21)
+    spec = MLPSpec(
+        weights=[
+            rng.normal(size=(16, 32)).astype(np.float32) * 0.2,
+            rng.normal(size=(32, 8)).astype(np.float32) * 0.2,
+        ],
+        biases=[
+            rng.normal(size=(32,)).astype(np.float32) * 0.1,
+            rng.normal(size=(8,)).astype(np.float32) * 0.1,
+        ],
+        activations=["Relu", None],
+    )
+    calib = rng.normal(size=(64, 16)).astype(np.float32)
+    return quantize_mlp(spec, calib, name="served_mlp"), rng
+
+
+def _examples(rng, n):
+    return [rng.integers(-128, 128, (16,)).astype(np.int8) for _ in range(n)]
+
+
+class TestCompiledModelServer:
+    def test_coalesced_results_match_reference_per_request(self):
+        model, rng = _artifact()
+        rt = ReferenceRuntime(model)
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=8))
+        reqs = [srv.submit(x) for x in _examples(rng, 11)]
+        done = srv.run_until_drained()
+        assert len(done) == 11 and all(r.done for r in reqs)
+        out_name = cm.output_names[0]
+        for r in reqs:
+            solo = rt.run({"input_q": r.x[None, :]})[out_name][0]
+            np.testing.assert_array_equal(r.outputs[out_name], solo, err_msg=f"req {r.uid}")
+            assert r.t_done is not None and r.latency_s >= 0.0
+
+    def test_bucketing_and_metrics(self):
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=8))
+        for x in _examples(rng, 11):
+            srv.submit(x)
+        srv.step()  # 8 requests → bucket 8
+        srv.step()  # 3 requests → bucket 4 (one padded row)
+        m = srv.metrics
+        assert m["requests"] == 11 and m["completed"] == 11 and m["batches"] == 2
+        assert m["bucket_batches"] == {8: 1, 4: 1}
+        assert m["padded_rows"] == 1
+        assert not srv.queue
+
+    def test_steady_traffic_served_from_plan_cache(self):
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=8))
+        for _ in range(5):  # five full waves, one bucket → one specialization
+            for x in _examples(rng, 8):
+                srv.submit(x)
+            srv.run_until_drained()
+        summary = srv.summary()
+        assert summary["plan_cache"]["misses"] == 1
+        assert summary["plan_cache"]["hits"] == 4
+        assert summary["plan_cache_hit_rate"] == pytest.approx(0.8)
+        assert summary["latency_avg_ms"] is not None
+        assert summary["latency_p95_ms"] >= 0.0
+
+    def test_bad_examples_rejected_at_submit_not_mid_batch(self):
+        """A malformed request must fail at admission — popping it into a
+        coalesced batch would take its co-batched requests down with it."""
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm)
+        with pytest.raises(ValueError, match="shape"):
+            srv.submit(rng.integers(-128, 128, (32,)).astype(np.int8))  # wrong width
+        with pytest.raises(ValueError, match="dtype"):
+            srv.submit(rng.integers(-128, 128, (16,)).astype(np.int32))  # wrong dtype
+        assert not srv.queue and srv.metrics["requests"] == 0
+        good = srv.submit(rng.integers(-128, 128, (16,)).astype(np.int8))
+        srv.run_until_drained()
+        assert good.done
+
+    def test_execution_failure_requeues_the_batch(self):
+        """A backend/jit failure mid-step must not lose the coalesced
+        requests — they go back to the head of the queue in order."""
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=4))
+        reqs = [srv.submit(x) for x in _examples(rng, 3)]
+        boom = RuntimeError("device OOM")
+        real_run = cm.run
+        cm.run = lambda feeds: (_ for _ in ()).throw(boom)
+        with pytest.raises(RuntimeError, match="device OOM"):
+            srv.step()
+        assert [r.uid for r in srv.queue] == [r.uid for r in reqs]  # order kept
+        assert all(not r.done for r in reqs)
+        cm.run = real_run
+        srv.run_until_drained()
+        assert all(r.done for r in reqs)
+        assert srv.metrics["completed"] == srv.metrics["requests"] == 3
+
+    def test_step_on_empty_queue_is_noop(self):
+        model, _ = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm)
+        assert srv.step() == []
+        assert srv.run_until_drained() == []
+        assert srv.metrics["batches"] == 0
+
+    def test_rejects_static_artifacts(self):
+        model, _ = _artifact()
+        cm = compile_model(model, backend="ref")
+        with pytest.raises(ValueError, match="dynamic"):
+            CompiledModelServer(cm)
+
+    def test_rejects_multi_input_artifacts_at_construction(self):
+        """A second (even static) input can't be fed by the coalescing loop —
+        fail at construction, not with a KeyError mid-serving."""
+        from repro.core import pqir
+
+        gb = pqir.GraphBuilder("two_in")
+        a = gb.add_input("a", "float32", (None, 4))
+        b = gb.add_input("b", "float32", (4, 4))
+        y = gb.op("MatMul", [a, b])
+        gb.add_output(y, "float32", (None, 4))
+        cm = compile_model(gb.build(), backend="ref", batch="dynamic", fuse=False)
+        with pytest.raises(ValueError, match="exactly one input"):
+            CompiledModelServer(cm)
+
+    def test_summary_snapshots_do_not_alias_live_state(self):
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=8))
+        for x in _examples(rng, 2):
+            srv.submit(x)
+        srv.run_until_drained()
+        s1 = srv.summary()
+        for x in _examples(rng, 8):
+            srv.submit(x)
+        srv.run_until_drained()
+        assert s1["bucket_batches"] == {2: 1}  # unchanged by later steps
+
+    def test_rejects_bad_max_batch(self):
+        with pytest.raises(ValueError, match="max_batch"):
+            CompiledServerConfig(max_batch=0)
+        with pytest.raises(ValueError, match="latency_window"):
+            CompiledServerConfig(latency_window=0)
+
+    def test_latency_window_is_bounded(self):
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=4, latency_window=6))
+        for x in _examples(rng, 10):
+            srv.submit(x)
+        srv.run_until_drained()
+        assert len(srv._latencies) == 6  # sliding window, not one per request
+        assert srv.summary()["latency_avg_ms"] is not None
+
+    def test_batch_independent_output_shared_across_requests(self):
+        """Auxiliary outputs without a batch dim are handed to every request
+        whole, not indexed per request."""
+        from repro.core import pqir
+
+        gb = pqir.GraphBuilder("aux_served")
+        x = gb.add_input("x", "float32", (None, 4))
+        c1 = gb.add_initializer("c1", np.arange(5, dtype=np.float32))
+        c2 = gb.add_initializer("c2", np.ones(5, np.float32))
+        y = gb.op("Relu", [x])
+        z = gb.op("Add", [c1, c2])
+        gb.add_output(y, "float32", (None, 4))
+        gb.add_output(z, "float32", (5,))
+        cm = compile_model(gb.build(), backend="ref", batch="dynamic", optimize=False, fuse=False)
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=8))
+        rng = np.random.default_rng(0)
+        reqs = [srv.submit(rng.normal(size=(4,)).astype(np.float32)) for _ in range(7)]
+        srv.run_until_drained()
+        for r in reqs:
+            assert r.outputs[y].shape == (4,)
+            np.testing.assert_array_equal(r.outputs[z], np.arange(5, dtype=np.float32) + 1.0)

@@ -1,11 +1,11 @@
-"""E7: serving-engine next-token selection — greedy vs temperature/top-k.
-
-The engine's non-greedy branch used to be dead code (both arms called
-argmax); these tests pin the real sampling path.
+"""E7: serving-engine next-token selection — greedy vs temperature/top-k —
+plus sampling determinism (the module fallback rng) and the bounded LRU
+prefill-function cache.
 """
 import numpy as np
 
-from repro.serving.engine import EngineConfig, ServeEngine, sample_token
+from repro.core.cache import LruCache
+from repro.serving.engine import EngineConfig, ServeEngine, sample_token, seed_sampler
 
 
 def _logits(rng, vocab=32):
@@ -50,6 +50,29 @@ class TestSampleToken:
         b = [sample_token(z, temperature=1.0, top_k=4, rng=np.random.default_rng(42)) for _ in range(20)]
         assert a == b
 
+    def test_no_rng_uses_seeded_module_stream(self):
+        """Without an explicit rng the draws come from one seeded module
+        stream (not a fresh default_rng per call) — re-seeding replays the
+        exact sequence."""
+        z = _logits(np.random.default_rng(11))
+        seed_sampler(123)
+        a = [sample_token(z, temperature=1.5) for _ in range(20)]
+        seed_sampler(123)
+        b = [sample_token(z, temperature=1.5) for _ in range(20)]
+        assert a == b
+        # and it is a stream, not a constant: consecutive draws differ somewhere
+        assert len(set(a)) > 1
+
+    def test_module_stream_matches_equivalent_generator(self):
+        """The fallback draws exactly as an explicitly-threaded generator
+        with the same seed would — no hidden extra state."""
+        z = _logits(np.random.default_rng(12))
+        seed_sampler(7)
+        a = [sample_token(z, temperature=1.0, top_k=6) for _ in range(10)]
+        rng = np.random.default_rng(7)
+        b = [sample_token(z, temperature=1.0, top_k=6, rng=rng) for _ in range(10)]
+        assert a == b
+
 
 class TestEngineSelect:
     def _engine(self, **cfg_kwargs):
@@ -77,3 +100,48 @@ class TestEngineSelect:
         z = _logits(np.random.default_rng(10))
         allowed = set(np.argsort(z)[-3:].tolist())
         assert {eng._select(z) for _ in range(200)} <= allowed
+
+
+class TestPrefillCapacityDefault:
+    def test_default_covers_every_reachable_bucket(self):
+        from repro.serving.engine import _prefill_capacity
+
+        # prompts pad to multiples of prefill_bucket, capped by max_len —
+        # the default bound fits one jitted fn per reachable bucket
+        assert _prefill_capacity(EngineConfig(max_len=256, prefill_bucket=32)) == 8
+        assert _prefill_capacity(EngineConfig(max_len=1024, prefill_bucket=32)) == 32
+        assert _prefill_capacity(EngineConfig(max_len=16, prefill_bucket=32)) == 1
+
+    def test_explicit_bound_wins(self):
+        from repro.serving.engine import _prefill_capacity
+
+        assert _prefill_capacity(EngineConfig(max_len=1024, prefill_bucket=32, prefill_cache_size=4)) == 4
+
+
+class TestPrefillCacheBounded:
+    def _engine(self, capacity):
+        # _prefill_fn only touches cfg/compute_dtype inside the (untraced)
+        # closure, the cache, and metrics — skip the heavy model setup
+        eng = object.__new__(ServeEngine)
+        eng.cfg = None
+        eng.compute_dtype = None
+        eng._prefill_cache = LruCache(capacity)
+        eng.metrics = {}
+        return eng
+
+    def test_repeat_bucket_reuses_jitted_fn(self):
+        eng = self._engine(capacity=4)
+        f32 = eng._prefill_fn(32)
+        assert eng._prefill_fn(32) is f32
+        assert eng.metrics["prefill_cache_size"] == 1
+        assert eng.metrics["prefill_cache_evictions"] == 0
+
+    def test_lru_eviction_and_metrics(self):
+        eng = self._engine(capacity=2)
+        f32 = eng._prefill_fn(32)
+        eng._prefill_fn(64)
+        eng._prefill_fn(96)  # evicts bucket 32
+        assert eng.metrics["prefill_cache_size"] == 2
+        assert eng.metrics["prefill_cache_evictions"] == 1
+        assert 32 not in eng._prefill_cache
+        assert eng._prefill_fn(32) is not f32  # rebuilt after eviction
