@@ -20,6 +20,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                            compiled artifact: requests/s at batch buckets
                            1/8/32 + plan-cache hit rate (≥2 buckets must be
                            served from cache after warmup)
+  sys_seq_buckets        — one two-axis (named N × S) compiled artifact over
+                           a (batch ∈ {1,8}) × (seq ∈ {32,128}) scenario
+                           grid: requests/s per cell + specialization
+                           counts (asserts at most one per grid cell)
   sys_w8a8_decode        — reduced-arch decode step: bf16 vs W8A8+int8-KV
   sys_grad_compress      — int8 cross-pod gradient all-reduce (derived: wire-
                            bytes ratio vs f32)
@@ -352,6 +356,56 @@ def bench_serving_compiled():
     )
 
 
+def bench_seq_buckets():
+    """One two-axis compiled artifact (named batch N + sequence S) across a
+    (batch ∈ {1,8}) × (seq ∈ {32,128}) scenario grid.  Each cell is warmed
+    once (specialize + jit), then timed; at most one plan specialization per
+    visited grid cell is asserted — the multi-axis generalization of the
+    one-specialization-per-bucket serving contract."""
+    from repro.core import patterns, pqir, quant
+    from repro.core.compile import compile_model
+
+    rng = np.random.default_rng(10)
+    p = quant.quantize_linear_layer(
+        rng.normal(size=(64, 64)).astype(np.float32) * 0.05,
+        rng.normal(size=(64,)).astype(np.float32) * 0.1, 0.05, 0.1,
+    )
+    gb = pqir.GraphBuilder("bench_seq")
+    x = gb.add_input("x", "int8", ("N", "S", 64))
+    y = patterns.fc_layer(gb, x, p, "fc0", two_mul=True, activation="Relu")
+    gb.add_output(y, "int8", ("N", "S", 64))
+    cm = compile_model(gb.build(), backend="interpret", dynamic_axes={"N": None, "S": 32})
+
+    grid = [(b, s) for b in (1, 8) for s in (32, 128)]
+    feeds = {
+        (b, s): {"x": rng.integers(-128, 128, (b, s, 64)).astype(np.int8)}
+        for b, s in grid
+    }
+    rps = {}
+    for b, s in grid:
+        cm.run(feeds[(b, s)])  # warmup: specialize + jit this cell once
+        misses_before = cm.cache_stats["misses"]
+        repeat = 10
+        t0 = time.perf_counter()
+        for _ in range(repeat):
+            cm.run(feeds[(b, s)])
+        dt = time.perf_counter() - t0
+        rps[(b, s)] = b * repeat / dt
+        assert cm.cache_stats["misses"] == misses_before, (
+            f"grid cell ({b},{s}) re-specialized during the timed waves"
+        )
+    cache = cm.cache_stats
+    assert cache["misses"] == len(grid), cache  # ≤1 specialization per cell
+    us = 1e6 / rps[(8, 32)]
+    cells = ";".join(f"rps_b{b}_s{s}={rps[(b, s)]:.0f}" for b, s in grid)
+    row(
+        "sys_seq_buckets",
+        us,
+        f"{cells};specializations={cache['misses']};grid_cells={len(grid)};"
+        f"cache_hit_rate={cache['hit_rate']:.2f}",
+    )
+
+
 def bench_grad_compress():
     import jax
     import jax.numpy as jnp
@@ -402,6 +456,7 @@ def main(argv=None) -> None:
     bench_plan_overhead()
     bench_per_channel_overhead()
     bench_serving_compiled()
+    bench_seq_buckets()
     if not args.smoke:
         bench_w8a8_decode()
         bench_grad_compress()

@@ -37,9 +37,11 @@ An :class:`~repro.backend.plan.ExecutionPlan` is a flat program over integer
   ``params``    compile-time statics: ONNX attrs, out dtype, relu/two_mul
                 flags, and the qmatmul shape record (m, k, n, kp, np,
                 bm, bk, bn) chosen per static shape at plan time — or, on a
-                ``batch="dynamic"`` *template*, the batch-open record
-                (k, n, kp, np, bk, bn, lead) whose m/bm bind lazily per
-                batch bucket via :func:`specialize_plan` + :class:`PlanCache`
+                dynamic *template*, the axis-open record (k, n, kp, np, bk,
+                bn, lead — lead holds named symbolic axes) whose m/bm bind
+                lazily per bucket combination via :func:`specialize_plan`
+                (bindings dict) + :class:`PlanCache` (keyed on the sorted
+                bindings)
   ``consts``    baked arrays — pre-padded to tile multiples on the fused
                 qmatmul path, so the hot path never pads parameters per call
                 (padding is batch-independent: bucket specializations share
@@ -80,5 +82,8 @@ from .plan import (  # noqa: F401
     PlanStep,
     ValueInfo,
     batch_bucket,
+    bindings_key,
+    bucket_multiple,
+    resolve_bucketing,
 )
 from .registry import UnknownKernelError, backends_for, kernel_ids, lookup, register  # noqa: F401

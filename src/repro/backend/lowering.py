@@ -14,11 +14,12 @@ order.  :func:`build_plan` turns those into the typed plan:
   that :mod:`repro.passes.analysis` inferred on the optimized graph, making
   the plan self-describing for co-design inspection.
 
-Batch polymorphism splits plan building in two: :func:`build_plan` with
+Scenario specialization splits plan building in two: :func:`build_plan` with
 ``batch="dynamic"`` produces a shape-generic **template** (all of the above,
-with the symbolic leading dim left open), and :func:`specialize_plan` lazily
-binds a template to a concrete batch bucket — tile choice for the batch dim,
-flat M — without re-running fusion, liveness planning, or parameter padding.
+with the named symbolic axes left open — the classic batch-only case is just
+``axes=("N",)``), and :func:`specialize_plan` lazily binds a template to
+concrete per-axis buckets — flat M from the bound lead dims, the bm tile —
+without re-running fusion, liveness planning, or parameter padding.
 """
 from __future__ import annotations
 
@@ -27,7 +28,7 @@ from typing import Any, Dict, List, Optional, Tuple, Union
 
 from ..core.pqir import Graph
 from ..kernels import ops as kops
-from ..passes.analysis import GraphAnalysis, bind_batch
+from ..passes.analysis import BATCH_AXIS, GraphAnalysis, bind
 from .plan import CONST, NONE, SLOT, Arg, ExecutionPlan, PlanStep, ValueInfo
 
 #: Draft operand kinds: ("tensor", name) | ("const", value) | ("none", None)
@@ -65,13 +66,15 @@ def build_plan(
     drafts: List[StepDraft],
     backend: str,
     batch: Union[str, int] = "static",
+    axes: Tuple[str, ...] = (),
 ) -> ExecutionPlan:
     """Assign liveness-planned buffer slots and produce the ExecutionPlan.
 
-    ``batch="dynamic"`` marks the result as an unbound template (the drafts
-    must then carry batch-open shape records — see the compiler's fused
-    builders); slot planning, liveness and value typing are identical either
-    way, which is exactly the point: they are batch-independent."""
+    ``batch="dynamic"`` marks the result as an unbound template open over the
+    named ``axes`` (the drafts must then carry axis-open shape records — see
+    the compiler's fused builders); slot planning, liveness and value typing
+    are identical either way, which is exactly the point: they are
+    independent of every dynamic axis."""
     out_names = {t.name for t in graph.outputs}
 
     uses: Dict[str, int] = {}
@@ -147,6 +150,8 @@ def build_plan(
     if missing:
         raise ValueError(f"graph outputs never lowered: {missing}")
     outputs = tuple((t.name, slot_of[t.name]) for t in graph.outputs)
+    if batch == "dynamic" and not axes:
+        axes = (BATCH_AXIS,)
     return ExecutionPlan(
         backend=backend,
         steps=steps,
@@ -154,35 +159,72 @@ def build_plan(
         inputs=inputs,
         outputs=outputs,
         batch=batch,
+        axes=axes if batch == "dynamic" else (),
     )
 
 
-def specialize_plan(template: ExecutionPlan, batch: int) -> ExecutionPlan:
-    """Bind a batch-polymorphic plan template to a concrete batch bucket.
+def specialize_plan(
+    template: ExecutionPlan, bindings: Union[int, Dict[str, int]]
+) -> ExecutionPlan:
+    """Bind a scenario-polymorphic plan template to concrete axis buckets.
 
-    This is the *late* half of shape specialization: for every fused-qmatmul
-    step carrying a batch-open shape record the flat M and the bm tile are
-    computed for ``batch`` (:func:`repro.kernels.ops.bind_qmatmul_batch`),
-    and every value's symbolic leading dim is substituted in ``out_info`` so
-    the specialized plan renders fully concrete.  Everything else — steps,
-    slots, liveness, padded parameter arrays — is shared with the template
-    (no re-lowering, no array copies): a bucket specialization is O(steps).
+    ``bindings`` maps axis names to padded buckets (``{"N": 8, "S": 128}``);
+    a bare int is PR 4 sugar for ``{"N": int}``.  This is the *late* half of
+    shape specialization: for every fused-qmatmul step carrying an axis-open
+    shape record the flat M and the bm tile are computed from the bound lead
+    dims (:func:`repro.kernels.ops.bind_qmatmul_axes`), and every value's
+    symbolic dims are substituted in ``out_info`` so the specialized plan
+    renders fully concrete.  Everything else — steps, slots, liveness,
+    padded parameter arrays — is shared with the template (no re-lowering,
+    no array copies): a bucket specialization is O(steps).
+
+    Binding a *subset* of the template's axes yields a plan that is still a
+    ``"dynamic"`` template over the remaining axes (and still refuses to
+    execute); binding order never matters — the result is keyed/rendered on
+    the sorted bindings.  Unknown axis names are rejected.  As a degenerate
+    case, ``specialize_plan(plan, {})`` on a fully-static plan is a no-op
+    (there is nothing to bind); a non-empty bindings dict on a static plan
+    is still an error.
     """
+    if isinstance(bindings, dict):
+        bindings = {str(a): int(v) for a, v in bindings.items()}
+    else:
+        bindings = {BATCH_AXIS: int(bindings)}
     if template.batch != "dynamic":
+        if not bindings:
+            return template  # nothing to bind: binding is a no-op on statics
         raise ValueError(
             f"only a batch='dynamic' template can be specialized, "
             f"got a batch={template.batch!r} plan"
         )
-    batch = int(batch)
+    unknown = sorted(set(bindings) - set(template.axes))
+    if unknown:
+        raise ValueError(
+            f"unknown dynamic axes {unknown}: this template is open over "
+            f"{list(template.axes)}"
+        )
+    remaining = tuple(a for a in template.axes if a not in bindings)
     steps = []
     for step in template.steps:
         params = step.params
         if params.get("dynamic_batch"):
-            params = {k: v for k, v in params.items() if k != "dynamic_batch"}
-            params["shape"] = kops.bind_qmatmul_batch(step.params["shape"], batch)
+            if remaining:
+                params = dict(params)
+                params["shape"] = kops.bind_qmatmul_axes(
+                    step.params["shape"], bindings, partial=True
+                )
+            else:
+                params = {k: v for k, v in params.items() if k != "dynamic_batch"}
+                params["shape"] = kops.bind_qmatmul_axes(step.params["shape"], bindings)
         out_info = tuple(
-            ValueInfo(info.dtype, bind_batch(info.shape, batch)) if info is not None else info
+            ValueInfo(info.dtype, bind(info.shape, bindings)) if info is not None else info
             for info in step.out_info
         )
         steps.append(dataclasses.replace(step, params=params, out_info=out_info))
-    return dataclasses.replace(template, steps=steps, batch=batch)
+    if remaining:
+        return dataclasses.replace(template, steps=steps, batch="dynamic", axes=remaining)
+    if template.axes == (BATCH_AXIS,):
+        bound: Union[int, Tuple[Tuple[str, int], ...]] = bindings[BATCH_AXIS]
+    else:
+        bound = tuple(sorted(bindings.items()))
+    return dataclasses.replace(template, steps=steps, batch=bound, axes=())

@@ -21,25 +21,43 @@ The plan's :meth:`ExecutionPlan.pretty` rendering is the co-design artifact a
 hardware designer reads: one line per step with slots, dtypes/shapes, kernel
 ids and static params.
 
-Batch polymorphism
-==================
+Scenario specialization (named dynamic axes)
+============================================
 
-A plan's ``batch`` field says how its leading (batch) dimension was handled:
+A plan's ``batch`` field says how its dynamic dimensions were handled:
 
 * ``"static"`` — the classic path: shapes were specialized once at plan time
-  (a symbolic batch falls back to default tiles).
-* ``"dynamic"`` — the plan is a shape-generic **template**: fusion, liveness
-  slot planning and dtype inference are done, but the batch-dependent pieces
-  (flat matmul M, bm tile choice) are left open.  Templates are not directly
-  executable on the tiled backends; they are *bound* to a concrete bucket by
-  :func:`repro.backend.lowering.specialize_plan`.
-* an ``int`` — a per-bucket specialization of a template, produced lazily and
-  held in a bounded :class:`PlanCache` keyed by the padded batch bucket.
+  (a symbolic dim falls back to default tiles).
+* ``"dynamic"`` — the plan is a shape-generic **template**, open over the
+  named axes in ``plan.axes`` (e.g. ``("N",)`` for the classic batch,
+  ``("N", "S")`` for a batch × sequence grid): fusion, liveness slot
+  planning and dtype inference are done, but the axis-dependent pieces
+  (flat matmul M, bm tile choice) are left open.  Templates are not
+  directly executable; they are *bound* to concrete per-axis buckets by
+  :func:`repro.backend.lowering.specialize_plan` (which also accepts a
+  *partial* bindings dict — the result is then still a template over the
+  remaining axes).
+* an ``int`` — a single-axis (batch) bucket specialization of a template.
+* a tuple of ``(axis, bucket)`` pairs — a multi-axis specialization.
+
+Specializations are produced lazily and held in a bounded
+:class:`PlanCache` keyed by the sorted bindings tuple.
+
+Per-axis bucketing
+==================
+
+Each dynamic axis carries its own bucketing policy mapping a true extent to
+the padded bucket: :func:`batch_bucket` (next power of two — the default,
+bounding specializations at log₂(max) while wasting ≤ 2× padding) or
+:func:`bucket_multiple` (round up to a granularity — e.g. the serving
+engine's ``prefill_bucket`` discipline for sequence lengths).
+:func:`resolve_bucketing` normalizes a user-facing axis spec (``None`` |
+int granularity | callable) to a policy function.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -156,8 +174,11 @@ class ExecutionPlan:
                to liveness-driven slot reuse)
     inputs     (graph-input name, slot) feeds land here
     outputs    (graph-output name, slot) results are read from here
-    batch      "static" | "dynamic" (an unbound template) | int (a bucket
-               specialization of a template) — see the module docstring
+    batch      "static" | "dynamic" (an unbound template) | int (a batch-
+               bucket specialization) | tuple of (axis, bucket) pairs (a
+               multi-axis specialization) — see the module docstring
+    axes       named dynamic axes a "dynamic" template is still open over
+               (() on static and fully-bound plans)
     """
 
     backend: str
@@ -165,13 +186,21 @@ class ExecutionPlan:
     num_slots: int
     inputs: Tuple[Tuple[str, int], ...]
     outputs: Tuple[Tuple[str, int], ...]
-    batch: Union[str, int] = "static"
+    batch: Union[str, int, Tuple[Tuple[str, int], ...]] = "static"
+    axes: Tuple[str, ...] = ()
 
     # -- execution -----------------------------------------------------------
     def execute(self, feeds: Dict[str, Any]) -> Dict[str, Any]:
         """Slot-indexed interpretation (the hot path; jit-able as a whole)."""
         from .registry import lookup
 
+        if self.batch == "dynamic":
+            raise RuntimeError(
+                f"shape-generic template plan (open axes {list(self.axes)}) "
+                "cannot execute directly: bind it first with "
+                "repro.backend.lowering.specialize_plan, or run through "
+                "CompiledModel which caches specializations per bucket"
+            )
         env: List[Any] = [None] * self.num_slots
         for name, slot in self.inputs:
             env[slot] = feeds[name]
@@ -215,9 +244,20 @@ class ExecutionPlan:
             agg[s.kind] = agg.get(s.kind, 0) + 1
         return agg
 
+    def _batch_str(self) -> str:
+        """Rendered ``batch`` tag.  Single-axis forms are byte-identical to
+        the PR 4 renderings (``dynamic`` / the bare bucket int); a multi-axis
+        template additionally names its open axes, and a multi-axis
+        specialization renders its bindings as ``(N=8,S=32)``."""
+        if isinstance(self.batch, tuple):
+            return "(" + ",".join(f"{a}={v}" for a, v in self.batch) + ")"
+        if self.batch == "dynamic" and self.axes and self.axes != ("N",):
+            return "dynamic, axes=[" + ",".join(self.axes) + "]"
+        return str(self.batch)
+
     def pretty(self) -> str:
         """Human-readable lowering — the artifact a hardware designer reads."""
-        batch = "" if self.batch == "static" else f", batch={self.batch}"
+        batch = "" if self.batch == "static" else f", batch={self._batch_str()}"
         head = (
             f"ExecutionPlan(backend={self.backend}, steps={len(self.steps)}, "
             f"slots={self.num_slots}{batch})"
@@ -231,7 +271,12 @@ class ExecutionPlan:
         return self.pretty()
 
     def __repr__(self) -> str:
-        batch = "" if self.batch == "static" else f", batch={self.batch!r}"
+        if self.batch == "static":
+            batch = ""
+        elif isinstance(self.batch, (str, int)) and not (self.axes and self.axes != ("N",)):
+            batch = f", batch={self.batch!r}"  # PR 4 single-axis rendering
+        else:
+            batch = f", batch={self._batch_str()}"
         return (
             f"ExecutionPlan(backend={self.backend!r}, steps={len(self.steps)}, "
             f"slots={self.num_slots}, kinds={self.kinds}{batch})"
@@ -239,15 +284,16 @@ class ExecutionPlan:
 
 
 # ---------------------------------------------------------------------------
-# per-bucket specialization cache
+# per-axis bucketing policies + the specialization cache
 # ---------------------------------------------------------------------------
 
 
 def batch_bucket(m: int) -> int:
-    """The padded batch bucket for a true batch of ``m``: the smallest power
-    of two ≥ m.  Power-of-two buckets bound the number of specializations
-    (and jit traces) at log₂(max batch) while wasting at most 2× padding —
-    the standard continuous-batching compromise."""
+    """The padded bucket for a true extent of ``m``: the smallest power of
+    two ≥ m.  Power-of-two buckets bound the number of specializations (and
+    jit traces) at log₂(max extent) while wasting at most 2× padding — the
+    standard continuous-batching compromise, and the default policy for
+    every dynamic axis."""
     if m < 1:
         raise ValueError(f"batch must be >= 1, got {m}")
     b = 1
@@ -256,13 +302,51 @@ def batch_bucket(m: int) -> int:
     return b
 
 
+def bucket_multiple(n: int, granularity: int) -> int:
+    """Round an extent up to a multiple of ``granularity`` — the serving
+    engine's prefill discipline (prompts right-pad to ``prefill_bucket``
+    multiples), reusable as a per-axis policy for sequence-length axes."""
+    if n < 1:
+        raise ValueError(f"batch must be >= 1, got {n}")
+    if granularity < 1:
+        raise ValueError(f"bucket granularity must be >= 1, got {granularity}")
+    return -(-n // granularity) * granularity
+
+
+def resolve_bucketing(spec) -> "Callable[[int], int]":
+    """Normalize a per-axis bucketing spec to a policy function.
+
+    ``None`` → power-of-two (:func:`batch_bucket`); an ``int`` g →
+    round-up-to-multiple-of-g (:func:`bucket_multiple`); a callable is used
+    as-is (must map a true extent ≥ 1 to a padded bucket ≥ that extent)."""
+    if spec is None:
+        return batch_bucket
+    if isinstance(spec, int):
+        if spec < 1:
+            raise ValueError(f"bucket granularity must be >= 1, got {spec}")
+        return lambda n, _g=spec: bucket_multiple(n, _g)
+    if callable(spec):
+        return spec
+    raise TypeError(
+        f"axis bucketing spec must be None (power-of-two), an int granularity "
+        f"or a callable, got {spec!r}"
+    )
+
+
+def bindings_key(bindings: Dict[str, int]) -> Tuple[Tuple[str, int], ...]:
+    """Canonical :class:`PlanCache` key: the sorted (axis, bucket) tuple —
+    binding order never produces distinct specializations."""
+    return tuple(sorted((str(a), int(v)) for a, v in bindings.items()))
+
+
 class PlanCache(LruCache):
     """Bounded LRU of per-bucket plan specializations.
 
-    Keyed by the padded batch bucket; each value is the pair
-    ``(specialized ExecutionPlan, jitted executor)``.  A bucket is
-    specialized at most once while it stays resident (the acceptance
-    criterion for batch-polymorphic serving); ``misses`` therefore counts
+    Keyed by the sorted ``(axis, bucket)`` bindings tuple
+    (:func:`bindings_key`); each value is the pair ``(specialized
+    ExecutionPlan, jitted executor)``.  A bucket combination is specialized
+    at most once while it stays resident (the acceptance criterion for
+    scenario-specialized serving); ``misses`` therefore counts
     specializations and ``hits`` counts cache-served requests.  The bound
     keeps adversarial shape traffic from accumulating jit executors without
     limit — evicted buckets simply re-specialize on their next use.

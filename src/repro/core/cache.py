@@ -2,10 +2,12 @@
 
 Both per-shape caches in the system — the serving engine's prefill-function
 cache (keyed by prompt bucket) and the backend's :class:`~repro.backend.plan.
-PlanCache` (keyed by batch bucket) — used to be plain dicts that grew without
-bound under adversarial/long-tail traffic.  This is the one eviction policy
-they share: least-recently-used, with hit/miss/eviction counters so the
-caches can surface their behavior in serving metrics.
+PlanCache` (keyed by sorted per-axis bucket bindings) — used to be plain
+dicts that grew without bound under adversarial/long-tail traffic.  This is
+the one eviction policy they share: least-recently-used, with
+hit/miss/eviction counters and the single :attr:`LruCache.hit_rate`
+accounting site, so every cache surfaces the same numbers in serving
+metrics.
 """
 from __future__ import annotations
 
@@ -57,13 +59,23 @@ class LruCache:
         return list(self._entries.keys())
 
     @property
-    def stats(self) -> Dict[str, int]:
+    def hit_rate(self) -> float:
+        """hits / (hits + misses), 0.0 before any lookup.  This is the one
+        place hit accounting turns into a rate — every cache consumer
+        (CompiledModel.cache_stats, the serving engine's prefill metrics,
+        the compiled-model server summary) surfaces this same number."""
+        looked = self.hits + self.misses
+        return (self.hits / looked) if looked else 0.0
+
+    @property
+    def stats(self) -> Dict[str, Any]:
         return {
             "size": len(self._entries),
             "capacity": self.capacity,
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "hit_rate": self.hit_rate,
         }
 
     def __repr__(self) -> str:

@@ -45,16 +45,26 @@ three-level flow (QNN / onnx-mlir style multi-level lowering):
    computed once).  ``CompiledModel.plan`` is printable — the artifact a
    hardware designer reads.
 
-4. **Specialize (late)** — with ``batch="dynamic"`` the lowering stops one
-   step earlier: the plan is a shape-generic *template* (fusion, slot
-   liveness, dtype inference, and the batch-independent parameter padding
-   all done once; the batch-dependent M/bm left symbolic).  Executing the
-   artifact then binds the template to a power-of-two batch *bucket* on
-   demand (:func:`repro.backend.specialize_plan` — tile choice for the
-   batch dim, nothing re-lowered) through a bounded
-   :class:`repro.backend.PlanCache`, so one compiled artifact serves any
-   batch size with at most one specialization — and one jit trace — per
-   bucket.  This is the serving-side contract
+4. **Specialize (late)** — with ``dynamic_axes={...}`` (or its single-axis
+   sugar ``batch="dynamic"``) the lowering stops one step earlier: the plan
+   is a shape-generic *template* open over the artifact's **named symbolic
+   axes** (``("N", "S", 64)`` input signatures; legacy ``(None, …)`` inputs
+   contribute the implicit batch axis ``"N"``).  Fusion, slot liveness,
+   dtype inference, and the axis-independent parameter padding are all done
+   once; the axis-dependent M/bm stay symbolic.  Executing the artifact then
+   binds the template to a per-axis *bucket* combination on demand
+   (:func:`repro.backend.specialize_plan` with a bindings dict — tile choice
+   for the flattened lead dims, nothing re-lowered) through a bounded
+   :class:`repro.backend.PlanCache` keyed on the sorted bindings, so one
+   compiled artifact serves a whole (batch × sequence × …) scenario grid
+   with at most one specialization — and one jit trace — per visited bucket
+   combination.  Each axis carries its own bucketing policy (power-of-two
+   default; an int granularity rounds up to multiples, matching the serving
+   engine's prefill buckets).  Zero padding along an axis is only exact when
+   no op mixes information across it, so dynamic compilation *proves* each
+   requested axis elementwise-safe independently
+   (:func:`repro.passes.analysis.axis_mixing_nodes`) and rejects the graph
+   otherwise.  This is the serving-side contract
    :mod:`repro.serving.compiled` builds its micro-batching server on.
 
 Adding a fusion means adding a Pattern + a builder; adding a backend means
@@ -74,15 +84,18 @@ import numpy as np
 
 from ..backend import StepDraft, build_plan, const_arg, none_arg, specialize_plan, tensor_arg
 from ..backend.generic import _JOPS  # noqa: F401  (re-export; conformance sweep)
-from ..backend.plan import ExecutionPlan, PlanCache, batch_bucket
+from ..backend.plan import ExecutionPlan, PlanCache, bindings_key, resolve_bucketing
 from ..kernels import ops as kops
 from ..kernels.qact_lut import build_lut
 from ..passes import PassManager, PipelineReport
 from ..passes.analysis import (
+    BATCH_AXIS,
     GraphAnalysis,
-    batch_inputs,
-    batch_mixing_nodes,
-    has_symbolic_batch,
+    axis_inputs,
+    axis_mixing_nodes,
+    axis_positions,
+    graph_axes,
+    implicit_batch_graph,
 )
 from ..passes.rewrite import Match, OpSpec, Pattern, match_chain, ql_params
 from .pqir import Model, Node
@@ -206,24 +219,27 @@ def _channel_const(c, n_out: int, tail: int, acc_ndim: Optional[int]) -> Optiona
 
 
 def _static_m(shape) -> Optional[int]:
-    """Product of the leading (batch) dims if fully known, else None."""
+    """Product of the leading (batch) dims if fully known, else None (a
+    symbolic dim — named or unknown — makes the flat M unknowable here)."""
     if shape is None or len(shape) < 1:
         return None
     lead = shape[:-1]
     m = 1
     for d in lead:
-        if d is None:
+        if not isinstance(d, int):
             return None
         m *= int(d)
     return m
 
 
 def _symbolic_lead(shape) -> Optional[tuple]:
-    """The activation's leading dims for a batch-open shape record: ``None``
-    marks the symbolic batch (leading position); other dims stay concrete so
-    late binding can compute the flat M as their product.  A wholly unknown
-    shape returns None — binding then leaves M unknown and keeps the default
-    bm rather than stamping a flat M it cannot actually know."""
+    """The activation's leading dims for an axis-open shape record: named
+    axes (strings) mark the symbolic dims — or, on legacy graphs, ``None``
+    in the leading position marks the implicit batch; other dims stay
+    concrete so late binding can compute the flat M as their product with
+    the axis bindings substituted.  A wholly unknown shape returns None —
+    binding then leaves M unknown and keeps the default bm rather than
+    stamping a flat M it cannot actually know."""
     if shape is None or len(shape) < 2:
         return None
     return tuple(shape[:-1])
@@ -316,8 +332,8 @@ def _build_qlinear(compiler: "Compiler", m: Match) -> Optional[StepDraft]:
         b = np.asarray(kops.fold_uint8_input(jnp.asarray(w), None if b is None else jnp.asarray(b)))
         params["x_uint8"] = True
     if compiler.batch == "dynamic":
-        # batch-polymorphic template: leave the batch-dependent (m, bm)
-        # binding to per-bucket specialization (specialize_plan / PlanCache)
+        # axis-open template: leave the axis-dependent (m, bm) binding to
+        # per-bucket-combination specialization (specialize_plan / PlanCache)
         consts, shape = kops.template_qmatmul_params(w, b, qs, np.asarray(qsh, np.float32))
         shape["lead"] = _symbolic_lead(ga.shape(x_name))
         params["shape"] = shape
@@ -369,16 +385,34 @@ class Compiler:
         optimize: bool = True,
         verify_passes: bool = False,
         batch: str = "static",
+        dynamic_axes: Optional[Dict[str, object]] = None,
         plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
     ) -> None:
         model.validate()
         if batch not in ("static", "dynamic"):
             raise ValueError(f"batch must be 'static' or 'dynamic', got {batch!r}")
-        if batch == "dynamic" and not batch_inputs(model.graph):
-            raise ValueError(
-                "batch='dynamic' needs at least one graph input with a "
-                "symbolic (None) leading dimension to specialize over"
-            )
+        if batch == "dynamic" and dynamic_axes is None:
+            # PR 4 sugar: dynamic over the (implicit or named) batch axis
+            dynamic_axes = {BATCH_AXIS: None}
+        if dynamic_axes:
+            batch = "dynamic"
+        available = graph_axes(model.graph)
+        if batch == "dynamic":
+            missing = sorted(set(dynamic_axes) - set(available))
+            if missing:
+                raise ValueError(
+                    f"dynamic axes {missing} are not symbolic in any graph input "
+                    f"signature (available: {list(available) or 'none'}) — "
+                    "declare them as named dims, e.g. ('N', 'S', 64), or use a "
+                    "(None, ...) leading dim for the implicit batch axis"
+                )
+            for t in model.graph.inputs:
+                for axis in dynamic_axes:
+                    if sum(1 for d in t.shape if d == axis) > 1:
+                        raise ValueError(
+                            f"axis {axis!r} appears more than once in input "
+                            f"{t.name!r} signature {tuple(t.shape)}"
+                        )
         if optimize:
             model, self.pass_report = PassManager(verify=verify_passes).run(model)
         else:
@@ -390,21 +424,31 @@ class Compiler:
         self.backend = backend
         self.fuse = fuse
         self.batch = batch
+        # preserve the graph's axis declaration order for stable plan axes
+        if batch == "dynamic":
+            self.dynamic_axes = {
+                a: resolve_bucketing(dynamic_axes.get(a)) for a in available if a in dynamic_axes
+            }
+        else:
+            self.dynamic_axes = {}
         self.plan_cache_capacity = plan_cache_capacity
         self.inits = {k: v for k, v in self.graph.initializers.items()}
         self.analysis = GraphAnalysis(self.graph)
         if batch == "dynamic":
-            # zero-row padding is only exact when no op mixes rows across the
-            # batch axis — reject (rather than silently mis-serve) graphs
-            # with e.g. a global ReduceMean or a batch-folding Reshape
-            problems = batch_mixing_nodes(self.analysis)
-            if problems:
-                raise ValueError(
-                    "batch='dynamic' needs every op to be batch-elementwise "
-                    "along axis 0; cannot prove that for:\n  "
-                    + "\n  ".join(problems)
-                    + "\ncompile with batch='static' instead"
-                )
+            # zero padding along a dynamic axis is only exact when no op
+            # mixes information across it — prove each requested axis
+            # independently and reject (rather than silently mis-serve)
+            # graphs with e.g. a global ReduceMean or an axis-folding Reshape
+            implicit = implicit_batch_graph(self.graph)
+            for axis in self.dynamic_axes:
+                problems = axis_mixing_nodes(self.analysis, axis, implicit=implicit)
+                if problems:
+                    raise ValueError(
+                        f"dynamic axis {axis!r} needs every op to be "
+                        "batch-elementwise along it; cannot prove that for:\n  "
+                        + "\n  ".join(problems)
+                        + "\ncompile with batch='static' instead"
+                    )
         self.stats = {
             "fused_qlinear": 0,
             "fused_qconv": 0,
@@ -427,11 +471,15 @@ class Compiler:
                 draft = self._generic_draft(node)
             drafts.append(draft)
             self.stats[draft.kind] += 1
-        plan = build_plan(self.graph, self.analysis, drafts, self.backend, batch=self.batch)
+        plan = build_plan(
+            self.graph, self.analysis, drafts, self.backend,
+            batch=self.batch, axes=tuple(self.dynamic_axes),
+        )
         self.stats["plan_slots"] = plan.num_slots
         return CompiledModel(
             self.model, plan, self.stats, self.pass_report,
             plan_cache_capacity=self.plan_cache_capacity,
+            dynamic_axes=self.dynamic_axes,
         )
 
     def _fused_draft(self, node: Node, consumed: set) -> Optional[StepDraft]:
@@ -469,16 +517,19 @@ class CompiledModel:
     """A compiled artifact: typed ExecutionPlan + jitted slot-indexed
     executor + fusion report.  ``print(cm.plan)`` shows the full lowering.
 
-    With ``batch="dynamic"`` the held plan is a shape-generic *template*:
-    :meth:`run` pads the batch-carrying feeds to the next power-of-two
-    bucket, binds the template to that bucket through a bounded
-    :class:`~repro.backend.plan.PlanCache` (at most one specialization and
-    one jit trace per resident bucket), executes, and slices results back to
-    the true batch.  Zero batch-padding is exact because dynamic compilation
-    *proves* it: the compiler rejects any graph with an op it cannot show to
-    be batch-elementwise along axis 0
-    (:func:`repro.passes.analysis.batch_mixing_nodes`), and the conformance
-    sweep pins dynamic == per-shape-static == reference, bit for bit."""
+    With dynamic axes the held plan is a shape-generic *template*:
+    :meth:`run` reads each dynamic axis's true extent off the feeds, pads
+    every axis-carrying feed to that axis's bucket (per-axis bucketing
+    policy — power-of-two by default), binds the template to the bucket
+    combination through a bounded :class:`~repro.backend.plan.PlanCache`
+    keyed on the sorted bindings (at most one specialization and one jit
+    trace per resident combination), executes, and slices results back to
+    the true extents along every axis position they carry.  Zero padding is
+    exact because dynamic compilation *proves* it per axis: the compiler
+    rejects any graph with an op it cannot show to be elementwise along each
+    requested axis (:func:`repro.passes.analysis.axis_mixing_nodes`), and
+    the conformance sweep pins dynamic == per-shape-static == reference,
+    bit for bit, over the whole bucket grid."""
 
     def __init__(
         self,
@@ -488,6 +539,7 @@ class CompiledModel:
         pass_report: Optional[PipelineReport] = None,
         *,
         plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
+        dynamic_axes: Optional[Dict[str, object]] = None,
     ) -> None:
         self.model = model
         self.plan = plan
@@ -498,27 +550,47 @@ class CompiledModel:
         self.output_names = [t.name for t in model.graph.outputs]
         if plan.batch == "dynamic":
             self.plan_cache: Optional[PlanCache] = PlanCache(plan_cache_capacity)
-            self.batch_input_names = batch_inputs(model.graph)
-            # batch-carrying outputs get sliced back to the true batch; union
-            # of the declared signature and the plan's inferred value shapes,
-            # so an output mis-declared with a concrete leading dim is still
-            # recognized as batch-carrying (and vice versa)
+            self.dynamic_axes: Dict[str, object] = {
+                a: resolve_bucketing(None) for a in plan.axes
+            }
+            if dynamic_axes:
+                self.dynamic_axes.update(dynamic_axes)
+            implicit = implicit_batch_graph(model.graph)
+            # where each dynamic axis sits in each input: axis -> {input: pos}
+            self.axis_input_pos: Dict[str, Dict[str, int]] = {}
+            for axis in self.dynamic_axes:
+                by_input = {}
+                for t in model.graph.inputs:
+                    pos = axis_positions(tuple(t.shape), axis, implicit=implicit)
+                    if pos:
+                        by_input[t.name] = pos[0]
+                self.axis_input_pos[axis] = by_input
+            # axis-carrying outputs get sliced back to the true extents;
+            # positions come from the declared signature with the plan's
+            # inferred value shapes as fallback, so an output mis-declared
+            # with a concrete dim is still recognized as axis-carrying
             inferred = {
                 name: info.shape
                 for step in plan.steps
                 for name, info in zip(step.outputs, step.out_info)
             }
-            self.batch_output_names = {
-                t.name
-                for t in model.graph.outputs
-                if has_symbolic_batch(tuple(t.shape))
-                or has_symbolic_batch(inferred.get(t.name))
-            }
+            self.output_axis_pos: Dict[str, Dict[str, int]] = {}
+            for t in model.graph.outputs:
+                by_axis = {}
+                for axis in self.dynamic_axes:
+                    pos = axis_positions(tuple(t.shape), axis, implicit=implicit)
+                    if not pos:
+                        pos = axis_positions(inferred.get(t.name), axis, implicit=implicit)
+                    if pos:
+                        by_axis[axis] = pos[0]
+                if by_axis:
+                    self.output_axis_pos[t.name] = by_axis
             self._jitted = None  # a template is only executable once bound
         else:
             self.plan_cache = None
-            self.batch_input_names = []
-            self.batch_output_names = set()
+            self.dynamic_axes = {}
+            self.axis_input_pos = {}
+            self.output_axis_pos = {}
             self._jitted = jax.jit(self._execute)
 
     @property
@@ -528,6 +600,17 @@ class CompiledModel:
     @property
     def is_dynamic(self) -> bool:
         return self.plan.batch == "dynamic"
+
+    # -- PR 4 single-axis views (the batch axis) ----------------------------
+    @property
+    def batch_input_names(self) -> List[str]:
+        """Inputs carrying the batch axis (PR 4 compat view)."""
+        return list(self.axis_input_pos.get(BATCH_AXIS, {}))
+
+    @property
+    def batch_output_names(self) -> set:
+        """Outputs carrying the batch axis (PR 4 compat view)."""
+        return {k for k, v in self.output_axis_pos.items() if BATCH_AXIS in v}
 
     def _execute(self, feeds: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
         return self.plan.execute(feeds)
@@ -544,60 +627,92 @@ class CompiledModel:
     def lower(self, feeds: Dict[str, jax.ShapeDtypeStruct]):
         if self.is_dynamic:
             raise NotImplementedError(
-                "lower() needs a bound plan — use specialized(bucket) and "
+                "lower() needs a bound plan — use specialized(bindings) and "
                 "inspect/lower the per-bucket executor instead"
             )
         return self._jitted.lower(feeds)
 
-    # -- batch-polymorphic execution ----------------------------------------
-    def specialized(self, bucket: int):
-        """The (plan, jitted executor) pair for a batch bucket, specializing
-        lazily through the bounded plan cache.  ``cache_stats`` counts a miss
-        (== one specialization) only on first use of a resident bucket."""
+    # -- scenario-specialized execution -------------------------------------
+    def bucket_for(self, axis: str, extent: int) -> int:
+        """The padded bucket for a true extent along ``axis`` under that
+        axis's bucketing policy."""
+        return int(self.dynamic_axes[axis](int(extent)))
+
+    def specialized(self, bindings):
+        """The (plan, jitted executor) pair for a bucket combination,
+        specializing lazily through the bounded plan cache.  ``bindings`` is
+        an axis→bucket dict (a bare int is sugar for the batch axis).
+        ``cache_stats`` counts a miss (== one specialization) only on first
+        use of a resident combination; binding order never splits cache
+        entries (keys are the sorted bindings)."""
         if not self.is_dynamic:
-            raise ValueError("specialized() is only meaningful on a batch='dynamic' compile")
-        entry = self.plan_cache.get(bucket)
+            raise ValueError("specialized() is only meaningful on a dynamic compile")
+        if not isinstance(bindings, dict):
+            bindings = {BATCH_AXIS: int(bindings)}
+        unknown = sorted(set(bindings) - set(self.dynamic_axes))
+        if unknown:
+            raise ValueError(
+                f"unknown dynamic axes {unknown}: this artifact is open over "
+                f"{list(self.dynamic_axes)}"
+            )
+        key = bindings_key(bindings)
+        entry = self.plan_cache.get(key)
         if entry is None:
-            plan = specialize_plan(self.plan, bucket)
+            plan = specialize_plan(self.plan, bindings)
             entry = (plan, jax.jit(plan.execute))
-            self.plan_cache.put(bucket, entry)
+            self.plan_cache.put(key, entry)
         return entry
 
     @property
     def cache_stats(self) -> Dict[str, int]:
-        """Plan-cache counters (size/capacity/hits/misses/evictions); misses
-        double as the number of specializations performed."""
+        """Plan-cache counters (size/capacity/hits/misses/evictions/
+        hit_rate); misses double as the number of specializations."""
         if self.plan_cache is None:
             return {}
         return self.plan_cache.stats
 
     def _run_dynamic(self, feeds: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
-        ms = {
-            int(np.asarray(feeds[name]).shape[0])
-            for name in self.batch_input_names
-            if name in feeds
-        }
-        if len(ms) != 1:
-            raise ValueError(
-                f"batch-carrying inputs {self.batch_input_names} must all be fed "
-                f"with one common leading dim, got {sorted(ms)}"
-            )
-        m = ms.pop()
-        bucket = batch_bucket(m)
-        _, fn = self.specialized(bucket)
+        extents: Dict[str, int] = {}
+        for axis, by_input in self.axis_input_pos.items():
+            vals = {
+                int(np.asarray(feeds[name]).shape[pos])
+                for name, pos in by_input.items()
+                if name in feeds
+            }
+            if len(vals) != 1:
+                raise ValueError(
+                    f"inputs {sorted(by_input)} carrying dynamic axis {axis!r} "
+                    f"must all be fed with one common extent, got {sorted(vals)}"
+                )
+            extents[axis] = vals.pop()
+        bindings = {axis: self.bucket_for(axis, ext) for axis, ext in extents.items()}
+        _, fn = self.specialized(bindings)
         padded: Dict[str, jax.Array] = {}
         for name, v in feeds.items():
             v = np.asarray(v)
-            if name in self.batch_input_names and v.shape[0] != bucket:
-                # zero rows are exact: dynamic compilation proved every op
-                # batch-elementwise, and the pad rows are sliced away below
-                v = np.pad(v, [(0, bucket - v.shape[0])] + [(0, 0)] * (v.ndim - 1))
-            padded[name] = jnp.asarray(v)
+            widths = [(0, 0)] * v.ndim
+            grow = False
+            for axis, by_input in self.axis_input_pos.items():
+                pos = by_input.get(name)
+                if pos is not None and v.shape[pos] != bindings[axis]:
+                    # zero slabs are exact: dynamic compilation proved every
+                    # op elementwise along the axis, and the padding is
+                    # sliced away below
+                    widths[pos] = (0, bindings[axis] - v.shape[pos])
+                    grow = True
+            padded[name] = jnp.asarray(np.pad(v, widths) if grow else v)
         res = fn(padded)
-        return {
-            k: (np.asarray(v)[:m] if k in self.batch_output_names else np.asarray(v))
-            for k, v in res.items()
-        }
+        out: Dict[str, np.ndarray] = {}
+        for k, v in res.items():
+            v = np.asarray(v)
+            by_axis = self.output_axis_pos.get(k)
+            if by_axis:
+                slicer = [slice(None)] * v.ndim
+                for axis, pos in by_axis.items():
+                    slicer[pos] = slice(0, extents[axis])
+                v = v[tuple(slicer)]
+            out[k] = v
+        return out
 
 
 def compile_model(
@@ -608,6 +723,7 @@ def compile_model(
     optimize: bool = True,
     verify_passes: bool = False,
     batch: str = "static",
+    dynamic_axes: Optional[Dict[str, object]] = None,
     plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
 ) -> CompiledModel:
     """Compile a PQ-IR artifact for the TPU backend.
@@ -621,16 +737,25 @@ def compile_model(
                    (asserts each pass is semantics-preserving on probe
                    inputs before the backend ever sees the graph).
     batch:         "static" specializes shapes once at plan time (classic
-                   behavior); "dynamic" builds a batch-polymorphic plan
-                   *template* that is bound lazily to power-of-two batch
-                   buckets at run time — one artifact, any batch size, at
-                   most one specialization per bucket.
+                   behavior); "dynamic" is single-axis sugar for
+                   ``dynamic_axes={"N": None}`` — a batch-polymorphic plan
+                   *template* bound lazily to power-of-two batch buckets at
+                   run time.
+    dynamic_axes:  named symbolic axes to leave open in the plan template,
+                   mapped to per-axis bucketing specs: ``None`` →
+                   power-of-two buckets, an int g → round up to multiples of
+                   g (sequence-length style), a callable → custom policy.
+                   Axes must appear in the graph's input signatures (named
+                   dims like ``("N", "S", 64)``; a legacy ``(None, …)``
+                   leading dim is the implicit batch axis ``"N"``).  One
+                   artifact then serves the whole scenario grid with at most
+                   one specialization per visited bucket combination.
     plan_cache_capacity:
                    bound on resident per-bucket specializations (dynamic
                    mode; LRU-evicted beyond this).
     """
     return Compiler(
         model, backend=backend, fuse=fuse, optimize=optimize,
-        verify_passes=verify_passes, batch=batch,
+        verify_passes=verify_passes, batch=batch, dynamic_axes=dynamic_axes,
         plan_cache_capacity=plan_cache_capacity,
     ).compile()

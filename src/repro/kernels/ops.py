@@ -80,27 +80,50 @@ def template_qmatmul_params(
     return consts, shape
 
 
-def bind_qmatmul_batch(shape: dict, batch: Optional[int]) -> dict:
-    """The batch-*dependent* half: close a template shape record over a
-    concrete batch bucket.
+def bind_qmatmul_axes(shape: dict, bindings: Optional[dict], *, partial: bool = False) -> dict:
+    """The scenario-*dependent* half: close a template shape record over
+    concrete per-axis buckets.
 
-    ``shape["lead"]`` is the activation's leading (batch) dims as inferred at
-    template-build time, with ``None`` marking the symbolic batch (and the
-    whole tuple ``None`` when inference knew nothing — M then stays unknown
-    and the default bm stands); the flat matmul M is their product with
-    ``batch`` substituted for the leading symbol.  Only ``m`` and the bm tile
-    choice are computed here — the padded parameter arrays and K/N tiles come
-    from the template unchanged, so a bucket specialization is O(1) (no
-    re-lowering, no array copies)."""
+    ``shape["lead"]`` is the activation's leading dims as inferred at
+    template-build time: concrete ints, named symbolic axes (strings such as
+    ``"N"``/``"S"``), ``None`` in the leading position for the legacy
+    implicit batch, and the whole tuple ``None`` when inference knew nothing
+    — M then stays unknown and the default bm stands.  The flat matmul M is
+    the product of the lead dims with ``bindings`` substituted per axis name
+    (an unnamed leading ``None`` binds to the batch axis ``"N"``, matching
+    :func:`repro.passes.analysis.bind`).  Only ``m`` and the bm tile choice
+    are computed here — the padded parameter arrays and K/N tiles come from
+    the template unchanged, so a bucket specialization is O(1) (no
+    re-lowering, no array copies).
+
+    ``partial=True`` substitutes the given axes into ``lead`` but keeps the
+    record *open* (no m/bm yet) — used when a template is specialized over a
+    subset of its axes and must stay a template for the rest."""
+    bindings = bindings or {}
     lead = shape.get("lead")
+    if partial:
+        if lead is None:
+            return dict(shape)
+        new_lead = []
+        for i, d in enumerate(lead):
+            if isinstance(d, str) and d in bindings:
+                d = int(bindings[d])
+            elif d is None and i == 0 and "N" in bindings:
+                d = int(bindings["N"])
+            new_lead.append(d)
+        out = dict(shape)
+        out["lead"] = tuple(new_lead)
+        return out
     if lead is None:
         m: Optional[int] = None  # inference knew nothing: keep the default bm
     else:
         m = 1
         for i, d in enumerate(lead):
-            if d is None:
-                d = batch if i == 0 else None  # only the leading dim is the batch
-            if d is None:
+            if isinstance(d, str):
+                d = bindings.get(d)
+            elif d is None and i == 0:
+                d = bindings.get("N")  # legacy implicit batch
+            if not isinstance(d, int):
                 m = None  # still-unknown dim: fall back to the default bm
                 break
             m *= int(d)
@@ -108,6 +131,12 @@ def bind_qmatmul_batch(shape: dict, batch: Optional[int]) -> dict:
     bound["m"] = m
     bound["bm"] = _qmm.choose_bm(m)
     return bound
+
+
+def bind_qmatmul_batch(shape: dict, batch: Optional[int]) -> dict:
+    """Single-axis sugar over :func:`bind_qmatmul_axes` (the PR 4 calling
+    convention): bind the implicit batch axis only."""
+    return bind_qmatmul_axes(shape, {} if batch is None else {"N": int(batch)})
 
 
 def specialize_qmatmul_params(

@@ -6,15 +6,28 @@ compiler need about a :class:`repro.core.pqir.Graph`:
 * :func:`infer_dtypes` — forward dtype propagation over the standard-op
   vocabulary (replaces the private ``infer_dtypes`` that used to live in
   ``repro.core.compile``).
-* :func:`infer_shapes` — best-effort static shape propagation.  Unknown
-  dimensions are ``None``; a wholly unknown shape is ``None``.  Passes must
-  treat ``None`` as "don't know" and stay conservative.  A ``None`` *leading*
-  dimension doubles as the symbolic batch: artifacts are exported with
-  ``(None, …)`` inputs, the per-op rules (MatMul/Gemm/Conv/Reshape/Flatten/…)
-  propagate that unknown through to the outputs, and the batch-polymorphic
-  compile path (``compile_model(batch="dynamic")``) later *binds* it to a
-  concrete bucket — either by re-running :func:`infer_shapes` with ``batch=``
-  or per-value via :func:`bind_batch`.
+* :func:`infer_shapes` — best-effort static shape propagation over
+  :data:`SymDim` dimensions.  A dimension is a concrete ``int``, a *named
+  symbolic axis* (a ``str`` such as ``"N"`` or ``"S"``), or ``None``
+  (unknown); a wholly unknown shape is ``None``.  Passes must treat ``None``
+  as "don't know" and stay conservative.  Named axes are declared in the
+  artifact's input signatures (``("N", "S", 64)``) and the per-op rules
+  (MatMul/Gemm/Conv/Reshape/Flatten/…) propagate each name through to the
+  outputs, so every value knows *which* dynamic axes it carries and at what
+  position.  The scenario-specialization compile path
+  (``compile_model(dynamic_axes={...})``) later *binds* the names to
+  concrete buckets — either by re-running :func:`infer_shapes` with
+  ``bindings=`` or per-value via :func:`bind`.
+
+  **Legacy batch convention:** artifacts that name no axis at all but export
+  ``(None, …)`` inputs treat the leading ``None`` as the implicit batch axis
+  :data:`BATCH_AXIS` (``"N"``) — exactly the PR 4 single-axis contract.
+  :func:`graph_axes` detects this case and the per-axis machinery runs in
+  *implicit* mode (the axis is pinned to position 0 by convention rather
+  than tracked by name).
+* :func:`axis_mixing_nodes` — the per-axis safety proof behind zero-padded
+  dynamic execution: each dynamic axis is independently proven elementwise
+  (no op mixes information across it) or the compile is rejected.
 * :class:`GraphAnalysis` — a cached bundle of dtypes, shapes, producer and
   consumer maps plus the constant/initializer view, rebuilt from scratch by
   each pass iteration so it can never go stale against a mutated graph.
@@ -22,13 +35,19 @@ compiler need about a :class:`repro.core.pqir.Graph`:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from ..core.pqir import DTYPES, Graph, Model, Node
 
-Shape = Optional[Tuple[Optional[int], ...]]
+#: One dimension: concrete int, named symbolic axis, or None (unknown).
+SymDim = Optional[Union[int, str]]
+Shape = Optional[Tuple[SymDim, ...]]
+
+#: Canonical name of the implicit batch axis (the legacy leading-``None``
+#: convention of ``compile_model(batch="dynamic")`` graphs).
+BATCH_AXIS = "N"
 
 _UNARY_PASSTHROUGH = frozenset(
     {"Relu", "Tanh", "Sigmoid", "Erf", "Sqrt", "Softmax", "Clip", "Identity"}
@@ -86,11 +105,22 @@ def _broadcast(a: Shape, b: Shape) -> Shape:
     if a is None or b is None:
         return None
     n = max(len(a), len(b))
-    out: List[Optional[int]] = []
+    out: List[SymDim] = []
     for i in range(n):
         da = a[len(a) - n + i] if i >= n - len(a) else 1
         db = b[len(b) - n + i] if i >= n - len(b) else 1
-        if da is None and db is None:
+        sa, sb = isinstance(da, str), isinstance(db, str)
+        if sa or sb:
+            # named symbolic axes: a name broadcasts against itself or 1;
+            # anything else (another name, an unknown, a pinned extent) makes
+            # the result untrackable — drop to wholly-unknown, never guess
+            if sa and (db == 1 or da == db):
+                out.append(da)
+            elif sb and da == 1:
+                out.append(db)
+            else:
+                return None
+        elif da is None and db is None:
             out.append(None)
         elif da is None:
             out.append(db if db != 1 else None)
@@ -107,17 +137,26 @@ def _broadcast(a: Shape, b: Shape) -> Shape:
     return tuple(out)
 
 
-def _prod(dims) -> Optional[int]:
-    p = 1
+def _prod(dims) -> SymDim:
+    """Product of dims: an int when fully concrete, the axis name when the
+    product is one named symbolic axis times only 1s, else None (unknown)."""
+    p, sym = 1, None
     for d in dims:
-        if d is None:
+        if isinstance(d, str):
+            if sym is not None:
+                return None  # two symbolic factors: untrackable
+            sym = d
+        elif d is None:
             return None
-        p *= int(d)
+        else:
+            p *= int(d)
+    if sym is not None:
+        return sym if p == 1 else None
     return p
 
 
-def _conv_hw(d: Optional[int], k: int, pad0: int, pad1: int, stride: int, dil: int) -> Optional[int]:
-    if d is None:
+def _conv_hw(d: SymDim, k: int, pad0: int, pad1: int, stride: int, dil: int) -> Optional[int]:
+    if not isinstance(d, int):
         return None
     return (d + pad0 + pad1 - (dil * (k - 1) + 1)) // stride + 1
 
@@ -162,8 +201,18 @@ def _node_shape(node: Node, sh, const) -> Shape:  # noqa: C901 (dispatch table)
         dims = [int(d) for d in np.asarray(target).reshape(-1)]
         if -1 not in dims:
             return tuple(dims)
+        # a leading named axis survives a (-1, concrete...) reshape whose tail
+        # product is preserved — the row-preserving form the per-axis safety
+        # proof admits — so the name keeps flowing to downstream values
+        if (
+            s0 is not None and len(s0) >= 1 and isinstance(s0[0], str)
+            and dims[0] == -1 and all(d != -1 for d in dims[1:])
+            and _prod(s0[1:]) == _prod(dims[1:])
+            and isinstance(_prod(dims[1:]), int)
+        ):
+            return (s0[0],) + tuple(dims[1:])
         total = _prod(s0) if s0 is not None else None
-        if total is None:
+        if not isinstance(total, int):
             return tuple(None if d == -1 else d for d in dims)
         rest = _prod([d for d in dims if d != -1])
         return tuple(total // rest if d == -1 else d for d in dims)
@@ -185,7 +234,7 @@ def _node_shape(node: Node, sh, const) -> Shape:  # noqa: C901 (dispatch table)
         dims = list(shapes[0])
         cat = 0
         for s in shapes:
-            if s[axis] is None:
+            if not isinstance(s[axis], int):
                 cat = None
                 break
             cat += s[axis]
@@ -210,8 +259,11 @@ def _node_shape(node: Node, sh, const) -> Shape:  # noqa: C901 (dispatch table)
         steps = [int(v) for v in np.asarray(steps_c).reshape(-1)] if steps_c is not None else [1] * len(starts)
         dims = list(s0)
         for s, e, a, st in zip(starts, ends, axes, steps):
-            if dims[a] is None:
-                continue  # unknown stays unknown
+            if not isinstance(dims[a], int):
+                # unknown stays unknown; a sliced *named* axis loses its name
+                # (the slice extent is no longer the axis extent)
+                dims[a] = None
+                continue
             dims[a] = len(range(*slice(s, e, st).indices(int(dims[a]))))
         return tuple(dims)
     if t in ("Squeeze", "Unsqueeze"):
@@ -252,36 +304,91 @@ def _node_shape(node: Node, sh, const) -> Shape:  # noqa: C901 (dispatch table)
 
 
 # ---------------------------------------------------------------------------
-# symbolic batch (leading-dim) helpers
+# named symbolic axes
 # ---------------------------------------------------------------------------
 
 
-def has_symbolic_batch(shape: Shape) -> bool:
-    """True when the leading dimension is the symbolic (unknown) batch."""
-    return shape is not None and len(shape) >= 1 and shape[0] is None
+def is_sym(dim: SymDim) -> bool:
+    """True for a named symbolic axis (a ``str`` dimension)."""
+    return isinstance(dim, str)
 
 
-def bind_batch(shape: Shape, batch: Optional[int]) -> Shape:
-    """Substitute the symbolic leading dim with a concrete ``batch``.
+def symbolic_axes(shape: Shape) -> Tuple[str, ...]:
+    """The named symbolic axes a shape carries, in position order."""
+    if shape is None:
+        return ()
+    return tuple(d for d in shape if isinstance(d, str))
 
-    ``None`` batch (or a shape without a symbolic leading dim) passes
-    through unchanged — binding is always a no-op on static shapes."""
-    if batch is None or not has_symbolic_batch(shape):
+
+def bind(shape: Shape, bindings: Optional[Dict[str, int]]) -> Shape:
+    """Substitute named symbolic dims with concrete extents from ``bindings``.
+
+    Axes absent from ``bindings`` stay symbolic (partial binding); an empty
+    or ``None`` bindings map is always a no-op, and binding never touches a
+    fully-static shape.  **Legacy convention:** an *unnamed* leading ``None``
+    dim binds to :data:`BATCH_AXIS` when that axis is bound — this is what
+    keeps PR 4 ``(None, …)`` single-axis artifacts working unchanged."""
+    if not bindings or shape is None:
         return shape
-    return (int(batch),) + tuple(shape[1:])
+    out: List[SymDim] = []
+    for i, d in enumerate(shape):
+        if isinstance(d, str) and d in bindings:
+            out.append(int(bindings[d]))
+        elif d is None and i == 0 and BATCH_AXIS in bindings:
+            out.append(int(bindings[BATCH_AXIS]))
+        else:
+            out.append(d)
+    return tuple(out)
 
 
-def batch_inputs(graph: Graph) -> List[str]:
-    """Names of graph inputs carrying the symbolic batch (leading ``None``).
-
-    These are the feeds a batch-polymorphic compiled model pads to the
-    bucket size; a graph with none of them has no batch axis to
-    specialize over."""
-    return [t.name for t in graph.inputs if has_symbolic_batch(tuple(t.shape))]
+def implicit_batch_graph(graph: Graph) -> bool:
+    """True when the graph names no axis at all — its dynamic-axis contract
+    (if any) is the legacy leading-``None`` batch convention."""
+    return not any(isinstance(d, str) for t in graph.inputs for d in t.shape)
 
 
-#: Ops that are row-elementwise and shape-preserving along axis 0 whenever the
-#: batch rides only the data operand (scales/zero-points are constants).
+def graph_axes(graph: Graph) -> Tuple[str, ...]:
+    """Named symbolic axes declared across the graph's input signatures, in
+    first-appearance order.  A graph that names nothing but exports a
+    ``(None, …)`` input contributes the implicit :data:`BATCH_AXIS`."""
+    names: List[str] = []
+    for t in graph.inputs:
+        for d in t.shape:
+            if isinstance(d, str) and d not in names:
+                names.append(d)
+    if names:
+        return tuple(names)
+    if any(len(t.shape) >= 1 and t.shape[0] is None for t in graph.inputs):
+        return (BATCH_AXIS,)
+    return ()
+
+
+def axis_positions(shape: Shape, axis: str, *, implicit: bool = False) -> Optional[Tuple[int, ...]]:
+    """Positions where ``axis`` occurs in ``shape`` (``None`` = shape unknown).
+
+    ``implicit`` selects the legacy convention: the axis is the leading
+    ``None`` dim (position 0) rather than a name match."""
+    if shape is None:
+        return None
+    if implicit:
+        return (0,) if (len(shape) >= 1 and shape[0] is None) else ()
+    return tuple(i for i, d in enumerate(shape) if d == axis)
+
+
+def axis_inputs(graph: Graph, axis: str) -> List[str]:
+    """Names of graph inputs carrying the dynamic ``axis`` — the feeds a
+    scenario-specialized compiled model pads to the axis bucket."""
+    implicit = implicit_batch_graph(graph)
+    out = []
+    for t in graph.inputs:
+        pos = axis_positions(tuple(t.shape), axis, implicit=implicit and axis == BATCH_AXIS)
+        if pos:
+            out.append(t.name)
+    return out
+
+
+#: Ops that are elementwise and shape-preserving along every axis whenever the
+#: dynamic axis rides only the data operand (scales/zero-points are constants).
 _ROWWISE_OPS = frozenset(
     {"Relu", "Tanh", "Sigmoid", "Erf", "Sqrt", "Clip", "Identity",
      "Cast", "QuantizeLinear", "DequantizeLinear"}
@@ -294,28 +401,53 @@ _NCHW_OPS = frozenset(
 _BCAST_OPS = frozenset({"Mul", "Add", "Sub", "Div", "Pow"})
 
 
-def batch_mixing_nodes(ga: "GraphAnalysis") -> List[str]:
-    """Nodes that cannot be *proved* batch-elementwise along axis 0.
+def axis_mixing_nodes(ga: "GraphAnalysis", axis: str, *, implicit: Optional[bool] = None) -> List[str]:
+    """Nodes that cannot be *proved* elementwise along the dynamic ``axis``.
 
-    Batch-polymorphic execution pads feeds with zero rows and slices results
-    back — exact only when no op mixes information across the leading dim.
-    That holds for the artifact's quantized-inference vocabulary (rowwise
-    elementwise chains, weight contractions, NCHW windows) but is false for
-    e.g. a global ReduceMean, Softmax over axis 0, a batch-folding Reshape,
-    or a Concat on axis 0 — those would silently compute over the zero
-    padding.  ``compile_model(batch="dynamic")`` rejects graphs where this
-    returns a non-empty list of human-readable reasons.  Conservative by
-    construction: an op it cannot reason about (unknown shapes, unlisted op
-    types touching a batch-carrying value) is reported, not assumed safe.
+    Scenario-specialized execution pads feeds with zero slabs along each
+    dynamic axis and slices results back — exact only when no op mixes
+    information across that axis.  That holds for the artifact's
+    quantized-inference vocabulary (elementwise chains, weight contractions
+    over *other* dims, NCHW windows with the axis on the batch position) but
+    is false for e.g. a global ReduceMean, Softmax over the axis, an
+    axis-folding Reshape/Flatten, or a Concat along it — those would
+    silently compute over the zero padding.
+    ``compile_model(dynamic_axes=...)`` rejects graphs where this returns a
+    non-empty list of human-readable reasons, once per requested axis.
+
+    Two tracking modes:
+
+    * **named** (graphs that declare axis names): the axis is followed *by
+      name* through shape inference, so it may legally move position
+      (Transpose, Unsqueeze) — the proof only requires that every op is
+      elementwise along it and that the name survives to a unique position.
+    * **implicit** (legacy ``(None, …)`` batch graphs): the axis is pinned
+      to position 0 by convention, so any op that would move it off the
+      leading dim is rejected — byte-for-byte the PR 4 behavior.
+
+    Conservative by construction: an op the proof cannot reason about
+    (unknown shapes, unlisted op types touching an axis-carrying value) is
+    reported, not assumed safe.
     """
+    if implicit is None:
+        implicit = implicit_batch_graph(ga.graph)
+
+    def positions(name: str) -> Optional[Tuple[int, ...]]:
+        if ga.is_const(name):
+            return ()
+        return axis_positions(ga.shape(name), axis, implicit=implicit)
 
     def carries(name: str) -> bool:
-        if ga.is_const(name):
-            return False
-        s = ga.shape(name)
-        if s is None:
-            return True  # unknown: assume it may carry the batch
-        return len(s) > 0 and s[0] is None
+        p = positions(name)
+        return p is None or len(p) > 0  # unknown shape: assume it may carry
+
+    def pos_of(name: str) -> Optional[int]:
+        """The unique tracked position, or None (unknown / ambiguous).
+        Implicit mode pins the axis to position 0 by convention."""
+        if implicit:
+            return 0
+        p = positions(name)
+        return p[0] if p is not None and len(p) == 1 else None
 
     def norm_axes(axes, rank):
         return {int(a) % rank for a in axes}
@@ -323,86 +455,116 @@ def batch_mixing_nodes(ga: "GraphAnalysis") -> List[str]:
     problems: List[str] = []
     for node in ga.graph.toposorted():
         ins = [i for i in node.inputs if i]
-        batch_ins = [i for i in ins if carries(i)]
-        if not batch_ins:
+        carrying = [i for i in ins if carries(i)]
+        if not carrying:
             continue
         t = node.op_type
         s0 = ga.shape(node.inputs[0]) if node.inputs else None
         rank = len(s0) if s0 is not None else None
-        only_data = set(batch_ins) <= {node.inputs[0]}
+        only_data = set(carrying) <= {node.inputs[0]}
+        p0 = pos_of(node.inputs[0]) if node.inputs else None
         reason = None
 
         if t in _ROWWISE_OPS:
-            reason = None if only_data else "batch rides a non-data operand"
+            reason = None if only_data else "axis rides a non-data operand"
         elif t in _BCAST_OPS:
             out = ga.shape(node.outputs[0])
-            if out is None or out[0] is not None:
-                reason = "broadcast result does not keep the batch on axis 0"
+            out_pos = axis_positions(out, axis, implicit=implicit)
+            if out_pos is None or len(out_pos) != 1:
+                reason = "broadcast result does not keep the axis at a unique position"
             else:
                 for i in ins:
                     s = ga.shape(i)
                     if s is None:
                         reason = f"operand {i!r} has unknown shape"
                         break
-                    if len(s) == len(out) and s[0] is not None and s[0] != 1:
+                    if implicit and len(s) == len(out) and s[0] is not None and s[0] != 1:
                         reason = f"operand {i!r} pins axis 0 to {s[0]}"
                         break
+                    ip = axis_positions(s, axis, implicit=implicit)
+                    if ip is not None and len(ip) > 1:
+                        reason = f"operand {i!r} carries the axis more than once"
+                        break
         elif t in _LEAD0_OPS:
+            contraction = rank - 1 if rank is not None else None
             if not only_data:
-                reason = "batch rides a non-row operand"
-            elif t == "Gemm" and node.attrs.get("transA", 0):
-                reason = "transA moves the batch off the row axis"
+                reason = "axis rides a non-row operand"
+            elif p0 is None:
+                reason = "cannot locate the axis on the data operand"
+            elif t == "Gemm" and p0 != (1 if node.attrs.get("transA", 0) else 0):
+                reason = "axis is not on the Gemm row axis"
+            elif t != "Gemm" and contraction is not None and p0 == contraction:
+                reason = "axis is the matmul contraction dim"
             elif t == "MatMul":
                 s1 = ga.shape(node.inputs[1])
                 if s1 is None or len(s1) != 2:
-                    reason = "rhs is not a known 2-D operand (stacked matmul may broadcast over the batch)"
+                    reason = "rhs is not a known 2-D operand (stacked matmul may broadcast over the axis)"
         elif t in _NCHW_OPS:
-            reason = None if only_data else "batch rides a non-data operand"
+            if not only_data:
+                reason = "axis rides a non-data operand"
+            elif p0 != 0:
+                reason = "axis is not on the NCHW batch position (windows/channels mix it)"
         elif t == "Softmax":
-            if not only_data or rank is None:
+            if not only_data or rank is None or p0 is None:
                 reason = "cannot normalize the softmax axis"
-            elif int(node.attrs.get("axis", -1)) % rank == 0:
-                reason = "softmax normalizes over the batch axis"
+            elif int(node.attrs.get("axis", -1)) % rank == p0:
+                reason = "softmax normalizes over the axis"
         elif t == "ReduceMean":
             axes = node.attrs.get("axes")
-            if axes is None or rank is None:
-                reason = "reduces over all axes (including the batch)"
-            elif 0 in norm_axes(axes, rank):
-                reason = "reduces over the batch axis"
+            if axes is None or rank is None or p0 is None:
+                reason = "reduces over all axes (including the dynamic axis)"
+            elif p0 in norm_axes(axes, rank):
+                reason = "reduces over the axis"
         elif t == "Flatten":
-            if int(node.attrs.get("axis", 1)) != 1:
-                reason = "flatten folds the batch into another axis"
+            a = int(node.attrs.get("axis", 1))
+            if rank is None or p0 is None:
+                reason = "operand shape unknown"
+            else:
+                side = list(enumerate(s0))[:a] if p0 < a else list(enumerate(s0))[a:]
+                if any(d != 1 for i, d in side if i != p0):
+                    reason = "flatten folds the axis together with other dims"
         elif t == "Transpose":
-            perm = node.attrs.get("perm")
-            if not perm or int(perm[0]) != 0:
-                reason = "permutation moves the batch off axis 0"
+            if implicit:
+                perm = node.attrs.get("perm")
+                if not perm or int(perm[0]) != 0:
+                    reason = "permutation moves the axis off position 0"
+            else:
+                out_pos = axis_positions(ga.shape(node.outputs[0]), axis)
+                if out_pos is None or len(out_pos) != 1:
+                    reason = "permutation loses track of the axis"
         elif t == "Concat":
-            if rank is None or int(node.attrs["axis"]) % rank == 0:
-                reason = "concatenates along the batch axis"
+            if rank is None or p0 is None or int(node.attrs["axis"]) % rank == p0:
+                reason = "concatenates along the axis"
         elif t == "Gather":
             if not only_data:
-                reason = "batch rides the indices"
-            elif rank is None or int(node.attrs.get("axis", 0)) % rank == 0:
-                reason = "gathers along the batch axis"
+                reason = "axis rides the indices"
+            elif rank is None or p0 is None or int(node.attrs.get("axis", 0)) % rank == p0:
+                reason = "gathers along the axis"
         elif t == "Slice":
             axes_c = ga.const(node.inputs[3]) if len(node.inputs) > 3 and node.inputs[3] else None
-            if not only_data or axes_c is None or rank is None:
-                reason = "slice axes unknown (may slice the batch axis)"
-            elif 0 in norm_axes(np.asarray(axes_c).reshape(-1), rank):
-                reason = "slices the batch axis"
+            if not only_data or axes_c is None or rank is None or p0 is None:
+                reason = "slice axes unknown (may slice the dynamic axis)"
+            elif p0 in norm_axes(np.asarray(axes_c).reshape(-1), rank):
+                reason = "slices the axis"
         elif t in ("Squeeze", "Unsqueeze"):
             axes_c = ga.const(node.inputs[1]) if len(node.inputs) > 1 else None
-            out_rank = rank + (1 if t == "Unsqueeze" else -1) * (
-                np.asarray(axes_c).size if axes_c is not None else 0
-            ) if rank is not None else None
-            if not only_data or axes_c is None or rank is None:
+            if not only_data or axes_c is None or rank is None or p0 is None:
                 reason = "axes unknown"
-            elif 0 in norm_axes(np.asarray(axes_c).reshape(-1), out_rank if t == "Unsqueeze" else rank):
-                reason = "touches axis 0"
+            elif t == "Squeeze":
+                if p0 in norm_axes(np.asarray(axes_c).reshape(-1), rank):
+                    reason = "squeezes the axis"
+            elif implicit:
+                out_rank = rank + np.asarray(axes_c).size
+                if 0 in norm_axes(np.asarray(axes_c).reshape(-1), out_rank):
+                    reason = "moves the axis off position 0"
+            # named Unsqueeze: inserting 1-dims never mixes, and shape
+            # inference tracks the name to its new position
         elif t == "Reshape":
             target = ga.const(node.inputs[1]) if len(node.inputs) > 1 else None
             tail = s0[1:] if s0 is not None else None
-            if target is None or tail is None or any(d is None for d in tail):
+            if p0 != 0:
+                reason = "axis is not leading (only leading-axis reshapes are proven)"
+            elif target is None or tail is None or any(not isinstance(d, int) for d in tail):
                 reason = "target/operand shape unknown"
             else:
                 dims = [int(d) for d in np.asarray(target).reshape(-1)]
@@ -410,26 +572,27 @@ def batch_mixing_nodes(ga: "GraphAnalysis") -> List[str]:
                 rest = dims[1:]
                 rest_total = int(np.prod(rest)) if rest else 1
                 if not dims or dims[0] != -1 or any(d == -1 for d in rest):
-                    reason = "target pins the batch dim (leading target must be -1)"
+                    reason = "target pins the axis dim (leading target must be -1)"
                 elif rest_total != tail_total:
-                    reason = "reshape folds batch rows into other axes"
+                    reason = "reshape folds the axis into other dims"
         else:
-            reason = "op not verified batch-elementwise under zero-row padding"
+            reason = "op not verified elementwise along the axis under zero padding"
 
         if reason:
-            problems.append(f"{node.name or t}[{t}]: {reason}")
+            problems.append(f"{node.name or t}[{t}]: {axis!r} {reason}")
     return problems
 
 
-def infer_shapes(graph: Graph, *, batch: Optional[int] = None) -> Dict[str, Shape]:
+def infer_shapes(graph: Graph, *, bindings: Optional[Dict[str, int]] = None) -> Dict[str, Shape]:
     """Best-effort static shapes; tensors missing from the map are unknown.
 
-    ``batch`` binds the symbolic leading dimension: every graph input whose
-    first dim is ``None`` is seeded as ``(batch, …)`` before propagation, so
-    the whole map comes out specialized for that batch bucket (used by the
-    batch-polymorphic lowering to cross-check per-bucket plans)."""
+    ``bindings`` substitutes named symbolic axes (and, per the legacy
+    convention, an unnamed leading ``None`` when :data:`BATCH_AXIS` is
+    bound) in every graph-input signature before propagation, so the whole
+    map comes out specialized for that scenario bucket (used by the
+    scenario-specializing lowering to cross-check per-bucket plans)."""
     shapes: Dict[str, Shape] = {
-        t.name: bind_batch(tuple(t.shape), batch) for t in graph.inputs
+        t.name: bind(tuple(t.shape), bindings) for t in graph.inputs
     }
     for name, arr in graph.initializers.items():
         shapes[name] = tuple(arr.shape)

@@ -1,40 +1,50 @@
-"""Micro-batching server for batch-polymorphic compiled PQ-IR artifacts.
+"""Micro-batching server for scenario-polymorphic compiled PQ-IR artifacts.
 
 The token engine (:mod:`repro.serving.engine`) serves the transformer stack;
 this module serves the *compiled models the paper is actually about*: one
-``compile_model(batch="dynamic")`` artifact, heavy request traffic, no
+``compile_model(dynamic_axes=...)`` artifact, heavy request traffic, no
 per-shape recompiles.  The structure mirrors the token engine's
 request-lifecycle and metrics discipline (submit → step → drain; timestamped
 requests; a flat ``metrics`` dict), specialized to single-shot inference:
 
 * **Coalescing** — each :meth:`~CompiledModelServer.step` takes up to
-  ``max_batch`` queued requests and runs them as one batch.  The compiled
-  model pads that batch to the next power-of-two *bucket* and serves it from
-  its bounded :class:`~repro.backend.plan.PlanCache`, so steady-state traffic
-  of any size mix touches a handful of plan specializations — the vLLM-style
-  shape-bucketing answer to "serve millions of users from one artifact".
-* **Padding/slicing** — zero-row padding is exact for the artifact vocabulary
-  (ops are elementwise along the leading dim); each request gets back exactly
-  its own rows, bit-identical to a solo run.
-* **Metrics** — per-bucket batch counts, padded-row overhead, plan-cache
-  hit/miss/size, and request latency/throughput summaries.
+  ``max_batch`` queued requests and runs them as one batch.  With a
+  variable-length sequence axis the requests are right-padded to the longest
+  sequence in the group first, so the whole group lands on one cell of the
+  (batch-bucket × seq-bucket) grid; the compiled model pads batch and
+  sequence to their per-axis buckets and serves the cell from its bounded
+  :class:`~repro.backend.plan.PlanCache` — the vLLM-style shape-bucketing
+  answer to "serve millions of users from one artifact", now over a 2-D
+  scenario grid instead of a single free axis.
+* **Deadline-aware admission** — with ``max_wait_ms`` set, a step holds off
+  on a partial batch until either ``max_batch`` requests are queued or the
+  *oldest* queued request has aged past the window; ageing out launches the
+  partial batch immediately (a *window hit*, surfaced in :meth:`summary`).
+  The default (``max_wait_ms=None``) keeps the PR 4 greedy drain.
+* **Padding/slicing** — zero padding is exact for every dynamic axis (the
+  compiler proved each one elementwise); each request gets back exactly its
+  own rows/steps, bit-identical to a solo run.
+* **Metrics** — per-bucket and per-grid-cell batch counts, padded-row and
+  padded-token overhead, window hits, plan-cache behavior (uniform
+  ``hit_rate`` from :class:`repro.core.cache.LruCache`), and request
+  latency/throughput summaries.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..backend.plan import batch_bucket
-from ..core.compile import CompiledModel
+from ..core.compile import BATCH_AXIS, CompiledModel
 
 
 @dataclasses.dataclass
 class CompiledRequest:
-    """One inference request: a single example (no batch dim)."""
+    """One inference request: a single example (no batch dim).  With a
+    sequence axis the example's extent along it may vary per request."""
 
     uid: int
     x: np.ndarray
@@ -53,35 +63,72 @@ class CompiledRequest:
 class CompiledServerConfig:
     max_batch: int = 32  # largest coalesced batch (its bucket bounds jit traces)
     latency_window: int = 4096  # latency samples kept for summary() aggregates
+    # admission window: hold a partial batch until the oldest queued request
+    # is this old (ms), then launch it (None = greedy drain, the PR 4 mode)
+    max_wait_ms: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
         if self.latency_window < 1:
             raise ValueError(f"latency_window must be >= 1, got {self.latency_window}")
+        if self.max_wait_ms is not None and self.max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
 
 
 class CompiledModelServer:
-    """Queue + micro-batching loop over a batch-polymorphic CompiledModel."""
+    """Queue + micro-batching loop over a scenario-polymorphic CompiledModel."""
 
     def __init__(self, cm: CompiledModel, cfg: Optional[CompiledServerConfig] = None) -> None:
         if not cm.is_dynamic:
             raise ValueError(
-                "CompiledModelServer needs a batch-polymorphic artifact — "
-                'compile with compile_model(..., batch="dynamic")'
+                "CompiledModelServer needs a scenario-polymorphic artifact — "
+                'compile with compile_model(..., batch="dynamic") or '
+                "dynamic_axes={...}"
             )
-        if len(cm.batch_input_names) != 1 or len(cm.input_names) != 1:
+        batch_inputs = cm.axis_input_pos.get(BATCH_AXIS, {})
+        if len(batch_inputs) != 1 or len(cm.input_names) != 1:
             raise ValueError(
                 f"the micro-batching server coalesces over exactly one input, "
                 f"which must carry the batch dim — model has inputs "
-                f"{cm.input_names} (batch-carrying: {cm.batch_input_names})"
+                f"{cm.input_names} (batch-carrying: {sorted(batch_inputs)})"
+            )
+        self.input_name = next(iter(batch_inputs))
+        if batch_inputs[self.input_name] != 0:
+            raise ValueError("the batch axis must be the input's leading dim")
+        extra = [a for a in cm.dynamic_axes if a != BATCH_AXIS]
+        if len(extra) > 1:
+            raise ValueError(
+                f"the server coalesces over the batch plus at most one "
+                f"variable-length axis, got dynamic axes {sorted(cm.dynamic_axes)}"
             )
         self.cm = cm
         self.cfg = cfg if cfg is not None else CompiledServerConfig()
-        self.input_name = cm.batch_input_names[0]
+        #: the variable-length (sequence) axis, if the artifact has one
+        self.seq_axis: Optional[str] = extra[0] if extra else None
         in_t = next(t for t in cm.model.graph.inputs if t.name == self.input_name)
-        self._example_shape = tuple(in_t.shape[1:])  # dims may be None (unknown)
+        self._example_shape = tuple(in_t.shape[1:])  # dims may be named/None
         self._example_dtype = np.dtype(in_t.dtype)
+        stray = [
+            d for d in self._example_shape
+            if isinstance(d, str) and d not in cm.dynamic_axes
+        ]
+        if stray:
+            raise ValueError(
+                f"input {self.input_name!r} has named symbolic dims {stray} the "
+                "compile left static — the server cannot validate or bucket "
+                "them; compile them as dynamic_axes or pin them to ints"
+            )
+        if self.seq_axis is not None:
+            pos = cm.axis_input_pos[self.seq_axis].get(self.input_name)
+            if pos is None or pos == 0:
+                raise ValueError(
+                    f"sequence axis {self.seq_axis!r} must sit on a non-leading "
+                    f"dim of the coalesced input {self.input_name!r}"
+                )
+            self._seq_pos = pos - 1  # example-local (batch dim stripped)
+        else:
+            self._seq_pos = None
         self.queue: Deque[CompiledRequest] = deque()
         self._uid = 0
         # bounded: a long-lived server keeps a sliding latency window, not
@@ -92,21 +139,28 @@ class CompiledModelServer:
             "batches": 0,
             "completed": 0,
             "padded_rows": 0,  # bucket rows minus real rows, summed
-            "bucket_batches": {},  # bucket -> number of coalesced batches
+            "padded_tokens": 0,  # seq-bucket slots minus real seq steps, summed
+            "window_hits": 0,  # partial batches launched by the admission window
+            "bucket_batches": {},  # batch bucket -> number of coalesced batches
+            "grid_batches": {},  # (batch bucket, seq bucket) -> batches (2-D grids)
         }
 
     # -- request lifecycle ----------------------------------------------------
     def submit(self, x: np.ndarray) -> CompiledRequest:
         """Enqueue one example (shape = model input shape without the batch
-        dim); returns the request handle whose ``outputs`` fill on completion.
+        dim; the sequence dim, if any, may vary per request); returns the
+        request handle whose ``outputs`` fill on completion.
 
         Shape/dtype are validated here, at admission — a bad example must be
         rejected up front, not blow up a coalesced batch mid-``step`` and
         take its co-batched requests down with it."""
         x = np.asarray(x)
         ok = len(x.shape) == len(self._example_shape) and all(
-            want is None or got == want for got, want in zip(x.shape, self._example_shape)
+            not isinstance(want, int) or got == want
+            for got, want in zip(x.shape, self._example_shape)
         )
+        if ok and self._seq_pos is not None and x.shape[self._seq_pos] < 1:
+            ok = False
         if not ok or x.dtype != self._example_dtype:
             raise ValueError(
                 f"request example must have shape {self._example_shape} and "
@@ -121,46 +175,102 @@ class CompiledModelServer:
     # -- main loop ------------------------------------------------------------
     def step(self) -> List[CompiledRequest]:
         """One server cycle: coalesce up to ``max_batch`` queued requests into
-        a single bucketed model execution.  Returns the completed requests."""
+        a single bucketed model execution.  Returns the completed requests —
+        possibly none, when the admission window is still holding a partial
+        batch open for more arrivals."""
         if not self.queue:
             return []
+        if (
+            self.cfg.max_wait_ms is not None
+            and len(self.queue) < self.cfg.max_batch
+        ):
+            age_ms = (time.monotonic() - self.queue[0].t_submit) * 1e3
+            if age_ms < self.cfg.max_wait_ms:
+                return []  # hold the partial batch open for more arrivals
+            self.metrics["window_hits"] += 1
         n = min(len(self.queue), self.cfg.max_batch)
         reqs = [self.queue.popleft() for _ in range(n)]
-        batch = np.stack([r.x for r in reqs])
-        # the compiled model pads n → bucket and serves the bucket's plan
-        # from its PlanCache; we only account for the coalescing here
+        # batch assembly AND execution both re-queue on failure: a failure
+        # anywhere here (a shape mismatch np.stack rejects, a backend/jit
+        # error) must not lose the coalesced requests — they go back to the
+        # head of the queue in original order for the caller to retry/triage
         try:
+            if self._seq_pos is None:
+                batch = np.stack([r.x for r in reqs])
+                seq_lens: Optional[List[int]] = None
+            else:
+                # right-pad every example to the longest sequence in the
+                # group, so it lands on one (batch-bucket × seq-bucket) cell
+                seq_lens = [int(r.x.shape[self._seq_pos]) for r in reqs]
+                s_max = max(seq_lens)
+                rows = []
+                for r in reqs:
+                    widths = [(0, 0)] * r.x.ndim
+                    widths[self._seq_pos] = (0, s_max - r.x.shape[self._seq_pos])
+                    rows.append(np.pad(r.x, widths) if widths[self._seq_pos][1] else r.x)
+                batch = np.stack(rows)
+            # the compiled model pads each axis to its bucket and serves the
+            # cell from its PlanCache; we only account for the coalescing here
             outs = self.cm.run({self.input_name: batch})
         except Exception:
-            # backend/jit failure must not lose the coalesced requests: put
-            # them back at the head of the queue (original order) and let
-            # the caller decide whether to retry
             self.queue.extendleft(reversed(reqs))
             raise
-        bucket = batch_bucket(n)
+        bucket = self.cm.bucket_for(BATCH_AXIS, n)
         self.metrics["batches"] += 1
         self.metrics["padded_rows"] += bucket - n
         hist = self.metrics["bucket_batches"]
         hist[bucket] = hist.get(bucket, 0) + 1
+        if seq_lens is not None:
+            s_bucket = self.cm.bucket_for(self.seq_axis, max(seq_lens))
+            self.metrics["padded_tokens"] += sum(s_bucket - s for s in seq_lens)
+            grid = self.metrics["grid_batches"]
+            cell = (bucket, s_bucket)
+            grid[cell] = grid.get(cell, 0) + 1
         now = time.monotonic()
-        batch_outs = self.cm.batch_output_names
+        out_axes = self.cm.output_axis_pos
         for i, req in enumerate(reqs):
-            # only batch-carrying outputs scatter per request; anything
-            # batch-independent (e.g. a constant auxiliary output) is shared
-            req.outputs = {k: (v[i] if k in batch_outs else v) for k, v in outs.items()}
+            # only batch-carrying outputs scatter per request (anything
+            # batch-independent is shared whole); sequence-carrying outputs
+            # additionally slice back to the request's own true length
+            req.outputs = {
+                k: self._request_view(v, out_axes.get(k, {}), i, seq_lens[i] if seq_lens else None)
+                for k, v in outs.items()
+            }
             req.done = True
             req.t_done = now
             self._latencies.append(now - req.t_submit)
         self.metrics["completed"] += n
         return reqs
 
+    def _request_view(
+        self, v: np.ndarray, axes: Dict[str, int], i: int, seq_len: Optional[int]
+    ) -> np.ndarray:
+        batch_pos = axes.get(BATCH_AXIS)
+        seq_pos = axes.get(self.seq_axis) if self.seq_axis is not None else None
+        if batch_pos is not None:
+            v = v[(slice(None),) * batch_pos + (i,)]  # view, not a copy
+            if seq_pos is not None and seq_pos > batch_pos:
+                seq_pos -= 1
+        if seq_pos is not None and seq_len is not None:
+            slicer = [slice(None)] * v.ndim
+            slicer[seq_pos] = slice(0, seq_len)
+            v = v[tuple(slicer)]
+        return v
+
     def run_until_drained(self, max_cycles: int = 10_000) -> List[CompiledRequest]:
-        """Step until the queue is empty; returns everything completed."""
+        """Step until the queue is empty; returns everything completed.  An
+        admission window cannot stall the drain: once the caller is draining,
+        a deferred step only waits for the window to expire."""
         done: List[CompiledRequest] = []
         for _ in range(max_cycles):
             if not self.queue:
                 return done
-            done.extend(self.step())
+            completed = self.step()
+            if not completed and self.cfg.max_wait_ms is not None:
+                # deferred by the admission window — wait out the remainder
+                age_s = time.monotonic() - self.queue[0].t_submit
+                time.sleep(max(0.0, self.cfg.max_wait_ms / 1e3 - age_s))
+            done.extend(completed)
         raise RuntimeError("compiled-model serve loop did not drain")
 
     # -- reporting ------------------------------------------------------------
@@ -168,12 +278,13 @@ class CompiledModelServer:
         """Serving metrics + plan-cache behavior + latency aggregates."""
         lat = np.asarray(self._latencies, np.float64)
         cache = self.cm.cache_stats
-        served = cache["hits"] + cache["misses"]
         out = dict(self.metrics)
-        out["bucket_batches"] = dict(self.metrics["bucket_batches"])  # snapshot, not alias
+        # snapshots, not aliases
+        out["bucket_batches"] = dict(self.metrics["bucket_batches"])
+        out["grid_batches"] = dict(self.metrics["grid_batches"])
         out.update(
             plan_cache=cache,
-            plan_cache_hit_rate=(cache["hits"] / served) if served else 0.0,
+            plan_cache_hit_rate=cache["hit_rate"],
             latency_avg_ms=float(lat.mean() * 1e3) if lat.size else None,
             latency_p95_ms=float(np.percentile(lat, 95) * 1e3) if lat.size else None,
             latency_max_ms=float(lat.max() * 1e3) if lat.size else None,

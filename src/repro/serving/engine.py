@@ -22,8 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..backend.plan import PlanCache, bucket_multiple
 from ..configs.base import ModelConfig
-from ..core.cache import LruCache
 from ..models import model as M
 
 
@@ -111,9 +111,10 @@ class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig, *, compute_dtype=jnp.float32) -> None:
         self.params = params
         self.cfg = cfg
-        # cache length must cover the largest prefill bucket
+        # cache length must cover the largest prefill bucket (same round-up-
+        # to-multiple policy the compiled-model grid uses for sequence axes)
         ecfg = dataclasses.replace(
-            ecfg, max_len=-(-ecfg.max_len // ecfg.prefill_bucket) * ecfg.prefill_bucket
+            ecfg, max_len=bucket_multiple(ecfg.max_len, ecfg.prefill_bucket)
         )
         self.ecfg = ecfg
         self.compute_dtype = compute_dtype
@@ -129,15 +130,20 @@ class ServeEngine:
         # bounded: adversarial prompt-length traffic would otherwise pin one
         # jitted prefill per bucket forever (sizes surface in self.metrics);
         # the default bound covers every reachable bucket, so it only evicts
-        # when explicitly configured tighter
-        self._prefill_cache: LruCache = LruCache(_prefill_capacity(ecfg))
+        # when explicitly configured tighter.  Same PlanCache (LRU + uniform
+        # hit/miss/hit_rate accounting) the compiled-model path uses for its
+        # per-bucket plan specializations — the prefill path is the token
+        # engine's instance of exactly that per-shape discipline.
+        self._prefill_cache: PlanCache = PlanCache(_prefill_capacity(ecfg))
         self._rng = np.random.default_rng(ecfg.seed)
         self.metrics = {
             "decode_steps": 0,
             "prefills": 0,
             "completed": 0,
             "prefill_cache_size": 0,
+            "prefill_cache_hits": 0,
             "prefill_cache_evictions": 0,
+            "prefill_cache_hit_rate": 0.0,
         }
 
     def _select(self, logits_row) -> int:
@@ -168,8 +174,11 @@ class ServeEngine:
 
             jitted = jax.jit(fn)
             self._prefill_cache.put(plen, jitted)
-        self.metrics["prefill_cache_size"] = len(self._prefill_cache)
-        self.metrics["prefill_cache_evictions"] = self._prefill_cache.stats["evictions"]
+        stats = self._prefill_cache.stats
+        self.metrics["prefill_cache_size"] = stats["size"]
+        self.metrics["prefill_cache_hits"] = stats["hits"]
+        self.metrics["prefill_cache_evictions"] = stats["evictions"]
+        self.metrics["prefill_cache_hit_rate"] = stats["hit_rate"]
         return jitted
 
     def _admit(self) -> None:
@@ -178,7 +187,7 @@ class ServeEngine:
                 continue
             req = self.queue.popleft()
             plen = len(req.prompt)
-            bucket = -(-plen // self.ecfg.prefill_bucket) * self.ecfg.prefill_bucket
+            bucket = bucket_multiple(plen, self.ecfg.prefill_bucket)
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :plen] = req.prompt
             pcache = M.init_cache(self.cfg, 1, self.ecfg.max_len)

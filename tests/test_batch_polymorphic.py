@@ -1,17 +1,25 @@
-"""Differential conformance for batch-polymorphic compilation.
+"""Differential conformance for scenario-polymorphic compilation.
 
-One ``compile_model(batch="dynamic")`` artifact must serve every batch size
-bit-exactly — against the reference runtime AND against a per-shape *static*
-compile of the same model — with at most one specialization (one PlanCache
-miss, no re-lowering) per power-of-two bucket.  Covers the MLP (fused
-qlinear chain) and the CNN (conv + Flatten + head) across batch sizes
-{1, 3, 8, 17} on the ref and interpret backends, plus the plan-cache
-LRU-bounding behavior and the analysis-layer symbolic-batch helpers.
+One dynamic artifact must serve every shape scenario bit-exactly — against
+the reference runtime AND against a per-shape *static* compile of the same
+model — with at most one specialization (one PlanCache miss, no re-lowering)
+per visited bucket combination.  Covers the legacy single-axis contract
+(``batch="dynamic"``: MLP, CNN, uint8 per-channel across batches {1, 3, 8,
+17}) and the named multi-axis contract (``dynamic_axes={"N": ..., "S":
+...}``: a (batch × sequence) grid) on the ref and interpret backends, plus
+the plan-cache LRU-bounding behavior, the per-axis bucketing policies and
+the analysis-layer named-axis helpers.
 """
 import numpy as np
 import pytest
 
-from repro.backend.plan import PlanCache, batch_bucket
+from repro.backend.plan import (
+    PlanCache,
+    batch_bucket,
+    bindings_key,
+    bucket_multiple,
+    resolve_bucketing,
+)
 from repro.backend.lowering import specialize_plan
 from repro.core.cache import LruCache
 from repro.core.compile import compile_model
@@ -98,14 +106,45 @@ def _uint8_pc_model():
 MODELS = {"mlp": _mlp_model, "cnn": _cnn_model, "uint8_pc": _uint8_pc_model}
 
 
-def _static_for_batch(model, m: int, backend: str):
-    """A per-shape static compile: the same artifact with the symbolic batch
-    pinned to ``m`` in its input/output signature."""
+def _two_axis_model():
+    """A two-layer FC stack over a ('N', 'S', 32) input: both the batch and
+    the sequence length are named symbolic axes, so one artifact serves the
+    whole (batch × sequence) scenario grid."""
+    from repro.core import patterns, pqir, quant
+
+    rng = np.random.default_rng(15)
+    p0 = quant.quantize_linear_layer(
+        rng.normal(size=(32, 48)).astype(np.float32) * 0.15,
+        rng.normal(size=(48,)).astype(np.float32) * 0.1, 0.05, 0.1,
+    )
+    p1 = quant.quantize_linear_layer(
+        rng.normal(size=(48, 24)).astype(np.float32) * 0.2,
+        rng.normal(size=(24,)).astype(np.float32) * 0.1, 0.1, 0.12,
+    )
+    gb = pqir.GraphBuilder("two_axis_mlp")
+    x = gb.add_input("x", "int8", ("N", "S", 32))
+    h = patterns.fc_layer(gb, x, p0, "fc0", two_mul=True, activation="Relu")
+    y = patterns.fc_layer(gb, h, p1, "fc1", two_mul=True)
+    gb.add_output(y, "int8", ("N", "S", 24))
+    model = gb.build()
+
+    def feed(m, s):
+        return {"x": rng.integers(-128, 128, (m, s, 32)).astype(np.int8)}
+
+    return model, feed
+
+
+def _static_for(model, bindings, backend: str):
+    """A per-shape static compile: the same artifact with every symbolic
+    axis pinned to its concrete extent in the input/output signatures."""
     pinned = analysis.clone_model(model)
     for t in list(pinned.graph.inputs) + list(pinned.graph.outputs):
-        if analysis.has_symbolic_batch(tuple(t.shape)):
-            t.shape = (m,) + tuple(t.shape[1:])
+        t.shape = analysis.bind(tuple(t.shape), bindings)
     return compile_model(pinned, backend=backend)
+
+
+def _static_for_batch(model, m: int, backend: str):
+    return _static_for(model, {analysis.BATCH_AXIS: m}, backend)
 
 
 class TestDynamicConformance:
@@ -149,7 +188,7 @@ class TestDynamicConformance:
             cm.run(feed(m))
         assert cm.cache_stats == {
             "size": 1, "capacity": PlanCache.DEFAULT_CAPACITY,
-            "hits": 3, "misses": 1, "evictions": 0,
+            "hits": 3, "misses": 1, "evictions": 0, "hit_rate": 0.75,
         }
 
     def test_plan_cache_is_bounded(self):
@@ -250,6 +289,160 @@ class TestTemplatePlan:
             cm.run({"input_q": np.zeros((0, 32), np.int8)})
 
 
+class TestTwoAxisConformance:
+    """The named-axis generalization: one ``dynamic_axes={"N", "S"}``
+    artifact serves a whole (batch × sequence) grid bit-exactly vs the
+    reference runtime AND vs per-shape static compiles, with exactly one
+    specialization per visited bucket pair."""
+
+    GRID = tuple((m, s) for m in (1, 3, 8, 17) for s in (16, 32, 100))
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_two_axis_matches_reference_and_static(self, backend):
+        model, feed = _two_axis_model()
+        rt = ReferenceRuntime(model)
+        cm = compile_model(model, backend=backend, dynamic_axes={"N": None, "S": 32})
+        assert cm.is_dynamic and cm.plan.axes == ("N", "S")
+        for m, s in self.GRID:
+            feeds = feed(m, s)
+            ref = rt.run(feeds)
+            got = cm.run(feeds)
+            static = _static_for(model, {"N": m, "S": s}, backend).run(feeds)
+            for k, want in ref.items():
+                assert got[k].shape == want.shape == (m, s, 24), (backend, m, s)
+                np.testing.assert_array_equal(
+                    got[k], want, err_msg=f"{backend}/m={m}/s={s} vs ref"
+                )
+                np.testing.assert_array_equal(
+                    static[k], want, err_msg=f"{backend}/m={m}/s={s} static vs ref"
+                )
+
+    def test_one_specialization_per_bucket_pair(self):
+        model, feed = _two_axis_model()
+        cm = compile_model(model, backend="ref", dynamic_axes={"N": None, "S": 32})
+        for m, s in self.GRID:
+            cm.run(feed(m, s))
+        cells = {(batch_bucket(m), bucket_multiple(s, 32)) for m, s in self.GRID}
+        assert cm.cache_stats["misses"] == len(cells)
+        assert cm.cache_stats["size"] == len(cells)
+        for m, s in self.GRID:  # revisit the grid: pure cache hits
+            cm.run(feed(m, s))
+        assert cm.cache_stats["misses"] == len(cells)
+        assert cm.cache_stats["hits"] >= len(self.GRID)
+
+    def test_per_axis_bucketing_policies(self):
+        """The batch axis buckets power-of-two, the sequence axis rounds to
+        the configured granularity — per-axis, not one global policy."""
+        model, feed = _two_axis_model()
+        cm = compile_model(model, backend="ref", dynamic_axes={"N": None, "S": 32})
+        assert cm.bucket_for("N", 3) == 4 and cm.bucket_for("N", 8) == 8
+        assert cm.bucket_for("S", 3) == 32 and cm.bucket_for("S", 33) == 64
+        cm.run(feed(3, 40))
+        assert cm.plan_cache.keys() == [(("N", 4), ("S", 64))]
+
+    def test_binding_order_independence(self):
+        """{'N':…, 'S':…} and {'S':…, 'N':…} are the same specialization —
+        one cache entry, identical plan rendering."""
+        model, _ = _two_axis_model()
+        cm = compile_model(model, backend="interpret", dynamic_axes={"N": None, "S": 32})
+        plan_a, fn_a = cm.specialized({"N": 4, "S": 32})
+        plan_b, fn_b = cm.specialized({"S": 32, "N": 4})
+        assert fn_a is fn_b  # second lookup is a cache hit, not a new entry
+        assert cm.cache_stats["misses"] == 1 and cm.cache_stats["hits"] == 1
+        assert plan_a.pretty() == plan_b.pretty()
+        direct_a = specialize_plan(cm.plan, {"N": 4, "S": 32})
+        direct_b = specialize_plan(cm.plan, {"S": 32, "N": 4})
+        assert direct_a.pretty() == direct_b.pretty()
+        assert "batch=(N=4,S=32)" in direct_a.pretty().splitlines()[0]
+
+    def test_unknown_axis_name_rejected(self):
+        model, _ = _two_axis_model()
+        with pytest.raises(ValueError, match="not symbolic"):
+            compile_model(model, dynamic_axes={"N": None, "T": None})
+        cm = compile_model(model, backend="ref", dynamic_axes={"N": None, "S": None})
+        with pytest.raises(ValueError, match="unknown dynamic axes"):
+            cm.specialized({"N": 4, "T": 8})
+        with pytest.raises(ValueError, match="unknown dynamic axes"):
+            specialize_plan(cm.plan, {"T": 8})
+
+    def test_partially_bound_template_refuses_to_execute(self):
+        """Binding a subset of the axes keeps the plan a template over the
+        rest: it renders with the remaining open axes and refuses direct
+        execution until fully bound."""
+        model, feed = _two_axis_model()
+        cm = compile_model(model, backend="interpret", dynamic_axes={"N": None, "S": 32})
+        partial = specialize_plan(cm.plan, {"S": 32})
+        assert partial.batch == "dynamic" and partial.axes == ("N",)
+        with pytest.raises(RuntimeError, match="specialize"):
+            partial.execute({"x": feed(4, 32)["x"]})
+        full = specialize_plan(partial, {"N": 4})
+        assert full.batch == (("N", 4),) or full.batch == 4
+        for step in full.steps:
+            if step.kind == "fused_qlinear":
+                assert step.params["shape"]["m"] == 4 * 32
+                assert "dynamic_batch" not in step.params
+
+    def test_specialize_empty_bindings_on_static_plan_is_noop(self):
+        model, _ = _two_axis_model()
+        static = _static_for(model, {"N": 2, "S": 32}, "ref")
+        assert specialize_plan(static.plan, {}) is static.plan
+        with pytest.raises(ValueError, match="dynamic"):
+            specialize_plan(static.plan, {"N": 4})
+
+    def test_dynamic_single_named_axis_only(self):
+        """Leaving one named axis static: requesting only S keeps N as a
+        compile-time-unknown dim (default tiles) but buckets S."""
+        model, feed = _two_axis_model()
+        rt = ReferenceRuntime(model)
+        cm = compile_model(model, backend="ref", dynamic_axes={"S": 32})
+        assert cm.plan.axes == ("S",)
+        feeds = feed(2, 40)
+        got = cm.run(feeds)
+        want = rt.run(feeds)
+        for k in want:
+            # N is not dynamic: the feed's own batch extent must be used
+            # as-is (no padding), while S pads 40 → 64 and slices back
+            np.testing.assert_array_equal(got[k], want[k])
+
+    def test_seq_axis_mixing_rejected(self):
+        """An op that mixes information across the sequence axis (softmax
+        over it) must reject a dynamic-S compile but still allow dynamic-N."""
+        from repro.core import pqir
+
+        gb = pqir.GraphBuilder("seq_mix")
+        x = gb.add_input("x", "float32", ("N", "S", 8))
+        y = gb.op("Softmax", [x], axis=1)  # normalizes over S
+        gb.add_output(y, "float32", ("N", "S", 8))
+        model = gb.build()
+        with pytest.raises(ValueError, match="'S'"):
+            compile_model(model, dynamic_axes={"S": None}, fuse=False, optimize=False)
+        cm = compile_model(model, dynamic_axes={"N": None}, fuse=False, optimize=False)
+        rt = ReferenceRuntime(model)
+        feeds = {"x": np.random.default_rng(3).normal(size=(3, 5, 8)).astype(np.float32)}
+        np.testing.assert_allclose(
+            cm.run(feeds)[y], rt.run(feeds)[y], rtol=1e-6, atol=1e-6
+        )
+
+    def test_named_transpose_tracks_the_axis(self):
+        """With named axes a permutation is fine — the axis is tracked by
+        name to its new position, padded there, and sliced back there."""
+        from repro.core import pqir
+
+        gb = pqir.GraphBuilder("named_transpose")
+        x = gb.add_input("x", "float32", ("N", 4, 8))
+        t = gb.op("Transpose", [x], perm=[1, 0, 2])  # N moves to position 1
+        y = gb.op("Relu", [t])
+        gb.add_output(y, "float32", (4, "N", 8))
+        model = gb.build()
+        cm = compile_model(model, dynamic_axes={"N": None}, fuse=False, optimize=False)
+        rt = ReferenceRuntime(model)
+        for m in (1, 3, 5):
+            feeds = {"x": np.random.default_rng(m).normal(size=(m, 4, 8)).astype(np.float32)}
+            got, want = cm.run(feeds)[y], rt.run(feeds)[y]
+            assert got.shape == (4, m, 8)
+            np.testing.assert_array_equal(got, want)
+
+
 class TestBatchMixingRejection:
     """compile_model(batch="dynamic") must refuse graphs whose ops mix rows
     across the batch axis — zero-row padding would silently corrupt them."""
@@ -305,33 +498,65 @@ class TestBatchMixingRejection:
             np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
 
 
-class TestSymbolicBatchAnalysis:
+class TestSymbolicAxisAnalysis:
     def test_infer_shapes_binds_batch_through_the_graph(self):
-        """Leading-dim-symbolic inference: binding the input batch propagates
-        through Conv → Flatten → MatMulInteger to every value."""
+        """Leading-dim-symbolic inference: binding the implicit batch axis
+        propagates through Conv → Flatten → MatMulInteger to every value."""
         model, _ = MODELS["cnn"]()
         sym = analysis.infer_shapes(model.graph)
-        bound = analysis.infer_shapes(model.graph, batch=8)
+        bound = analysis.infer_shapes(model.graph, bindings={"N": 8})
         saw_symbolic = 0
         for name, shape in sym.items():
             if name in model.graph.initializers:
                 continue
-            if analysis.has_symbolic_batch(shape):
+            if shape is not None and len(shape) >= 1 and shape[0] is None:
                 saw_symbolic += 1
                 assert bound[name] == (8,) + tuple(shape[1:]), name
         assert saw_symbolic >= 3  # input, conv out, flatten out, head out…
 
-    def test_bind_batch_helpers(self):
-        assert analysis.bind_batch((None, 4), 8) == (8, 4)
-        assert analysis.bind_batch((None, 4), None) == (None, 4)
-        assert analysis.bind_batch((2, 4), 8) == (2, 4)
-        assert analysis.bind_batch(None, 8) is None
-        assert analysis.has_symbolic_batch((None, 3))
-        assert not analysis.has_symbolic_batch((2, 3))
-        assert not analysis.has_symbolic_batch(None)
+    def test_infer_shapes_propagates_named_axes(self):
+        """Named axes flow by name through the fused-FC op chain, so every
+        intermediate knows which dynamic axes it carries and where."""
+        model = _two_axis_model()[0]
+        shapes = analysis.infer_shapes(model.graph)
+        out = model.graph.outputs[0].name
+        assert shapes[out] == ("N", "S", 24)
+        bound = analysis.infer_shapes(model.graph, bindings={"S": 64, "N": 4})
+        assert bound[out] == (4, 64, 24)
 
-    def test_bind_qmatmul_batch_lead_handling(self):
-        from repro.kernels.ops import bind_qmatmul_batch
+    def test_bind_helpers(self):
+        # named substitution, partial binding, legacy leading-None batch
+        assert analysis.bind(("N", "S", 4), {"N": 8, "S": 16}) == (8, 16, 4)
+        assert analysis.bind(("N", "S", 4), {"S": 16}) == ("N", 16, 4)
+        assert analysis.bind((None, 4), {"N": 8}) == (8, 4)  # legacy batch
+        assert analysis.bind((None, 4), {"S": 8}) == (None, 4)
+        assert analysis.bind((2, 4), {"N": 8}) == (2, 4)
+        assert analysis.bind(None, {"N": 8}) is None
+        assert analysis.bind(("N", 4), None) == ("N", 4)
+        assert analysis.symbolic_axes(("N", "S", 4)) == ("N", "S")
+        assert analysis.symbolic_axes((None, 4)) == ()
+        assert analysis.symbolic_axes(None) == ()
+
+    def test_graph_axes_and_axis_inputs(self):
+        model = _two_axis_model()[0]
+        assert analysis.graph_axes(model.graph) == ("N", "S")
+        assert analysis.axis_inputs(model.graph, "N") == ["x"]
+        assert analysis.axis_inputs(model.graph, "S") == ["x"]
+        legacy, _ = MODELS["mlp"]()
+        assert analysis.graph_axes(legacy.graph) == ("N",)  # implicit batch
+        assert analysis.axis_inputs(legacy.graph, "N") == ["input_q"]
+        assert analysis.implicit_batch_graph(legacy.graph)
+        assert not analysis.implicit_batch_graph(model.graph)
+
+    def test_axis_positions(self):
+        assert analysis.axis_positions(("N", "S", 4), "S") == (1,)
+        assert analysis.axis_positions(("N", "S", 4), "K") == ()
+        assert analysis.axis_positions(None, "N") is None
+        assert analysis.axis_positions((None, 4), "N", implicit=True) == (0,)
+        assert analysis.axis_positions((2, 4), "N", implicit=True) == ()
+
+    def test_bind_qmatmul_axes_lead_handling(self):
+        from repro.kernels.ops import bind_qmatmul_axes, bind_qmatmul_batch
 
         base = {"k": 64, "n": 32, "kp": 128, "np": 128, "bk": 128, "bn": 128}
         b = bind_qmatmul_batch({**base, "lead": (None,)}, 8)
@@ -344,11 +569,43 @@ class TestSymbolicBatchAnalysis:
         # non-leading unknown dim: cannot know flat M either
         b = bind_qmatmul_batch({**base, "lead": (None, None)}, 8)
         assert b["m"] is None
+        # named lead dims: flat M is the product of the bindings
+        b = bind_qmatmul_axes({**base, "lead": ("N", "S")}, {"N": 4, "S": 16})
+        assert b["m"] == 64 and "lead" not in b
+        # partial binding keeps the record open (no m/bm) for the rest
+        b = bind_qmatmul_axes({**base, "lead": ("N", "S")}, {"S": 16}, partial=True)
+        assert b["lead"] == ("N", 16) and "m" not in b and "bm" not in b
+        # unbound named axis: M unknowable, default bm stands
+        b = bind_qmatmul_axes({**base, "lead": ("N", "S")}, {"N": 4})
+        assert b["m"] is None and b["bm"] == 128
 
     def test_batch_bucket(self):
         assert [batch_bucket(m) for m in (1, 2, 3, 4, 5, 8, 17, 32)] == [1, 2, 4, 4, 8, 8, 32, 32]
         with pytest.raises(ValueError):
             batch_bucket(0)
+
+    def test_bucket_rounding_at_exact_powers_of_two(self):
+        """An extent already on a bucket boundary must map to itself — no
+        off-by-one ballooning to the next bucket."""
+        for m in (1, 2, 4, 8, 32, 128, 1024):
+            assert batch_bucket(m) == m
+        for n in (32, 64, 96, 128):
+            assert bucket_multiple(n, 32) == n
+        assert bucket_multiple(33, 32) == 64
+        assert bucket_multiple(1, 32) == 32
+
+    def test_resolve_bucketing_specs(self):
+        assert resolve_bucketing(None)(5) == 8  # power-of-two default
+        assert resolve_bucketing(32)(40) == 64  # int granularity
+        assert resolve_bucketing(lambda n: n + 1)(5) == 6  # custom policy
+        with pytest.raises(ValueError):
+            resolve_bucketing(0)
+        with pytest.raises(TypeError):
+            resolve_bucketing("pow2")
+
+    def test_bindings_key_is_order_independent(self):
+        assert bindings_key({"S": 32, "N": 8}) == bindings_key({"N": 8, "S": 32})
+        assert bindings_key({"N": 8, "S": 32}) == (("N", 8), ("S", 32))
 
 
 class TestLruCache:
@@ -361,7 +618,10 @@ class TestLruCache:
         c.put("c", 3)  # evicts "b"
         assert "b" not in c and "a" in c and "c" in c
         assert c.get("b") is None
-        assert c.stats == {"size": 2, "capacity": 2, "hits": 1, "misses": 2, "evictions": 1}
+        assert c.stats == {
+            "size": 2, "capacity": 2, "hits": 1, "misses": 2, "evictions": 1,
+            "hit_rate": 1 / 3,
+        }
 
     def test_put_refreshes_existing_key(self):
         c = LruCache(2)

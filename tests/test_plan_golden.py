@@ -113,3 +113,40 @@ def test_specialized_plan_binds_bucket_in_rendering():
     assert "batch=8" in text.splitlines()[0]
     assert "m=8" in text and "bm=32" in text
     assert "lead=" not in text and "dynamic_batch" not in text
+
+
+def two_axis_mlp():
+    """The tests/test_batch_polymorphic.py two-axis model, byte-for-byte."""
+    from repro.core import patterns, pqir, quant
+
+    rng = np.random.default_rng(15)
+    p0 = quant.quantize_linear_layer(
+        rng.normal(size=(32, 48)).astype(np.float32) * 0.15,
+        rng.normal(size=(48,)).astype(np.float32) * 0.1, 0.05, 0.1,
+    )
+    p1 = quant.quantize_linear_layer(
+        rng.normal(size=(48, 24)).astype(np.float32) * 0.2,
+        rng.normal(size=(24,)).astype(np.float32) * 0.1, 0.1, 0.12,
+    )
+    gb = pqir.GraphBuilder("two_axis_mlp")
+    x = gb.add_input("x", "int8", ("N", "S", 32))
+    h = patterns.fc_layer(gb, x, p0, "fc0", two_mul=True, activation="Relu")
+    y = patterns.fc_layer(gb, h, p1, "fc1", two_mul=True)
+    gb.add_output(y, "int8", ("N", "S", 24))
+    return gb.build()
+
+
+def test_two_axis_template_plan_golden():
+    """The multi-axis template rendering: named axes in the header, named
+    lead dims in the axis-open shape records, names in the value typing."""
+    cm = compile_model(two_axis_mlp(), backend="interpret", dynamic_axes={"N": None, "S": 32})
+    assert cm.stats["fused_qlinear"] == 2 and cm.stats["generic"] == 0
+    _check_golden("two_axis_mlp.template.plan.txt", cm.plan.pretty() + "\n")
+
+
+def test_two_axis_specialization_renders_bindings():
+    cm = compile_model(two_axis_mlp(), backend="interpret", dynamic_axes={"N": None, "S": 32})
+    plan, _ = cm.specialized({"N": 4, "S": 32})
+    head = plan.pretty().splitlines()[0]
+    assert "batch=(N=4,S=32)" in head
+    assert "m=128" in plan.pretty()  # flat M = 4 × 32

@@ -158,6 +158,8 @@ class TestCompiledModelServer:
             CompiledServerConfig(max_batch=0)
         with pytest.raises(ValueError, match="latency_window"):
             CompiledServerConfig(latency_window=0)
+        with pytest.raises(ValueError, match="max_wait_ms"):
+            CompiledServerConfig(max_wait_ms=-1.0)
 
     def test_latency_window_is_bounded(self):
         model, rng = _artifact()
@@ -190,3 +192,169 @@ class TestCompiledModelServer:
         for r in reqs:
             assert r.outputs[y].shape == (4,)
             np.testing.assert_array_equal(r.outputs[z], np.arange(5, dtype=np.float32) + 1.0)
+
+
+def _seq_artifact():
+    """A ('N', 'S', 16) two-axis artifact: requests are variable-length
+    sequences the server coalesces onto a (batch × seq) bucket grid."""
+    from repro.core import patterns, pqir, quant
+
+    rng = np.random.default_rng(31)
+    p = quant.quantize_linear_layer(
+        rng.normal(size=(16, 8)).astype(np.float32) * 0.2,
+        rng.normal(size=(8,)).astype(np.float32) * 0.1, 0.05, 0.1,
+    )
+    gb = pqir.GraphBuilder("served_seq")
+    x = gb.add_input("x", "int8", ("N", "S", 16))
+    y = patterns.fc_layer(gb, x, p, "fc0", two_mul=True, activation="Relu")
+    gb.add_output(y, "int8", ("N", "S", 8))
+    return gb.build(), rng
+
+
+class TestSequenceGridServer:
+    def test_variable_length_requests_bit_exact_per_request(self):
+        """Ragged sequence lengths coalesce onto one (batch-bucket ×
+        seq-bucket) cell per step; every request gets back exactly its own
+        rows and true sequence length, bit-identical to a solo run."""
+        model, rng = _seq_artifact()
+        rt = ReferenceRuntime(model)
+        cm = compile_model(model, backend="ref", dynamic_axes={"N": None, "S": 8})
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=8))
+        assert srv.seq_axis == "S"
+        lens = [3, 8, 1, 13, 5, 8, 21, 2, 9, 4, 7]
+        reqs = [
+            srv.submit(rng.integers(-128, 128, (s, 16)).astype(np.int8)) for s in lens
+        ]
+        srv.run_until_drained()
+        out_name = cm.output_names[0]
+        for r, s in zip(reqs, lens):
+            assert r.done and r.outputs[out_name].shape == (s, 8)
+            solo = rt.run({"x": r.x[None, :, :]})[out_name][0]
+            np.testing.assert_array_equal(r.outputs[out_name], solo, err_msg=f"req {r.uid}")
+
+    def test_grid_metrics_and_one_specialization_per_cell(self):
+        model, rng = _seq_artifact()
+        cm = compile_model(model, backend="ref", dynamic_axes={"N": None, "S": 8})
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=4))
+        for s in (3, 5, 7, 8):  # one step: batch 4 → bucket 4, max seq 8 → bucket 8
+            srv.submit(rng.integers(-128, 128, (s, 16)).astype(np.int8))
+        srv.step()
+        for s in (10, 12):  # second step: batch 2 → bucket 2, seq bucket 16
+            srv.submit(rng.integers(-128, 128, (s, 16)).astype(np.int8))
+        srv.step()
+        m = srv.metrics
+        assert m["grid_batches"] == {(4, 8): 1, (2, 16): 1}
+        assert m["bucket_batches"] == {4: 1, 2: 1}
+        # first step: seq pads (8-3)+(8-5)+(8-7)+(8-8); second: (16-10)+(16-12)
+        assert m["padded_tokens"] == (5 + 3 + 1 + 0) + (6 + 4)
+        assert cm.cache_stats["misses"] == 2  # one specialization per grid cell
+        # revisiting both cells adds no specialization
+        for s in (3, 5, 7, 8):
+            srv.submit(rng.integers(-128, 128, (s, 16)).astype(np.int8))
+        srv.step()
+        assert cm.cache_stats["misses"] == 2
+
+    def test_named_but_static_axis_rejected_at_construction(self):
+        """A named symbolic dim the compile left static can be neither
+        validated nor bucketed by the server — ragged extents along it would
+        blow up a coalesced batch — so construction must refuse it."""
+        model, _ = _seq_artifact()
+        cm = compile_model(model, backend="ref", dynamic_axes={"N": None})  # S static
+        with pytest.raises(ValueError, match="static"):
+            CompiledModelServer(cm)
+
+    def test_batch_assembly_failure_requeues(self):
+        """Even if mismatched examples reach a step (e.g. via an unknown
+        None dim), assembly failure re-queues instead of losing requests."""
+        model, rng = _seq_artifact()
+        cm = compile_model(model, backend="ref", dynamic_axes={"N": None, "S": 8})
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=4))
+        a = srv.submit(rng.integers(-128, 128, (3, 16)).astype(np.int8))
+        b = srv.submit(rng.integers(-128, 128, (5, 16)).astype(np.int8))
+        srv._seq_pos = None  # simulate a server that can't right-pad
+        with pytest.raises(ValueError):
+            srv.step()  # np.stack of ragged examples
+        assert [r.uid for r in srv.queue] == [a.uid, b.uid]  # nothing lost
+
+    def test_variable_seq_validated_at_submit(self):
+        model, rng = _seq_artifact()
+        cm = compile_model(model, backend="ref", dynamic_axes={"N": None, "S": 8})
+        srv = CompiledModelServer(cm)
+        with pytest.raises(ValueError, match="shape"):
+            srv.submit(rng.integers(-128, 128, (5, 32)).astype(np.int8))  # wrong width
+        with pytest.raises(ValueError, match="shape"):
+            srv.submit(rng.integers(-128, 128, (0, 16)).astype(np.int8))  # empty seq
+        srv.submit(rng.integers(-128, 128, (5, 16)).astype(np.int8))  # seq len is free
+        assert srv.metrics["requests"] == 1
+
+
+class TestDeadlineAwareCoalescing:
+    def test_partial_batch_held_until_window_expires(self):
+        """With max_wait_ms set, a partial batch is deferred while young and
+        launched (a window hit) once the oldest request ages out."""
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(
+            cm, CompiledServerConfig(max_batch=8, max_wait_ms=30.0)
+        )
+        srv.submit(_examples(rng, 1)[0])
+        assert srv.step() == []  # young partial batch: held open
+        assert srv.metrics["batches"] == 0 and len(srv.queue) == 1
+        import time as _time
+
+        _time.sleep(0.04)  # let the oldest request age past the window
+        done = srv.step()
+        assert len(done) == 1 and srv.metrics["window_hits"] == 1
+        assert srv.summary()["window_hits"] == 1
+
+    def test_full_batch_launches_without_window_hit(self):
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(
+            cm, CompiledServerConfig(max_batch=4, max_wait_ms=10_000.0)
+        )
+        for x in _examples(rng, 4):
+            srv.submit(x)
+        done = srv.step()  # max_batch reached: no reason to wait
+        assert len(done) == 4
+        assert srv.metrics["window_hits"] == 0
+
+    def test_run_until_drained_waits_out_the_window(self):
+        """Draining with an admission window must terminate: the drain loop
+        sleeps out the remainder instead of spinning forever."""
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(
+            cm, CompiledServerConfig(max_batch=8, max_wait_ms=20.0)
+        )
+        reqs = [srv.submit(x) for x in _examples(rng, 3)]
+        done = srv.run_until_drained()
+        assert len(done) == 3 and all(r.done for r in reqs)
+        assert srv.metrics["window_hits"] == 1
+
+    def test_greedy_default_unchanged(self):
+        """max_wait_ms=None keeps the PR 4 behavior: any queued requests
+        launch immediately, and window hits stay at zero."""
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=8))
+        srv.submit(_examples(rng, 1)[0])
+        assert len(srv.step()) == 1
+        assert srv.metrics["window_hits"] == 0
+
+
+class TestUniformCacheMetrics:
+    def test_plan_cache_hit_rate_is_the_lru_rate(self):
+        """summary()['plan_cache_hit_rate'] is LruCache's own hit_rate — one
+        accounting site for every cache in the system."""
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=8))
+        for _ in range(4):
+            for x in _examples(rng, 8):
+                srv.submit(x)
+            srv.run_until_drained()
+        s = srv.summary()
+        assert s["plan_cache"]["hit_rate"] == pytest.approx(0.75)
+        assert s["plan_cache_hit_rate"] == s["plan_cache"]["hit_rate"]
+        assert cm.cache_stats["hit_rate"] == pytest.approx(0.75)

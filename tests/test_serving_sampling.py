@@ -135,6 +135,10 @@ class TestPrefillCacheBounded:
         assert eng._prefill_fn(32) is f32
         assert eng.metrics["prefill_cache_size"] == 1
         assert eng.metrics["prefill_cache_evictions"] == 0
+        # uniform hit accounting: the engine surfaces LruCache's own
+        # hits/hit_rate, same numbers CompiledModel.cache_stats reports
+        assert eng.metrics["prefill_cache_hits"] == 1
+        assert eng.metrics["prefill_cache_hit_rate"] == eng._prefill_cache.hit_rate == 0.5
 
     def test_lru_eviction_and_metrics(self):
         eng = self._engine(capacity=2)
