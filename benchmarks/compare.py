@@ -1,0 +1,121 @@
+"""Benchmark diff guard: compare a fresh ``benchmarks/run.py --json`` dump
+against the latest committed ``BENCH_*.json`` baseline.
+
+The committed ``BENCH_<n>.json`` files are the repo's perf trajectory; this
+tool makes the trajectory actionable by diffing per-row ``us_per_call``
+within a configurable tolerance:
+
+  PYTHONPATH=src python -m benchmarks.compare current.json
+  PYTHONPATH=src python -m benchmarks.compare current.json --baseline BENCH_5.json
+  PYTHONPATH=src python -m benchmarks.compare current.json --tolerance 0.5 --strict
+
+* **Baseline discovery** — ``--baseline`` names one explicitly; otherwise
+  the highest-numbered ``BENCH_<n>.json`` next to this file is used.
+* **Tolerance** — a row regresses when ``current > baseline * (1 + tol)``
+  (default ``--tolerance 0.35``: micro-benchmarks on shared CI runners are
+  noisy; the guard is for step changes, not percent drift).  Improvements
+  beyond the same factor are reported too (they move the trajectory and
+  deserve a fresh committed baseline).
+* **Warn-only by default** — exit code is 0 unless ``--strict`` is passed;
+  CI runs warn-only so a noisy runner cannot block a merge, while local
+  perf work can use ``--strict`` as a gate.
+* Rows present on only one side (new/retired benchmarks) are listed but are
+  never failures: the benchmark set is expected to grow PR over PR.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Optional, Tuple
+
+_BENCH_RE = re.compile(r"^BENCH_(\d+)\.json$")
+
+
+def find_baseline(search_dir: Path) -> Optional[Path]:
+    """The highest-numbered committed BENCH_<n>.json, or None."""
+    best: Optional[Tuple[int, Path]] = None
+    for p in search_dir.glob("BENCH_*.json"):
+        m = _BENCH_RE.match(p.name)
+        if m is not None:
+            key = (int(m.group(1)), p)
+            if best is None or key[0] > best[0]:
+                best = key
+    return best[1] if best is not None else None
+
+
+def load_rows(path: Path) -> Dict[str, dict]:
+    payload = json.loads(path.read_text())
+    if payload.get("schema") != "repro-bench-v1":
+        raise SystemExit(f"{path}: not a repro-bench-v1 payload")
+    return {r["name"]: r for r in payload["rows"]}
+
+
+def compare(
+    current: Dict[str, dict], baseline: Dict[str, dict], tolerance: float
+) -> Tuple[list, list, list, list]:
+    """(regressions, improvements, added, removed) row-name lists; a
+    regression/improvement entry is (name, base_us, cur_us, ratio)."""
+    regressions, improvements = [], []
+    for name in sorted(set(current) & set(baseline)):
+        base, cur = baseline[name]["us_per_call"], current[name]["us_per_call"]
+        if base <= 0:
+            continue
+        ratio = cur / base
+        if ratio > 1.0 + tolerance:
+            regressions.append((name, base, cur, ratio))
+        elif ratio < 1.0 / (1.0 + tolerance):
+            improvements.append((name, base, cur, ratio))
+    added = sorted(set(current) - set(baseline))
+    removed = sorted(set(baseline) - set(current))
+    return regressions, improvements, added, removed
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", type=Path, help="fresh benchmarks/run.py --json dump")
+    ap.add_argument(
+        "--baseline", type=Path, default=None,
+        help="baseline payload (default: highest-numbered BENCH_<n>.json "
+        "next to this script)",
+    )
+    ap.add_argument(
+        "--tolerance", type=float, default=0.35,
+        help="allowed relative slowdown before a row is a regression "
+        "(0.35 = 35%%; micro-bench noise on shared runners is real)",
+    )
+    ap.add_argument(
+        "--strict", action="store_true",
+        help="exit 1 on regressions (default: warn-only, always exit 0)",
+    )
+    args = ap.parse_args(argv)
+
+    baseline_path = args.baseline or find_baseline(Path(__file__).resolve().parent)
+    if baseline_path is None:
+        print("bench-compare: no committed BENCH_*.json baseline found; nothing to diff")
+        return 0
+    current = load_rows(args.current)
+    baseline = load_rows(baseline_path)
+    regressions, improvements, added, removed = compare(current, baseline, args.tolerance)
+
+    print(f"bench-compare: {args.current} vs {baseline_path} (tolerance {args.tolerance:.0%})")
+    for name, base, cur, ratio in regressions:
+        print(f"  REGRESSION {name}: {base:.1f}us -> {cur:.1f}us ({ratio:.2f}x)")
+    for name, base, cur, ratio in improvements:
+        print(f"  improvement {name}: {base:.1f}us -> {cur:.1f}us ({ratio:.2f}x)")
+    for name in added:
+        print(f"  new row {name} (no baseline)")
+    for name in removed:
+        print(f"  missing row {name} (present in baseline; smoke subset?)")
+    if not (regressions or improvements):
+        print(f"  all {len(set(current) & set(baseline))} shared rows within tolerance")
+
+    if regressions and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

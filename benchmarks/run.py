@@ -313,9 +313,15 @@ def bench_serving_compiled():
     from repro.core.compile import compile_model
     from repro.serving import CompiledModelServer, CompiledServerConfig
 
+    from repro.obs.metrics import default_registry
+
     model, _ = _mlp_artifact(layers=2, width=128)
     cm = compile_model(model, backend="interpret", batch="dynamic")
-    srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=32))
+    # publish serve.* / cache.plan.* into the process registry so a
+    # --metrics run snapshots real serving traffic
+    srv = CompiledModelServer(
+        cm, CompiledServerConfig(max_batch=32), registry=default_registry()
+    )
     rng = np.random.default_rng(9)
     xs = rng.integers(-128, 128, (32, 128)).astype(np.int8)
 
@@ -441,7 +447,24 @@ def main(argv=None) -> None:
         help="also write the rows as JSON (e.g. BENCH_42.json) so the perf "
         "trajectory persists across PRs; CI uploads it as an artifact",
     )
+    ap.add_argument(
+        "--trace", metavar="PATH",
+        help="install a repro.obs tracer for the whole run and dump the "
+        "Chrome-trace JSON (load it at chrome://tracing or ui.perfetto.dev): "
+        "compile/pass spans, per-cell specializations, serving steps",
+    )
+    ap.add_argument(
+        "--metrics", metavar="PATH",
+        help="dump the process MetricsRegistry snapshot (serve.*, engine.*, "
+        "cache.*) as JSON after the run",
+    )
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace:
+        from repro.obs import trace as _trace
+
+        tracer = _trace.install()
 
     print("name,us_per_call,derived")
     bench_pattern("fig1_fc_two_mul", activation=None, two_mul=True)
@@ -460,6 +483,20 @@ def main(argv=None) -> None:
     if not args.smoke:
         bench_w8a8_decode()
         bench_grad_compress()
+
+    if tracer is not None:
+        from repro.obs import trace as _trace
+
+        _trace.uninstall()
+        tracer.dump(args.trace)
+        print(f"# wrote {len(tracer.records)} trace events to {args.trace} (trace_id={tracer.trace_id})")
+    if args.metrics:
+        from repro.obs.metrics import default_registry
+
+        with open(args.metrics, "w") as f:
+            json.dump(default_registry().snapshot(), f, indent=2)
+            f.write("\n")
+        print(f"# wrote metrics snapshot to {args.metrics}")
 
     if args.json:
         payload = {

@@ -22,8 +22,17 @@ request shape?
    (batch-bucket × seq-bucket) grid, with a ``max_wait_ms`` admission
    window trading batch occupancy against tail latency.
 
-Run:  PYTHONPATH=src python examples/serve_compiled.py
+Run:  PYTHONPATH=src python examples/serve_compiled.py [--trace out.json]
+
+``--trace`` installs a repro.obs tracer for the whole run and dumps the
+Chrome-trace JSON (open it at chrome://tracing or ui.perfetto.dev): the
+compile pass pipeline, one specialization span per visited bucket, and
+every serving step with its per-request async spans.  It also prints the
+plan's provenance section (``pretty(verbose=True)``) — the audit trail
+from graph ops to fused kernels to scenario cells.
 """
+import argparse
+
 import numpy as np
 
 from repro.core import patterns, pqir, quant
@@ -33,7 +42,20 @@ from repro.core.toolchain import MLPSpec, quantize_mlp
 from repro.serving import CompiledModelServer, CompiledServerConfig
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--trace", metavar="PATH",
+        help="dump a Chrome-trace JSON of the whole run (compile, "
+        "specializations, serving steps, per-request spans)",
+    )
+    args = ap.parse_args(argv)
+    tracer = None
+    if args.trace:
+        from repro.obs import trace as obs_trace
+
+        tracer = obs_trace.install()
+
     rng = np.random.default_rng(0)
 
     # -- 1. the artifact (same recipe as the quickstart) ----------------------
@@ -135,6 +157,16 @@ def main():
     print(f"padded rows: {s2['padded_rows']}  padded tokens: {s2['padded_tokens']}  "
           f"window hits: {s2['window_hits']}")
     print(f"plan cache: {s2['plan_cache']}")
+
+    if tracer is not None:
+        from repro.obs import trace as obs_trace
+
+        obs_trace.uninstall()
+        tracer.dump(args.trace)
+        print(f"\nwrote {len(tracer.records)} trace events to {args.trace} "
+              f"(trace_id={tracer.trace_id}) — load at chrome://tracing")
+        print("\nplan provenance (how the first artifact came to be):")
+        print(cm.plan.pretty(verbose=True))
 
 
 if __name__ == "__main__":

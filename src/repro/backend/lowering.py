@@ -28,6 +28,8 @@ from typing import Any, Dict, List, Optional, Tuple, Union
 
 from ..core.pqir import Graph
 from ..kernels import ops as kops
+from ..obs import trace as _trace
+from ..obs.provenance import PlanProvenance
 from ..passes.analysis import BATCH_AXIS, GraphAnalysis, bind
 from .plan import CONST, NONE, SLOT, Arg, ExecutionPlan, PlanStep, ValueInfo
 
@@ -67,6 +69,7 @@ def build_plan(
     backend: str,
     batch: Union[str, int] = "static",
     axes: Tuple[str, ...] = (),
+    provenance: Optional[PlanProvenance] = None,
 ) -> ExecutionPlan:
     """Assign liveness-planned buffer slots and produce the ExecutionPlan.
 
@@ -160,6 +163,7 @@ def build_plan(
         outputs=outputs,
         batch=batch,
         axes=axes if batch == "dynamic" else (),
+        provenance=provenance,
     )
 
 
@@ -204,27 +208,42 @@ def specialize_plan(
             f"{list(template.axes)}"
         )
     remaining = tuple(a for a in template.axes if a not in bindings)
-    steps = []
-    for step in template.steps:
-        params = step.params
-        if params.get("dynamic_batch"):
-            if remaining:
-                params = dict(params)
-                params["shape"] = kops.bind_qmatmul_axes(
-                    step.params["shape"], bindings, partial=True
-                )
-            else:
-                params = {k: v for k, v in params.items() if k != "dynamic_batch"}
-                params["shape"] = kops.bind_qmatmul_axes(step.params["shape"], bindings)
-        out_info = tuple(
-            ValueInfo(info.dtype, bind(info.shape, bindings)) if info is not None else info
-            for info in step.out_info
-        )
-        steps.append(dataclasses.replace(step, params=params, out_info=out_info))
-    if remaining:
-        return dataclasses.replace(template, steps=steps, batch="dynamic", axes=remaining)
-    if template.axes == (BATCH_AXIS,):
-        bound: Union[int, Tuple[Tuple[str, int], ...]] = bindings[BATCH_AXIS]
-    else:
-        bound = tuple(sorted(bindings.items()))
-    return dataclasses.replace(template, steps=steps, batch=bound, axes=())
+    with _trace.span(
+        "backend.specialize",
+        bindings=",".join(f"{a}={v}" for a, v in sorted(bindings.items())),
+        partial=bool(remaining),
+    ) as sp:
+        steps = []
+        tiles: Dict[str, str] = {}
+        for step in template.steps:
+            params = step.params
+            if params.get("dynamic_batch"):
+                if remaining:
+                    params = dict(params)
+                    params["shape"] = kops.bind_qmatmul_axes(
+                        step.params["shape"], bindings, partial=True
+                    )
+                else:
+                    params = {k: v for k, v in params.items() if k != "dynamic_batch"}
+                    shape = kops.bind_qmatmul_axes(step.params["shape"], bindings)
+                    params["shape"] = shape
+                    tiles[step.name or step.kernel] = ",".join(
+                        f"{k}={shape[k]}" for k in ("m", "bm", "bk", "bn") if k in shape
+                    )
+            out_info = tuple(
+                ValueInfo(info.dtype, bind(info.shape, bindings)) if info is not None else info
+                for info in step.out_info
+            )
+            steps.append(dataclasses.replace(step, params=params, out_info=out_info))
+        if remaining:
+            return dataclasses.replace(template, steps=steps, batch="dynamic", axes=remaining)
+        sp.set(**tiles)
+        # a full bind is one visited scenario cell: record it on the shared
+        # provenance so template *and* specializations show the history
+        if template.provenance is not None:
+            template.provenance.add_specialization(bindings, tiles)
+        if template.axes == (BATCH_AXIS,):
+            bound: Union[int, Tuple[Tuple[str, int], ...]] = bindings[BATCH_AXIS]
+        else:
+            bound = tuple(sorted(bindings.items()))
+        return dataclasses.replace(template, steps=steps, batch=bound, axes=())

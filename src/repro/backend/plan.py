@@ -62,6 +62,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from ..core.cache import LruCache
+from ..obs.provenance import PlanProvenance
 
 #: Arg kinds.
 SLOT, CONST, NONE = "slot", "const", "none"
@@ -179,6 +180,11 @@ class ExecutionPlan:
                multi-axis specialization) — see the module docstring
     axes       named dynamic axes a "dynamic" template is still open over
                (() on static and fully-bound plans)
+    provenance how this plan came to be (pass stats, fusion matches,
+               specialization events, compile-time trace id) — shared by
+               reference between a template and all of its specializations,
+               so the record read from any of them shows the full history;
+               rendered by ``pretty(verbose=True)``
     """
 
     backend: str
@@ -188,6 +194,7 @@ class ExecutionPlan:
     outputs: Tuple[Tuple[str, int], ...]
     batch: Union[str, int, Tuple[Tuple[str, int], ...]] = "static"
     axes: Tuple[str, ...] = ()
+    provenance: Optional[PlanProvenance] = None
 
     # -- execution -----------------------------------------------------------
     def execute(self, feeds: Dict[str, Any]) -> Dict[str, Any]:
@@ -255,8 +262,11 @@ class ExecutionPlan:
             return "dynamic, axes=[" + ",".join(self.axes) + "]"
         return str(self.batch)
 
-    def pretty(self) -> str:
-        """Human-readable lowering — the artifact a hardware designer reads."""
+    def pretty(self, verbose: bool = False) -> str:
+        """Human-readable lowering — the artifact a hardware designer reads.
+        ``verbose=True`` appends the provenance section (pass stats, fusion
+        matches, specialization history) so the artifact explains not just
+        *what* executes but *how it came to be*."""
         batch = "" if self.batch == "static" else f", batch={self._batch_str()}"
         head = (
             f"ExecutionPlan(backend={self.backend}, steps={len(self.steps)}, "
@@ -265,6 +275,8 @@ class ExecutionPlan:
         ins = "  inputs:  " + ", ".join(f"{n} -> %{s}" for n, s in self.inputs)
         outs = "  outputs: " + ", ".join(f"%{s} -> {n}" for n, s in self.outputs)
         body = [f"  {i:3d}: {s.describe()}" for i, s in enumerate(self.steps)]
+        if verbose and self.provenance is not None:
+            body.append(self.provenance.render(indent="  "))
         return "\n".join([head, ins, outs] + body)
 
     def __str__(self) -> str:

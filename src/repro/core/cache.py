@@ -14,6 +14,9 @@ from __future__ import annotations
 from collections import OrderedDict
 from typing import Any, Dict, Hashable, Optional
 
+from ..obs import trace as _trace
+from ..obs.metrics import MetricsRegistry
+
 
 class LruCache:
     """Bounded mapping with least-recently-used eviction.
@@ -21,12 +24,20 @@ class LruCache:
     ``get`` refreshes recency and counts a hit/miss; ``put`` inserts (or
     refreshes) and evicts the oldest entries beyond ``capacity``.  ``in`` /
     ``len`` are pure reads — they never touch recency or the counters.
+
+    ``scope`` names the cache on the observability plane (``"plan"``,
+    ``"prefill"``, ...): a scoped cache emits ``cache.<scope>.hit`` /
+    ``.miss`` / ``.evict`` instant events when a tracer is installed, and
+    :meth:`attach_metrics` registers the canonical ``cache.<scope>.<field>``
+    gauges in a :class:`~repro.obs.metrics.MetricsRegistry`.  Unscoped
+    caches never touch the obs plane.
     """
 
-    def __init__(self, capacity: int = 8) -> None:
+    def __init__(self, capacity: int = 8, *, scope: Optional[str] = None) -> None:
         if capacity < 1:
             raise ValueError(f"LruCache capacity must be >= 1, got {capacity}")
         self.capacity = capacity
+        self.scope = scope
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -35,9 +46,13 @@ class LruCache:
     def get(self, key: Hashable, default: Any = None) -> Any:
         if key in self._entries:
             self.hits += 1
+            if _trace.enabled and self.scope:
+                _trace.event(f"cache.{self.scope}.hit", key=str(key))
             self._entries.move_to_end(key)
             return self._entries[key]
         self.misses += 1
+        if _trace.enabled and self.scope:
+            _trace.event(f"cache.{self.scope}.miss", key=str(key))
         return default
 
     def put(self, key: Hashable, value: Any) -> None:
@@ -45,8 +60,19 @@ class LruCache:
             self._entries.move_to_end(key)
         self._entries[key] = value
         while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+            evicted, _ = self._entries.popitem(last=False)
             self.evictions += 1
+            if _trace.enabled and self.scope:
+                _trace.event(f"cache.{self.scope}.evict", key=str(evicted))
+
+    def attach_metrics(self, registry: MetricsRegistry, scope: Optional[str] = None) -> None:
+        """Publish this cache's stats into ``registry`` under the canonical
+        ``cache.<scope>.<field>`` keys (live callback gauges — snapshots
+        always read the current counters, never a stale copy)."""
+        scope = scope or self.scope
+        if not scope:
+            raise ValueError("attach_metrics needs a cache scope name")
+        registry.attach_cache(scope, self)
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -87,6 +87,9 @@ from ..backend.generic import _JOPS  # noqa: F401  (re-export; conformance sweep
 from ..backend.plan import ExecutionPlan, PlanCache, bindings_key, resolve_bucketing
 from ..kernels import ops as kops
 from ..kernels.qact_lut import build_lut
+from ..obs import trace as _trace
+from ..obs.metrics import MetricsRegistry
+from ..obs.provenance import PlanProvenance
 from ..passes import PassManager, PipelineReport
 from ..passes.analysis import (
     BATCH_AXIS,
@@ -419,6 +422,17 @@ class Compiler:
             self.pass_report = PipelineReport(
                 nodes_before=len(model.graph.nodes), nodes_after=len(model.graph.nodes)
             )
+        # provenance: the how-this-plan-came-to-be record the plan will carry
+        tracer = _trace.current()
+        self.provenance = PlanProvenance(
+            nodes_before=self.pass_report.nodes_before,
+            nodes_after=self.pass_report.nodes_after,
+            pass_iterations=self.pass_report.iterations,
+            trace_id=tracer.trace_id if tracer is not None else None,
+        )
+        for e in self.pass_report.entries:
+            if e.changed:
+                self.provenance.add_pass(e.iteration, e.name, e.counters)
         self.model = model
         self.graph = model.graph
         self.backend = backend
@@ -463,18 +477,26 @@ class Compiler:
         order = self.graph.toposorted()
         consumed = set()
         drafts: List[StepDraft] = []
-        for node in order:
-            if id(node) in consumed:
-                continue
-            draft = self._fused_draft(node, consumed) if self.fuse else None
-            if draft is None:
-                draft = self._generic_draft(node)
-            drafts.append(draft)
-            self.stats[draft.kind] += 1
-        plan = build_plan(
-            self.graph, self.analysis, drafts, self.backend,
-            batch=self.batch, axes=tuple(self.dynamic_axes),
-        )
+        with _trace.span("compile.fuse", nodes=len(order)) as fuse_span:
+            for node in order:
+                if id(node) in consumed:
+                    continue
+                draft = self._fused_draft(node, consumed) if self.fuse else None
+                if draft is None:
+                    draft = self._generic_draft(node)
+                drafts.append(draft)
+                self.stats[draft.kind] += 1
+            fuse_span.set(
+                fused=len(self.provenance.fusions),
+                generic=self.stats["generic"],
+            )
+        with _trace.span("compile.lower", steps=len(drafts)) as lower_span:
+            plan = build_plan(
+                self.graph, self.analysis, drafts, self.backend,
+                batch=self.batch, axes=tuple(self.dynamic_axes),
+                provenance=self.provenance,
+            )
+            lower_span.set(slots=plan.num_slots)
         self.stats["plan_slots"] = plan.num_slots
         return CompiledModel(
             self.model, plan, self.stats, self.pass_report,
@@ -493,6 +515,10 @@ class Compiler:
             if draft is None:
                 continue
             consumed.update(id(n) for n in m.nodes)
+            self.provenance.add_fusion(
+                pattern.name, m.anchor.name,
+                tuple(n.name for n in m.nodes), m.out_tensor,
+            )
             return draft
         return None
 
@@ -549,7 +575,7 @@ class CompiledModel:
         self.input_names = [t.name for t in model.graph.inputs]
         self.output_names = [t.name for t in model.graph.outputs]
         if plan.batch == "dynamic":
-            self.plan_cache: Optional[PlanCache] = PlanCache(plan_cache_capacity)
+            self.plan_cache: Optional[PlanCache] = PlanCache(plan_cache_capacity, scope="plan")
             self.dynamic_axes: Dict[str, object] = {
                 a: resolve_bucketing(None) for a in plan.axes
             }
@@ -618,8 +644,9 @@ class CompiledModel:
     def run(self, feeds: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
         if self.is_dynamic:
             return self._run_dynamic(feeds)
-        res = self._jitted({k: jnp.asarray(v) for k, v in feeds.items()})
-        return {k: np.asarray(v) for k, v in res.items()}
+        with _trace.span("run.execute"):
+            res = self._jitted({k: jnp.asarray(v) for k, v in feeds.items()})
+            return {k: np.asarray(v) for k, v in res.items()}
 
     def __call__(self, **feeds) -> Dict[str, np.ndarray]:
         return self.run(feeds)
@@ -666,10 +693,19 @@ class CompiledModel:
     @property
     def cache_stats(self) -> Dict[str, int]:
         """Plan-cache counters (size/capacity/hits/misses/evictions/
-        hit_rate); misses double as the number of specializations."""
+        hit_rate); misses double as the number of specializations.  These
+        legacy flat keys stay for one release — the canonical scheme is
+        ``cache.plan.<field>`` in a :class:`~repro.obs.metrics.
+        MetricsRegistry` (see :meth:`attach_metrics`)."""
         if self.plan_cache is None:
             return {}
         return self.plan_cache.stats
+
+    def attach_metrics(self, registry: MetricsRegistry) -> None:
+        """Publish this artifact's plan-cache stats into ``registry`` under
+        the canonical ``cache.plan.*`` keys (live callback gauges)."""
+        if self.plan_cache is not None:
+            self.plan_cache.attach_metrics(registry)
 
     def _run_dynamic(self, feeds: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
         extents: Dict[str, int] = {}
@@ -687,32 +723,37 @@ class CompiledModel:
             extents[axis] = vals.pop()
         bindings = {axis: self.bucket_for(axis, ext) for axis, ext in extents.items()}
         _, fn = self.specialized(bindings)
-        padded: Dict[str, jax.Array] = {}
-        for name, v in feeds.items():
-            v = np.asarray(v)
-            widths = [(0, 0)] * v.ndim
-            grow = False
-            for axis, by_input in self.axis_input_pos.items():
-                pos = by_input.get(name)
-                if pos is not None and v.shape[pos] != bindings[axis]:
-                    # zero slabs are exact: dynamic compilation proved every
-                    # op elementwise along the axis, and the padding is
-                    # sliced away below
-                    widths[pos] = (0, bindings[axis] - v.shape[pos])
-                    grow = True
-            padded[name] = jnp.asarray(np.pad(v, widths) if grow else v)
-        res = fn(padded)
-        out: Dict[str, np.ndarray] = {}
-        for k, v in res.items():
-            v = np.asarray(v)
-            by_axis = self.output_axis_pos.get(k)
-            if by_axis:
-                slicer = [slice(None)] * v.ndim
-                for axis, pos in by_axis.items():
-                    slicer[pos] = slice(0, extents[axis])
-                v = v[tuple(slicer)]
-            out[k] = v
-        return out
+        with _trace.span("run.pad"):
+            padded: Dict[str, jax.Array] = {}
+            for name, v in feeds.items():
+                v = np.asarray(v)
+                widths = [(0, 0)] * v.ndim
+                grow = False
+                for axis, by_input in self.axis_input_pos.items():
+                    pos = by_input.get(name)
+                    if pos is not None and v.shape[pos] != bindings[axis]:
+                        # zero slabs are exact: dynamic compilation proved every
+                        # op elementwise along the axis, and the padding is
+                        # sliced away below
+                        widths[pos] = (0, bindings[axis] - v.shape[pos])
+                        grow = True
+                padded[name] = jnp.asarray(np.pad(v, widths) if grow else v)
+        with _trace.span("run.execute") as ex_span:
+            if _trace.enabled:
+                ex_span.set(**{f"bucket_{a}": b for a, b in sorted(bindings.items())})
+            res = fn(padded)
+        with _trace.span("run.slice"):
+            out: Dict[str, np.ndarray] = {}
+            for k, v in res.items():
+                v = np.asarray(v)
+                by_axis = self.output_axis_pos.get(k)
+                if by_axis:
+                    slicer = [slice(None)] * v.ndim
+                    for axis, pos in by_axis.items():
+                        slicer[pos] = slice(0, extents[axis])
+                    v = v[tuple(slicer)]
+                out[k] = v
+            return out
 
 
 def compile_model(
@@ -754,8 +795,12 @@ def compile_model(
                    bound on resident per-bucket specializations (dynamic
                    mode; LRU-evicted beyond this).
     """
-    return Compiler(
-        model, backend=backend, fuse=fuse, optimize=optimize,
-        verify_passes=verify_passes, batch=batch, dynamic_axes=dynamic_axes,
-        plan_cache_capacity=plan_cache_capacity,
-    ).compile()
+    with _trace.span(
+        "compile", graph=model.graph.name, backend=backend,
+        batch="dynamic" if (dynamic_axes or batch == "dynamic") else batch,
+    ):
+        return Compiler(
+            model, backend=backend, fuse=fuse, optimize=optimize,
+            verify_passes=verify_passes, batch=batch, dynamic_axes=dynamic_axes,
+            plan_cache_capacity=plan_cache_capacity,
+        ).compile()

@@ -18,6 +18,7 @@ import numpy as np
 
 from ..core.pqir import DTYPES, Graph, Model
 from ..core.runtime import ReferenceRuntime
+from ..obs import trace as _trace
 from .analysis import clone_model
 from .canonicalize import AddFold, ConstantFold, DeadCode, IdentityElim, MulFold, Pass, QdqCancel
 from .sink import SinkShapes
@@ -144,24 +145,33 @@ class PassManager:
         report = PipelineReport(nodes_before=len(opt.graph.nodes))
         baseline: Optional[Dict[str, np.ndarray]] = None
         feeds: Dict[str, np.ndarray] = {}
-        if self.verify:
-            feeds = make_probe_feeds(model.graph, batch=self.probe_batch, seed=self.probe_seed)
-            baseline = ReferenceRuntime(model, validate=False).run(feeds)
-        for it in range(self.max_iterations):
-            sweep_changed = False
-            for p in self.passes:
-                counters = p.run(opt.graph)
-                changed = any(counters.values())
-                report.entries.append(PassStat(it, p.name, counters, changed))
-                if changed and baseline is not None:
-                    got = ReferenceRuntime(opt, validate=False).run(feeds)
-                    _check_outputs(baseline, got, p.name)
-                sweep_changed |= changed
-            report.iterations = it + 1
-            if not sweep_changed:
-                break
-        report.nodes_after = len(opt.graph.nodes)
-        opt.validate(standard_ops_only=False)  # structural safety net
+        with _trace.span(
+            "passes.pipeline", nodes=report.nodes_before, verify=self.verify
+        ) as pipe_span:
+            if self.verify:
+                feeds = make_probe_feeds(model.graph, batch=self.probe_batch, seed=self.probe_seed)
+                baseline = ReferenceRuntime(model, validate=False).run(feeds)
+            for it in range(self.max_iterations):
+                sweep_changed = False
+                for p in self.passes:
+                    with _trace.span(f"pass.{p.name}", iteration=it) as pass_span:
+                        counters = p.run(opt.graph)
+                        changed = any(counters.values())
+                        pass_span.set(
+                            changed=changed, **{k: v for k, v in counters.items() if v}
+                        )
+                        report.entries.append(PassStat(it, p.name, counters, changed))
+                        if changed and baseline is not None:
+                            with _trace.span("pass.conformance_check"):
+                                got = ReferenceRuntime(opt, validate=False).run(feeds)
+                                _check_outputs(baseline, got, p.name)
+                    sweep_changed |= changed
+                report.iterations = it + 1
+                if not sweep_changed:
+                    break
+            report.nodes_after = len(opt.graph.nodes)
+            pipe_span.set(nodes_after=report.nodes_after, iterations=report.iterations)
+            opt.validate(standard_ops_only=False)  # structural safety net
         return opt, report
 
 

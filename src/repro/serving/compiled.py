@@ -27,7 +27,19 @@ requests; a flat ``metrics`` dict), specialized to single-shot inference:
 * **Metrics** — per-bucket and per-grid-cell batch counts, padded-row and
   padded-token overhead, window hits, plan-cache behavior (uniform
   ``hit_rate`` from :class:`repro.core.cache.LruCache`), and request
-  latency/throughput summaries.
+  latency/queue-wait distributions.  Every number routes through the
+  server's :class:`~repro.obs.metrics.MetricsRegistry` under canonical
+  ``serve.*`` / ``cache.plan.*`` keys; the flat ``metrics`` dict and
+  :meth:`~CompiledModelServer.summary` keys are kept as aliases.  Latency
+  is held in a log-bucketed :class:`~repro.obs.metrics.Histogram` — bounded
+  memory no matter how long the server lives, with p50/p95/p99 and an
+  exact avg/max in :meth:`~CompiledModelServer.summary`.
+* **Tracing** — with a tracer installed (:func:`repro.obs.trace.install`),
+  each request is an async span (``serve.request``, linked by uid) from
+  submit to completion, and each :meth:`~CompiledModelServer.step` emits a
+  ``serve.step`` span with ``serve.coalesce`` (stack + seq right-pad) and
+  ``serve.compute`` (the bucketed model execution) children plus
+  per-request queue-wait accounting.
 """
 from __future__ import annotations
 
@@ -39,6 +51,8 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.compile import BATCH_AXIS, CompiledModel
+from ..obs import trace as _trace
+from ..obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -62,7 +76,10 @@ class CompiledRequest:
 @dataclasses.dataclass
 class CompiledServerConfig:
     max_batch: int = 32  # largest coalesced batch (its bucket bounds jit traces)
-    latency_window: int = 4096  # latency samples kept for summary() aggregates
+    # retained for compatibility: latency now lives in a log-bucketed
+    # histogram whose memory is bounded by occupied buckets, not samples —
+    # every request counts toward the quantiles, none are dropped
+    latency_window: int = 4096
     # admission window: hold a partial batch until the oldest queued request
     # is this old (ms), then launch it (None = greedy drain, the PR 4 mode)
     max_wait_ms: Optional[float] = None
@@ -79,7 +96,13 @@ class CompiledServerConfig:
 class CompiledModelServer:
     """Queue + micro-batching loop over a scenario-polymorphic CompiledModel."""
 
-    def __init__(self, cm: CompiledModel, cfg: Optional[CompiledServerConfig] = None) -> None:
+    def __init__(
+        self,
+        cm: CompiledModel,
+        cfg: Optional[CompiledServerConfig] = None,
+        *,
+        registry: Optional[MetricsRegistry] = None,
+    ) -> None:
         if not cm.is_dynamic:
             raise ValueError(
                 "CompiledModelServer needs a scenario-polymorphic artifact — "
@@ -131,9 +154,14 @@ class CompiledModelServer:
             self._seq_pos = None
         self.queue: Deque[CompiledRequest] = deque()
         self._uid = 0
-        # bounded: a long-lived server keeps a sliding latency window, not
-        # one float per request forever
-        self._latencies: Deque[float] = deque(maxlen=self.cfg.latency_window)
+        # per-instance registry unless the caller injects a shared one; the
+        # plan cache publishes its canonical cache.plan.* gauges into it
+        self.registry = registry if registry is not None else MetricsRegistry()
+        cm.attach_metrics(self.registry)
+        # bounded: a long-lived server keeps a log-bucketed histogram (a few
+        # hundred ints), not one float per request forever
+        self._latency = self.registry.histogram("serve.latency_ms")
+        self._queue_wait = self.registry.histogram("serve.queue_wait_ms")
         self.metrics: Dict[str, Any] = {
             "requests": 0,
             "batches": 0,
@@ -144,6 +172,12 @@ class CompiledModelServer:
             "bucket_batches": {},  # batch bucket -> number of coalesced batches
             "grid_batches": {},  # (batch bucket, seq bucket) -> batches (2-D grids)
         }
+
+    def _count(self, key: str, n: int = 1) -> None:
+        """One accounting site: the flat alias dict and the canonical
+        ``serve.<key>`` registry counter move together."""
+        self.metrics[key] += n
+        self.registry.counter(f"serve.{key}").inc(n)
 
     # -- request lifecycle ----------------------------------------------------
     def submit(self, x: np.ndarray) -> CompiledRequest:
@@ -169,7 +203,9 @@ class CompiledModelServer:
         req = CompiledRequest(uid=self._uid, x=x, t_submit=time.monotonic())
         self._uid += 1
         self.queue.append(req)
-        self.metrics["requests"] += 1
+        self._count("requests")
+        if _trace.enabled:
+            _trace.async_begin("serve.request", req.uid, shape=str(x.shape))
         return req
 
     # -- main loop ------------------------------------------------------------
@@ -187,59 +223,78 @@ class CompiledModelServer:
             age_ms = (time.monotonic() - self.queue[0].t_submit) * 1e3
             if age_ms < self.cfg.max_wait_ms:
                 return []  # hold the partial batch open for more arrivals
-            self.metrics["window_hits"] += 1
+            self._count("window_hits")
         n = min(len(self.queue), self.cfg.max_batch)
         reqs = [self.queue.popleft() for _ in range(n)]
-        # batch assembly AND execution both re-queue on failure: a failure
-        # anywhere here (a shape mismatch np.stack rejects, a backend/jit
-        # error) must not lose the coalesced requests — they go back to the
-        # head of the queue in original order for the caller to retry/triage
-        try:
-            if self._seq_pos is None:
-                batch = np.stack([r.x for r in reqs])
-                seq_lens: Optional[List[int]] = None
-            else:
-                # right-pad every example to the longest sequence in the
-                # group, so it lands on one (batch-bucket × seq-bucket) cell
-                seq_lens = [int(r.x.shape[self._seq_pos]) for r in reqs]
-                s_max = max(seq_lens)
-                rows = []
-                for r in reqs:
-                    widths = [(0, 0)] * r.x.ndim
-                    widths[self._seq_pos] = (0, s_max - r.x.shape[self._seq_pos])
-                    rows.append(np.pad(r.x, widths) if widths[self._seq_pos][1] else r.x)
-                batch = np.stack(rows)
-            # the compiled model pads each axis to its bucket and serves the
-            # cell from its PlanCache; we only account for the coalescing here
-            outs = self.cm.run({self.input_name: batch})
-        except Exception:
-            self.queue.extendleft(reversed(reqs))
-            raise
-        bucket = self.cm.bucket_for(BATCH_AXIS, n)
-        self.metrics["batches"] += 1
-        self.metrics["padded_rows"] += bucket - n
-        hist = self.metrics["bucket_batches"]
-        hist[bucket] = hist.get(bucket, 0) + 1
-        if seq_lens is not None:
-            s_bucket = self.cm.bucket_for(self.seq_axis, max(seq_lens))
-            self.metrics["padded_tokens"] += sum(s_bucket - s for s in seq_lens)
-            grid = self.metrics["grid_batches"]
-            cell = (bucket, s_bucket)
-            grid[cell] = grid.get(cell, 0) + 1
-        now = time.monotonic()
-        out_axes = self.cm.output_axis_pos
-        for i, req in enumerate(reqs):
-            # only batch-carrying outputs scatter per request (anything
-            # batch-independent is shared whole); sequence-carrying outputs
-            # additionally slice back to the request's own true length
-            req.outputs = {
-                k: self._request_view(v, out_axes.get(k, {}), i, seq_lens[i] if seq_lens else None)
-                for k, v in outs.items()
-            }
-            req.done = True
-            req.t_done = now
-            self._latencies.append(now - req.t_submit)
-        self.metrics["completed"] += n
+        with _trace.span("serve.step", n=n) as step_span:
+            # queue wait ends at dequeue; what follows is coalesce + compute
+            t_deq = time.monotonic()
+            for r in reqs:
+                self._queue_wait.observe((t_deq - r.t_submit) * 1e3)
+            # batch assembly AND execution both re-queue on failure: a failure
+            # anywhere here (a shape mismatch np.stack rejects, a backend/jit
+            # error) must not lose the coalesced requests — they go back to
+            # the head of the queue in original order for the caller to
+            # retry/triage
+            try:
+                with _trace.span("serve.coalesce"):
+                    if self._seq_pos is None:
+                        batch = np.stack([r.x for r in reqs])
+                        seq_lens: Optional[List[int]] = None
+                    else:
+                        # right-pad every example to the longest sequence in
+                        # the group, so it lands on one (batch-bucket ×
+                        # seq-bucket) cell
+                        seq_lens = [int(r.x.shape[self._seq_pos]) for r in reqs]
+                        s_max = max(seq_lens)
+                        rows = []
+                        for r in reqs:
+                            widths = [(0, 0)] * r.x.ndim
+                            widths[self._seq_pos] = (0, s_max - r.x.shape[self._seq_pos])
+                            rows.append(np.pad(r.x, widths) if widths[self._seq_pos][1] else r.x)
+                        batch = np.stack(rows)
+                # the compiled model pads each axis to its bucket and serves
+                # the cell from its PlanCache; we only account for the
+                # coalescing here
+                with _trace.span("serve.compute"):
+                    outs = self.cm.run({self.input_name: batch})
+            except Exception:
+                self.queue.extendleft(reversed(reqs))
+                raise
+            bucket = self.cm.bucket_for(BATCH_AXIS, n)
+            self._count("batches")
+            self._count("padded_rows", bucket - n)
+            hist = self.metrics["bucket_batches"]
+            hist[bucket] = hist.get(bucket, 0) + 1
+            self.registry.counter(f"serve.batches.bucket.{bucket}").inc()
+            if seq_lens is not None:
+                s_bucket = self.cm.bucket_for(self.seq_axis, max(seq_lens))
+                self._count("padded_tokens", sum(s_bucket - s for s in seq_lens))
+                grid = self.metrics["grid_batches"]
+                cell = (bucket, s_bucket)
+                grid[cell] = grid.get(cell, 0) + 1
+                self.registry.counter(f"serve.batches.cell.{bucket}x{s_bucket}").inc()
+                if _trace.enabled:
+                    step_span.set(seq_bucket=s_bucket)
+            if _trace.enabled:
+                step_span.set(bucket=bucket, requests=",".join(str(r.uid) for r in reqs))
+            now = time.monotonic()
+            out_axes = self.cm.output_axis_pos
+            for i, req in enumerate(reqs):
+                # only batch-carrying outputs scatter per request (anything
+                # batch-independent is shared whole); sequence-carrying
+                # outputs additionally slice back to the request's own true
+                # length
+                req.outputs = {
+                    k: self._request_view(v, out_axes.get(k, {}), i, seq_lens[i] if seq_lens else None)
+                    for k, v in outs.items()
+                }
+                req.done = True
+                req.t_done = now
+                self._latency.observe((now - req.t_submit) * 1e3)
+                if _trace.enabled:
+                    _trace.async_end("serve.request", req.uid)
+            self._count("completed", n)
         return reqs
 
     def _request_view(
@@ -275,8 +330,12 @@ class CompiledModelServer:
 
     # -- reporting ------------------------------------------------------------
     def summary(self) -> Dict[str, Any]:
-        """Serving metrics + plan-cache behavior + latency aggregates."""
-        lat = np.asarray(self._latencies, np.float64)
+        """Serving metrics + plan-cache behavior + latency aggregates.
+
+        Latency aggregates come from the bounded ``serve.latency_ms``
+        histogram: avg/max are exact, p50/p95/p99 are bucket estimates
+        (within the histogram growth factor)."""
+        lat = self._latency.stats()
         cache = self.cm.cache_stats
         out = dict(self.metrics)
         # snapshots, not aliases
@@ -285,8 +344,10 @@ class CompiledModelServer:
         out.update(
             plan_cache=cache,
             plan_cache_hit_rate=cache["hit_rate"],
-            latency_avg_ms=float(lat.mean() * 1e3) if lat.size else None,
-            latency_p95_ms=float(np.percentile(lat, 95) * 1e3) if lat.size else None,
-            latency_max_ms=float(lat.max() * 1e3) if lat.size else None,
+            latency_avg_ms=lat["avg"],
+            latency_p50_ms=lat["p50"],
+            latency_p95_ms=lat["p95"],
+            latency_p99_ms=lat["p99"],
+            latency_max_ms=lat["max"],
         )
         return out

@@ -25,6 +25,8 @@ import numpy as np
 from ..backend.plan import PlanCache, bucket_multiple
 from ..configs.base import ModelConfig
 from ..models import model as M
+from ..obs import trace as _trace
+from ..obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -108,7 +110,15 @@ def sample_token(
 
 
 class ServeEngine:
-    def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig, *, compute_dtype=jnp.float32) -> None:
+    def __init__(
+        self,
+        params,
+        cfg: ModelConfig,
+        ecfg: EngineConfig,
+        *,
+        compute_dtype=jnp.float32,
+        registry: Optional[MetricsRegistry] = None,
+    ) -> None:
         self.params = params
         self.cfg = cfg
         # cache length must cover the largest prefill bucket (same round-up-
@@ -134,8 +144,13 @@ class ServeEngine:
         # hit/miss/hit_rate accounting) the compiled-model path uses for its
         # per-bucket plan specializations — the prefill path is the token
         # engine's instance of exactly that per-shape discipline.
-        self._prefill_cache: PlanCache = PlanCache(_prefill_capacity(ecfg))
+        self._prefill_cache: PlanCache = PlanCache(_prefill_capacity(ecfg), scope="prefill")
         self._rng = np.random.default_rng(ecfg.seed)
+        # per-instance registry unless the caller injects a shared one; the
+        # prefill cache publishes its canonical cache.prefill.* gauges and
+        # the flat prefill_cache_* keys below stay as read-only aliases
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._prefill_cache.attach_metrics(self.registry)
         self.metrics = {
             "decode_steps": 0,
             "prefills": 0,
@@ -145,6 +160,12 @@ class ServeEngine:
             "prefill_cache_evictions": 0,
             "prefill_cache_hit_rate": 0.0,
         }
+
+    def _count(self, key: str, n: int = 1) -> None:
+        """One accounting site: the flat alias dict and the canonical
+        ``engine.<key>`` registry counter move together."""
+        self.metrics[key] += n
+        self.registry.counter(f"engine.{key}").inc(n)
 
     def _select(self, logits_row) -> int:
         """Next-token choice for one slot: argmax (greedy) or
@@ -191,7 +212,8 @@ class ServeEngine:
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :plen] = req.prompt
             pcache = M.init_cache(self.cfg, 1, self.ecfg.max_len)
-            logits, pcache = self._prefill_fn(bucket)(self.params, jnp.asarray(padded), pcache)
+            with _trace.span("engine.prefill", uid=req.uid, plen=plen, bucket=bucket):
+                logits, pcache = self._prefill_fn(bucket)(self.params, jnp.asarray(padded), pcache)
             # prefill wrote [0, bucket); only [0, plen) is meaningful — the
             # causal mask means padding beyond plen is never attended by
             # positions < plen, and decode continues exactly at plen.
@@ -204,7 +226,7 @@ class ServeEngine:
             self.slot_pos[slot] = plen
             self.slot_live[slot] = True
             self.slot_budget[slot] = req.max_new_tokens - 1
-            self.metrics["prefills"] += 1
+            self._count("prefills")
 
     def _logits_at(self, padded, plen, last_logits, pcache):
         """Logits for the true last prompt token (bucket may extend past it)."""
@@ -237,8 +259,9 @@ class ServeEngine:
         for slot, req in self.active.items():
             toks[slot, 0] = req.generated[-1]
         pos = jnp.asarray(self.slot_pos)
-        logits, self.cache = self._decode(self.params, jnp.asarray(toks), pos, self.cache)
-        self.metrics["decode_steps"] += 1
+        with _trace.span("engine.decode", live=int(self.slot_live.sum())):
+            logits, self.cache = self._decode(self.params, jnp.asarray(toks), pos, self.cache)
+        self._count("decode_steps")
         if self.ecfg.greedy:
             # argmax on device: transfers `slots` ints, not slots×vocab floats
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
@@ -256,7 +279,7 @@ class ServeEngine:
             if self.slot_budget[slot] <= 0 or self.slot_pos[slot] >= self.ecfg.max_len - 1:
                 req.done = True
                 req.t_done = time.monotonic()
-                self.metrics["completed"] += 1
+                self._count("completed")
                 self.slot_live[slot] = False
                 del self.active[slot]
 

@@ -144,6 +144,21 @@ def test_two_axis_template_plan_golden():
     _check_golden("two_axis_mlp.template.plan.txt", cm.plan.pretty() + "\n")
 
 
+def test_quickstart_mlp_provenance_golden():
+    """``pretty(verbose=True)`` pins the provenance section: which passes
+    fired (with counters), which fusion patterns matched which nodes, and
+    every scenario-cell specialization with its bindings and chosen tiles.
+    Deterministic by construction — provenance carries no wall times, and
+    the trace id only appears when a tracer is installed (none here)."""
+    cm = compile_model(quickstart_mlp(), backend="interpret", batch="dynamic")
+    cm.specialized(1)
+    cm.specialized(8)
+    text = cm.plan.pretty(verbose=True)
+    assert "provenance:" in text and "specializations: 2" in text
+    assert "provenance:" not in cm.plan.pretty()  # default rendering unchanged
+    _check_golden("quickstart_mlp.provenance.txt", text + "\n")
+
+
 def test_two_axis_specialization_renders_bindings():
     cm = compile_model(two_axis_mlp(), backend="interpret", dynamic_axes={"N": None, "S": 32})
     plan, _ = cm.specialized({"N": 4, "S": 32})

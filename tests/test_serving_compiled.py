@@ -161,15 +161,23 @@ class TestCompiledModelServer:
         with pytest.raises(ValueError, match="max_wait_ms"):
             CompiledServerConfig(max_wait_ms=-1.0)
 
-    def test_latency_window_is_bounded(self):
+    def test_latency_memory_is_bounded(self):
         model, rng = _artifact()
         cm = compile_model(model, backend="ref", batch="dynamic")
         srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=4, latency_window=6))
         for x in _examples(rng, 10):
             srv.submit(x)
         srv.run_until_drained()
-        assert len(srv._latencies) == 6  # sliding window, not one per request
-        assert srv.summary()["latency_avg_ms"] is not None
+        # log-bucketed histogram: every request is counted, memory is bounded
+        # by occupied buckets rather than one float per request forever
+        assert srv._latency.count == 10
+        assert len(srv._latency.buckets) <= 10
+        s = srv.summary()
+        assert s["latency_avg_ms"] is not None
+        assert s["latency_p50_ms"] <= s["latency_p99_ms"] <= s["latency_max_ms"]
+        reg = srv.registry.snapshot()
+        assert reg["serve.latency_ms"]["count"] == 10
+        assert reg["serve.completed"] == 10
 
     def test_batch_independent_output_shared_across_requests(self):
         """Auxiliary outputs without a batch dim are handed to every request
