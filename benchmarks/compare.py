@@ -50,7 +50,16 @@ def load_rows(path: Path) -> Dict[str, dict]:
     payload = json.loads(path.read_text())
     if payload.get("schema") != "repro-bench-v1":
         raise SystemExit(f"{path}: not a repro-bench-v1 payload")
-    return {r["name"]: r for r in payload["rows"]}
+    rows: Dict[str, dict] = {}
+    for i, r in enumerate(payload.get("rows", [])):
+        name = r.get("name")
+        if not name or not isinstance(r.get("us_per_call"), (int, float)):
+            raise SystemExit(
+                f"{path}: row {i} malformed — every row needs a 'name' and a "
+                f"numeric 'us_per_call' (got {sorted(r)})"
+            )
+        rows[name] = r
+    return rows
 
 
 def compare(
@@ -98,6 +107,16 @@ def main(argv=None) -> int:
         return 0
     current = load_rows(args.current)
     baseline = load_rows(baseline_path)
+    if not set(current) & set(baseline):
+        # Disjoint row sets mean the baseline predates (or postdates) every
+        # current benchmark — a diff would be vacuous, not a regression.
+        print(
+            f"bench-compare: no shared rows between {args.current} "
+            f"({len(current)} rows) and baseline {baseline_path} "
+            f"({len(baseline)} rows); nothing to compare — commit a fresh "
+            f"BENCH_<n>.json baseline for the new row set"
+        )
+        return 0
     regressions, improvements, added, removed = compare(current, baseline, args.tolerance)
 
     print(f"bench-compare: {args.current} vs {baseline_path} (tolerance {args.tolerance:.0%})")

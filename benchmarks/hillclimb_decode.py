@@ -3,13 +3,80 @@ postures — bf16 baseline (paper-faithful float serving), W8A8 weights, and
 W8A8 + int8 KV cache.  Writes hillclimb_decode.json and prints the table.
 
 Run:  PYTHONPATH=src python -m benchmarks.hillclimb_decode
+
+``--measure-tiles`` swaps the analytic study for a *measured* one: a
+decode-shaped fused qmatmul cell is tuned through the backend's budgeted
+tile search and the per-candidate evidence table is printed.  All timing
+goes through the shared seeded warmup + median-of-k helper
+(:func:`repro.backend.autotune.measure_median`), so tuned-vs-heuristic
+deltas are reproducible run to run — ``--seed/--repeat/--warmup`` pin the
+measurement discipline explicitly.
 """
 from __future__ import annotations
 
+import argparse
 import json
 
 
-def main():
+def measure_tiles(args) -> int:
+    """Measured tuned-vs-heuristic tile comparison on a decode-shaped cell.
+
+    Decode serving flattens to a small-M fused qmatmul (one token per
+    sequence), which is exactly where the static tile heuristic over-blocks;
+    this drives the real measured search on the interpret backend and prints
+    the full candidate evidence from the tuner's co-design artifact."""
+    import os
+    import tempfile
+
+    import numpy as np
+
+    from repro.backend.autotune import Autotuner
+    from repro.core.compile import compile_model
+    from repro.core.toolchain import MLPSpec, quantize_mlp
+
+    rng = np.random.default_rng(args.seed)
+    d = args.width
+    spec = MLPSpec(
+        weights=[rng.normal(0, 0.4, (d, d)).astype(np.float32)],
+        biases=[rng.normal(0, 0.2, (d,)).astype(np.float32)],
+        activations=[None],
+    )
+    calib = rng.normal(0, 1.0, (64, d)).astype(np.float32)
+    model = quantize_mlp(spec, calib, name="decode_tile_probe")
+
+    cache = os.path.join(tempfile.mkdtemp(prefix="hillclimb-tiles-"), "tiles.json")
+    tuner = Autotuner(
+        budget=args.budget, repeat=args.repeat, warmup=args.warmup,
+        seed=args.seed, cache=cache,
+    )
+    cm = compile_model(model, backend="interpret", batch="dynamic", autotune=tuner)
+    plan, _ = cm.specialized(args.cell)
+
+    print(
+        f"decode-shaped tile search: d={d} cell N={args.cell} budget={args.budget} "
+        f"repeat={args.repeat} warmup={args.warmup} seed={args.seed}"
+    )
+    for key, entry in sorted(tuner.cache.store.entries.items()):
+        print(f"  {key}")
+        heur_us = entry["heuristic_us"]
+        for tiles, us in sorted(entry["candidates_us"].items(), key=lambda kv: kv[1]):
+            bm, bk, bn = tiles.split(",")
+            mark = " <- tuned" if us == entry["best_us"] else ""
+            print(
+                f"    bm={bm:>4s} bk={bk:>4s} bn={bn:>4s}  {us:9.1f}us "
+                f"({us / heur_us:.2f}x vs heuristic){mark}"
+            )
+        print(
+            f"    tuned {entry['best_us']:.1f}us vs heuristic {heur_us:.1f}us "
+            f"({heur_us / entry['best_us']:.2f}x) over {entry['measured']} measured"
+        )
+    ev = plan.provenance.specializations[-1]
+    for name, rec in ev.tiles:
+        print(f"  provenance {name}: {rec}")
+    return 0
+
+
+def analytic(args) -> int:
     import dataclasses as dc
 
     import jax
@@ -45,10 +112,31 @@ def main():
     print(f"\ndominant (memory) term: {base*1e3:.3f}ms -> {best*1e3:.3f}ms  ({base/best:.2f}x)")
     with open("hillclimb_decode.json", "w") as f:
         json.dump({k: {kk: vv for kk, vv in v.items() if kk != "probes"} for k, v in results.items()}, f, indent=1, default=float)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--measure-tiles", action="store_true",
+        help="run the measured decode-shaped tile search instead of the "
+        "analytic roofline study",
+    )
+    ap.add_argument("--width", type=int, default=512, help="probe layer width")
+    ap.add_argument("--cell", type=int, default=8, help="decode batch bucket (flat M)")
+    ap.add_argument("--budget", type=int, default=6, help="candidates measured per step")
+    ap.add_argument("--repeat", type=int, default=5, help="median-of-k repeat count")
+    ap.add_argument("--warmup", type=int, default=2, help="discarded warmup calls")
+    ap.add_argument("--seed", type=int, default=0, help="rng seed for probe data")
+    args = ap.parse_args(argv)
+    if args.measure_tiles:
+        return measure_tiles(args)
+    return analytic(args)
 
 
 if __name__ == "__main__":
     import os
+    import sys
 
     os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-    main()
+    sys.exit(main())

@@ -24,6 +24,11 @@ Terms per (arch × shape), single-pod mesh:
     T_comp = FLOPs_per_device / peak
     T_mem  = HBM_bytes_per_device / HBM_bw
     T_coll = collective_bytes_per_device / link_bw
+
+The hardware constants and the term model live in :mod:`repro.backend.cost`
+(shared with the backend's measured tile autotuner, which seeds its search
+from the same numbers); this module re-exports the flat names it has always
+had so downstream readers keep working.
 """
 from __future__ import annotations
 
@@ -32,11 +37,15 @@ import json
 import sys
 from typing import Dict, Optional
 
-PEAK_BF16 = 197e12
-PEAK_INT8 = 394e12
-HBM_BW = 819e9
-ICI_BW = 50e9
-CHIPS = 256
+from repro.backend.cost import (  # noqa: F401  (re-exported)
+    CHIPS,
+    HBM_BW,
+    ICI_BW,
+    PEAK_BF16,
+    PEAK_INT8,
+    TPU_V5E,
+    roofline_terms,
+)
 
 
 def model_flops(cfg, sc, n_params_active: int, n_params_total: int) -> float:
@@ -252,11 +261,11 @@ def roofline_cell(arch: str, shape_name: str, *, multi_pod: bool = False, w8a8: 
         per_dev["bytes"] += 24 * n_dev
     per_dev.update(analytic_memory_bytes(cfg, sc, counts, w8a8=w8a8))
 
-    t_comp = per_dev["flops"] / PEAK_BF16
     t_mem_hlo = per_dev["bytes"] / HBM_BW  # unfused upper bound (CPU HLO)
-    t_mem = per_dev["mem_min_bytes"] / HBM_BW  # fused analytic floor
-    t_coll = per_dev["coll_bytes"] / ICI_BW
-    terms = {"t_comp_s": t_comp, "t_mem_s": t_mem, "t_coll_s": t_coll}
+    # fused analytic floor for T_mem; T_comp/T_coll straight from the probes
+    terms = roofline_terms(
+        per_dev["flops"], per_dev["mem_min_bytes"], per_dev["coll_bytes"]
+    )
     bottleneck = max(terms, key=terms.get)
     step_time = max(terms.values())
 

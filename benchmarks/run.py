@@ -24,6 +24,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                            a (batch ∈ {1,8}) × (seq ∈ {32,128}) scenario
                            grid: requests/s per cell + specialization
                            counts (asserts at most one per grid cell)
+  sys_autotune           — measured per-cell tile autotuning: tuned vs
+                           heuristic executor per batch cell (tuned must not
+                           lose beyond noise), plus the persisted-tile-cache
+                           round trip (a warm-started second session must
+                           measure nothing)
   sys_w8a8_decode        — reduced-arch decode step: bf16 vs W8A8+int8-KV
   sys_grad_compress      — int8 cross-pod gradient all-reduce (derived: wire-
                            bytes ratio vs f32)
@@ -31,7 +36,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
 Run:  PYTHONPATH=src python -m benchmarks.run [--smoke] [--json PATH]
 
 ``--smoke`` runs the fast subset (fig1, pass pipeline, plan overhead,
-per-channel overhead, serving-compiled) for CI.  ``--json BENCH_<n>.json``
+per-channel overhead, serving-compiled, seq buckets, autotune) for CI.  ``--json BENCH_<n>.json``
 additionally persists the rows as JSON so the perf trajectory survives
 across PRs (CI uploads the file as a build artifact).
 """
@@ -412,6 +417,71 @@ def bench_seq_buckets():
     )
 
 
+def bench_autotune():
+    """Measured per-cell tile autotuning closing the co-design loop: one
+    batch-polymorphic 2-layer MLP on the interpret backend, two batch cells.
+    Each cell is specialized twice — heuristic tiles vs the budgeted measured
+    search — and both jitted executors are timed with the shared median-of-k
+    helper.  Tuned must never lose to heuristic beyond CI noise on any
+    measured cell (the heuristic is always candidate #0 of the search, so a
+    regression means the measurement itself is broken), and a second tuner
+    session warm-started from the persisted tile cache must resolve every
+    cell with zero new measurements."""
+    import os
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.backend.autotune import Autotuner, measure_median
+    from repro.backend.lowering import specialize_plan
+    from repro.core.compile import compile_model
+
+    model, xq = _mlp_artifact(layers=2, width=256)
+    cache_path = os.path.join(tempfile.mkdtemp(prefix="repro-autotune-"), "tiles.json")
+    tuner = Autotuner(budget=4, repeat=3, warmup=1, cache=cache_path)
+    cm = compile_model(model, backend="interpret", batch="dynamic", autotune=tuner)
+
+    cells = (8, 64)
+    us_h, us_t, ratios = {}, {}, {}
+    for cell in cells:
+        feeds = {"input_q": jnp.asarray(xq[:cell])}
+        plan_h = specialize_plan(cm.plan, cell)  # static heuristic tiles
+        plan_t, run_t = cm.specialized(cell)  # the measured search runs here
+        run_h = jax.jit(plan_h.execute)
+        a, b = run_h(feeds), run_t(feeds)
+        assert all(np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a)
+        us_h[cell] = measure_median(
+            lambda run=run_h, f=feeds: jax.block_until_ready(run(f))
+        ) * 1e6
+        us_t[cell] = measure_median(
+            lambda run=run_t, f=feeds: jax.block_until_ready(run(f))
+        ) * 1e6
+        ratios[cell] = us_t[cell] / us_h[cell]
+        assert ratios[cell] <= 1.35, (
+            f"tuned tiles lost to the heuristic at cell N={cell}: "
+            f"{us_t[cell]:.1f}us vs {us_h[cell]:.1f}us"
+        )
+    measured = tuner.measurements
+
+    # warm-start round trip: a brand-new session on the same artifact file
+    # specializes every known cell without timing a single candidate
+    warm = Autotuner(budget=4, cache=cache_path)
+    cm2 = compile_model(model, backend="interpret", batch="dynamic", autotune=warm)
+    for cell in cells:
+        cm2.specialized(cell)
+    assert warm.measurements == 0, (
+        f"warm-started session re-measured {warm.measurements} candidate(s)"
+    )
+    cells_s = ";".join(f"tuned_vs_heur_b{c}={ratios[c]:.2f}x" for c in cells)
+    row(
+        "sys_autotune",
+        us_t[cells[0]],
+        f"{cells_s};measurements={measured};warm_measurements={warm.measurements};"
+        f"cache_entries={len(warm.cache)}",
+    )
+
+
 def bench_grad_compress():
     import jax
     import jax.numpy as jnp
@@ -480,6 +550,7 @@ def main(argv=None) -> None:
     bench_per_channel_overhead()
     bench_serving_compiled()
     bench_seq_buckets()
+    bench_autotune()
     if not args.smoke:
         bench_w8a8_decode()
         bench_grad_compress()

@@ -66,7 +66,15 @@ kernels (:mod:`repro.backend.fused`).  Adding a backend = registering
 implementations for the kernel ids it specializes — the executor and the
 compiler never change.
 """
-from . import fused, generic  # noqa: F401  (populate the registry on import)
+from . import cost, fused, generic  # noqa: F401  (populate the registry on import)
+from .autotune import (  # noqa: F401
+    Autotuner,
+    AutotuneCache,
+    TuneJob,
+    measure_median,
+    seed_candidates,
+    tile_candidates,
+)
 from .lowering import (  # noqa: F401
     StepDraft,
     build_plan,

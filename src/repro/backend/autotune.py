@@ -1,0 +1,531 @@
+"""Measured per-cell tile autotuning for the fused qmatmul kernel.
+
+``choose_tiles`` is a static heuristic: every scenario cell of the
+(batch × sequence × …) grid runs the same default blocks regardless of its
+actual flattened M.  This module closes the co-design loop the paper's
+artifact enables — the backend *measures* what it actually runs fastest:
+
+* **Search space** — the MXU-aligned (bm, bk, bn) lattice from the kernel's
+  tile constraints (:func:`tile_candidates`).  ``bm`` ranges over
+  32-multiples up to the padded M; ``bk``/``bn`` are constrained to
+  *divisors* of the template's padded ``kp``/``np`` so every tuned
+  specialization shares the pre-padded parameter arrays zero-copy
+  (:func:`repro.kernels.ops.with_tiles` enforces this).  Candidates whose
+  double-buffered working set overflows VMEM are pruned up front.
+* **Cost-model seeding** — the lattice is ranked by the analytic
+  ``max(T_comp, T_mem)`` intensity model (:mod:`repro.backend.cost`, the
+  same numbers as ``benchmarks/roofline.py``) and only the top ``budget``
+  candidates are ever timed (:func:`seed_candidates`; the heuristic tiles
+  are always candidate #0, so a tuned cell can never regress past noise).
+* **Measurement** — each candidate runs the real planned kernel
+  (:func:`repro.kernels.ops.quantized_matmul_planned`) on deterministic
+  seeded int8 activations through the shared warmup + median-of-k helper
+  (:func:`measure_median`).  Timings route through the obs plane: one
+  ``backend.autotune`` span per tuned (cell × step) with
+  ``autotune.candidate`` child spans, plus ``autotune.*`` registry counters.
+* **Persistence** — winners land in an on-disk JSON :class:`AutotuneCache`
+  keyed by ``(kernel step, backend, axis bindings, shape key)``: a
+  diffable, warm-startable co-design artifact (the tuned analogue of the
+  golden plan renderings).  A second process pointed at the same file
+  specializes every known cell with **zero** new measurements.
+* **Integration** — :func:`repro.backend.lowering.specialize_plan` accepts
+  ``tuner=``; each fused step's tile record in :class:`PlanProvenance` is
+  tagged with its source (``heuristic`` renders untagged, ``[tuned]`` /
+  ``[cache]`` otherwise).  :class:`repro.serving.compiled.
+  CompiledModelServer` drives the search *non-blocking* via :class:`TuneJob`:
+  a cell serves immediately on heuristic tiles, a bounded number of
+  candidates is measured between ``step()`` batches, and the tuned executor
+  swaps into the PlanCache atomically once the search finishes.
+
+Determinism for tests/goldens: inject ``measure_fn`` (e.g. the cost model
+itself) and the whole search — winners, provenance tags, cache files —
+is reproducible bit-for-bit.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.cache import PersistentJsonStore
+from ..kernels import ops as kops
+from ..kernels import qmatmul as _qmm
+from ..obs import trace as _trace
+from ..obs.metrics import MetricsRegistry, default_registry
+from . import cost
+
+#: Tile triple (bm, bk, bn).
+Tiles = Tuple[int, int, int]
+
+#: measure_fn contract: (step, bound shape record, backend) -> seconds.
+MeasureFn = Callable[[Any, Dict[str, Any], str], float]
+
+CACHE_SCHEMA = "repro-autotune-v1"
+
+
+# ---------------------------------------------------------------------------
+# shared stable-timing helper (also used by benchmarks/hillclimb_decode.py)
+# ---------------------------------------------------------------------------
+
+
+def measure_median(fn: Callable[[], Any], *, repeat: int = 5, warmup: int = 2) -> float:
+    """Median-of-``repeat`` wall time of ``fn()`` in seconds, after ``warmup``
+    discarded calls (the first of which absorbs jit compilation).
+
+    The median — not the mean — is the estimator every timing comparison in
+    this repo shares: one GC pause or scheduler blip lands in a single
+    sample and cannot move the reported number, which is what makes
+    tuned-vs-heuristic deltas reproducible on noisy CI runners."""
+    if repeat < 1:
+        raise ValueError(f"repeat must be >= 1, got {repeat}")
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    mid = len(samples) // 2
+    if len(samples) % 2:
+        return samples[mid]
+    return 0.5 * (samples[mid - 1] + samples[mid])
+
+
+# ---------------------------------------------------------------------------
+# search space
+# ---------------------------------------------------------------------------
+
+#: The lattice axes: bm over 32-multiples (sublane minimum) up to the default
+#: block, bk/bn over 128-multiples up to 2x the default blocks.
+_BM_LATTICE = (32, 64, 128, 256)
+_BK_LATTICE = (128, 256, 512)
+_BN_LATTICE = (128, 256, 512)
+
+
+def tile_candidates(
+    m: int, kp: int, np_: int, *, hw: cost.HardwareSpec = cost.TPU_V5E
+) -> List[Tiles]:
+    """Every legal (bm, bk, bn) for a bound cell: MXU/sublane-aligned
+    (:func:`repro.kernels.qmatmul.tile_aligned`), ``bk | kp`` and ``bn | np``
+    (template padding reuse), ``bm`` no larger than the padded M (a bigger
+    block would only add padding), and working set within VMEM."""
+    mp = max(32, (int(m) + 31) // 32 * 32)
+    out: List[Tiles] = []
+    for bm in _BM_LATTICE:
+        if bm > mp:
+            continue
+        for bk in _BK_LATTICE:
+            if kp % bk:
+                continue
+            for bn in _BN_LATTICE:
+                if np_ % bn:
+                    continue
+                if not _qmm.tile_aligned(bm, bk, bn):
+                    continue
+                if cost.qmatmul_vmem_bytes(bm, bk, bn) > hw.vmem_bytes:
+                    continue
+                out.append((bm, bk, bn))
+    return out
+
+
+def seed_candidates(
+    shape: Dict[str, Any], *, budget: int, hw: cost.HardwareSpec = cost.TPU_V5E
+) -> List[Tiles]:
+    """The measurement list for one bound shape record: the heuristic tiles
+    first (always measured — the search can only ever *add* information, not
+    lose the baseline), then the remaining lattice ranked by the analytic
+    intensity model, truncated to ``budget`` total."""
+    m, k, n = int(shape["m"]), int(shape["k"]), int(shape["n"])
+    heuristic: Tiles = (int(shape["bm"]), int(shape["bk"]), int(shape["bn"]))
+    cands = tile_candidates(m, int(shape["kp"]), int(shape["np"]), hw=hw)
+    rest = [c for c in cands if c != heuristic]
+    rest.sort(key=lambda c: (cost.qmatmul_tile_cost(m, k, n, *c, hw=hw), c))
+    return [heuristic] + rest[: max(0, budget - 1)]
+
+
+# ---------------------------------------------------------------------------
+# persistent tile cache (the co-design artifact)
+# ---------------------------------------------------------------------------
+
+
+class AutotuneCache:
+    """On-disk tuned-tile store: ``{"schema": "repro-autotune-v1", "entries":
+    {<key>: {...}}}`` via :class:`repro.core.cache.PersistentJsonStore`.
+
+    Keys are ``<step>|<backend>|<cell>|<shape key>`` — e.g. ::
+
+        fc0_matmul|interpret|N=8|m=8,k=256,n=256,kp=256,np=256
+
+    and each entry records the winning tiles plus the full measurement
+    evidence (per-candidate µs, the heuristic baseline), so a hardware
+    designer can read *why* a tile won, diff two hardware generations'
+    artifacts, or ship the file to pre-seed a fleet replica (ROADMAP item 3)
+    which then tunes nothing at startup."""
+
+    def __init__(self, path: str) -> None:
+        self.store = PersistentJsonStore(path, schema=CACHE_SCHEMA)
+
+    @property
+    def path(self) -> str:
+        return self.store.path
+
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        return self.store.get(key)
+
+    def put(self, key: str, entry: Dict[str, Any]) -> None:
+        self.store.put(key, entry)
+
+    def __len__(self) -> int:
+        return len(self.store)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.store
+
+
+def cell_key(bindings: Dict[str, int]) -> str:
+    """Deterministic cell rendering: sorted ``axis=bucket`` pairs."""
+    return ",".join(f"{a}={v}" for a, v in sorted(bindings.items()))
+
+
+def shape_key(shape: Dict[str, Any]) -> str:
+    """Deterministic problem-shape rendering (tiles excluded — they are the
+    *output* of the search, not part of its identity)."""
+    return ",".join(f"{f}={int(shape[f])}" for f in ("m", "k", "n", "kp", "np"))
+
+
+# ---------------------------------------------------------------------------
+# the tuner
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Resolution:
+    """What the tuner knows about one (step × cell): tile overrides (None ⇒
+    the heuristic stands) and where they came from."""
+
+    tiles: Optional[Tiles]
+    source: str  # "heuristic" | "tuned" | "cache"
+
+
+class Autotuner:
+    """Budgeted measured tile search, cached per (step, backend, cell, shape).
+
+    One tuner instance is one *measurement session*: results resolved within
+    it are remembered in-process (re-specializing a cell after PlanCache
+    eviction re-measures nothing), and — when constructed with a ``cache``
+    path — persist to the on-disk :class:`AutotuneCache` so the *next*
+    session warm-starts with zero measurements.  ``measurements`` counts
+    every candidate actually timed; the CI smoke asserts it stays 0 on a
+    warm-started run.
+
+    ``measure_fn`` injects the timing oracle (tests and golden pins pass the
+    analytic cost model for bit-determinism); the default measures the real
+    planned kernel via :func:`measure_median` on seeded int8 activations.
+    """
+
+    def __init__(
+        self,
+        *,
+        budget: int = 8,
+        repeat: int = 5,
+        warmup: int = 2,
+        cache: Optional[Any] = None,  # AutotuneCache | path | None
+        measure_fn: Optional[MeasureFn] = None,
+        seed: int = 0,
+        hw: cost.HardwareSpec = cost.TPU_V5E,
+        registry: Optional[MetricsRegistry] = None,
+    ) -> None:
+        if budget < 1:
+            raise ValueError(f"budget must be >= 1, got {budget}")
+        self.budget = budget
+        self.repeat = repeat
+        self.warmup = warmup
+        if cache is None or isinstance(cache, AutotuneCache):
+            self.cache = cache
+        else:
+            self.cache = AutotuneCache(str(cache))
+        self.measure_fn = measure_fn
+        self.seed = seed
+        self.hw = hw
+        self.registry = registry if registry is not None else default_registry()
+        self.measurements = 0  # candidates actually timed this session
+        self._session: Dict[str, _Resolution] = {}
+
+    # -- identity ------------------------------------------------------------
+    def key_for(self, step, shape: Dict[str, Any], backend: str, bindings: Dict[str, int]) -> str:
+        return "|".join(
+            [step.name or step.kernel, backend, cell_key(bindings), shape_key(shape)]
+        )
+
+    @staticmethod
+    def tunable(shape: Dict[str, Any], backend: str) -> bool:
+        """Only cells with a known flat M on a tiled backend are searchable —
+        the ref oracle has no tiles, and an unknown M has no fixed cost."""
+        return backend != "ref" and shape.get("m") is not None
+
+    # -- resolution (what specialize_plan calls) ----------------------------
+    def tune_step(
+        self, step, shape: Dict[str, Any], *, backend: str, bindings: Dict[str, int]
+    ) -> Tuple[Dict[str, Any], str]:
+        """Resolve one bound step's tiles: session → disk cache → measured
+        search (blocking).  Returns the (possibly re-tiled) shape record and
+        its source tag."""
+        if not self.tunable(shape, backend):
+            return shape, "heuristic"
+        key = self.key_for(step, shape, backend, bindings)
+        res = self._resolve_cached(key)
+        if res is None:
+            cands = self._search_list(shape)
+            if len(cands) <= 1:
+                # the lattice collapsed to the heuristic: nothing to measure
+                res = self._session[key] = _Resolution(None, "heuristic")
+            else:
+                with _trace.span(
+                    "backend.autotune",
+                    step=step.name or step.kernel,
+                    cell=cell_key(bindings),
+                    candidates=len(cands),
+                ) as sp:
+                    res = self._run_search(key, step, shape, backend, cands)
+                    sp.set(bm=res.tiles[0], bk=res.tiles[1], bn=res.tiles[2])
+        return self._apply(shape, res), res.source
+
+    def _resolve_cached(self, key: str) -> Optional[_Resolution]:
+        res = self._session.get(key)
+        if res is not None:
+            return res
+        if self.cache is not None:
+            entry = self.cache.get(key)
+            if entry is not None:
+                self.registry.counter("autotune.cache_hits").inc()
+                res = _Resolution((int(entry["bm"]), int(entry["bk"]), int(entry["bn"])), "cache")
+                self._session[key] = res
+                return res
+            self.registry.counter("autotune.cache_misses").inc()
+        return None
+
+    def _search_list(self, shape: Dict[str, Any]) -> List[Tiles]:
+        return seed_candidates(shape, budget=self.budget, hw=self.hw)
+
+    def _run_search(
+        self, key: str, step, shape: Dict[str, Any], backend: str, cands: Sequence[Tiles]
+    ) -> _Resolution:
+        timings: Dict[Tiles, float] = {}
+        for cand in cands:
+            timings[cand] = self.measure_candidate(step, shape, backend, cand)
+        return self.finish(key, shape, cands[0], timings)
+
+    # -- incremental primitives (TuneJob drives these) ----------------------
+    def measure_candidate(
+        self, step, shape: Dict[str, Any], backend: str, cand: Tiles
+    ) -> float:
+        """Time one candidate (seconds) through the obs plane."""
+        cshape = self._apply(shape, _Resolution(cand, "tuned"))
+        with _trace.span(
+            "autotune.candidate", tiles=f"bm={cand[0]},bk={cand[1]},bn={cand[2]}"
+        ) as sp:
+            if self.measure_fn is not None:
+                t = float(self.measure_fn(step, cshape, backend))
+            else:
+                t = self._measure_real(step, cshape, backend)
+            sp.set(us=round(t * 1e6, 3))
+        self.measurements += 1
+        self.registry.counter("autotune.measurements").inc()
+        return t
+
+    def finish(
+        self, key: str, shape: Dict[str, Any], heuristic: Tiles, timings: Dict[Tiles, float]
+    ) -> _Resolution:
+        """Close one search: pick the winner (ties break toward the heuristic,
+        then lexicographically — determinism over luck), record it in the
+        session and the on-disk artifact."""
+        best = min(timings, key=lambda c: (timings[c], c != heuristic, c))
+        res = _Resolution(best, "tuned")
+        self._session[key] = res
+        self.registry.counter("autotune.cells").inc()
+        if self.cache is not None:
+            self.cache.put(
+                key,
+                {
+                    "bm": best[0],
+                    "bk": best[1],
+                    "bn": best[2],
+                    "best_us": round(timings[best] * 1e6, 3),
+                    "heuristic_us": round(timings[heuristic] * 1e6, 3),
+                    "measured": len(timings),
+                    "candidates_us": {
+                        f"{c[0]},{c[1]},{c[2]}": round(t * 1e6, 3)
+                        for c, t in sorted(timings.items())
+                    },
+                },
+            )
+        return res
+
+    # -- mechanics -----------------------------------------------------------
+    @staticmethod
+    def _apply(shape: Dict[str, Any], res: _Resolution) -> Dict[str, Any]:
+        if res.tiles is None:
+            return shape
+        bm, bk, bn = res.tiles
+        return kops.with_tiles(shape, bm=bm, bk=bk, bn=bn)
+
+    def _measure_real(self, step, shape: Dict[str, Any], backend: str) -> float:
+        import jax  # deferred: keep module import light
+
+        from ..core.pqir import DTYPES
+
+        w2, b2, qs2, qsh2 = step.consts
+        p = step.params
+        rng = np.random.default_rng(self.seed)
+        x = jax.numpy.asarray(
+            rng.integers(-127, 128, size=(int(shape["m"]), int(shape["k"])), dtype=np.int8)
+        )
+
+        def thunk():
+            y = kops.quantized_matmul_planned(
+                x, w2, b2, qs2, qsh2, shape,
+                out_dtype=DTYPES[p["out_dtype"]], relu=p["relu"], two_mul=p["two_mul"],
+                interpret=(backend == "interpret"),
+            )
+            jax.block_until_ready(y)
+
+        return measure_median(thunk, repeat=self.repeat, warmup=self.warmup)
+
+
+# ---------------------------------------------------------------------------
+# incremental background search (the serving integration)
+# ---------------------------------------------------------------------------
+
+
+class TuneJob:
+    """The search for one scenario cell, sliced into bounded increments.
+
+    Built from a plan *template* + bindings, it gathers every tunable fused
+    step's candidate list up front (steps already resolved in the tuner's
+    session or disk cache contribute no work), then :meth:`advance` measures
+    at most ``max_candidates`` candidates per call — the unit the
+    CompiledModelServer spends between batches, so serving latency bounds the
+    tuning work it carries, never the other way round.  When the last
+    candidate lands the winners are recorded exactly as the blocking path
+    records them; a subsequent ``specialize_plan(..., tuner=...)`` for the
+    cell is then a pure session lookup."""
+
+    def __init__(self, tuner: Autotuner, template, bindings: Dict[str, int]) -> None:
+        self.tuner = tuner
+        self.bindings = {str(a): int(v) for a, v in bindings.items()}
+        self.backend = template.backend
+        self._items: List[Dict[str, Any]] = []
+        for step in template.steps:
+            if not step.params.get("dynamic_batch"):
+                continue
+            shape = kops.bind_qmatmul_axes(step.params["shape"], self.bindings)
+            if not tuner.tunable(shape, self.backend):
+                continue
+            key = tuner.key_for(step, shape, self.backend, self.bindings)
+            if tuner._resolve_cached(key) is not None:
+                continue
+            cands = tuner._search_list(shape)
+            if len(cands) <= 1:
+                tuner._session[key] = _Resolution(None, "heuristic")
+                continue
+            self._items.append(
+                {"step": step, "shape": shape, "key": key, "cands": cands,
+                 "i": 0, "timings": {}}
+            )
+
+    @property
+    def done(self) -> bool:
+        return not self._items
+
+    @property
+    def remaining(self) -> int:
+        """Candidates still to measure."""
+        return sum(len(it["cands"]) - it["i"] for it in self._items)
+
+    def advance(self, max_candidates: int = 1) -> bool:
+        """Measure up to ``max_candidates`` candidates; returns ``done``."""
+        n = 0
+        while self._items and n < max_candidates:
+            it = self._items[0]
+            cand = it["cands"][it["i"]]
+            it["timings"][cand] = self.tuner.measure_candidate(
+                it["step"], it["shape"], self.backend, cand
+            )
+            it["i"] += 1
+            n += 1
+            if it["i"] == len(it["cands"]):
+                self.tuner.finish(it["key"], it["shape"], it["cands"][0], it["timings"])
+                self._items.pop(0)
+        return self.done
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke (CI runs this twice: cold, then warm with --expect-cached)
+# ---------------------------------------------------------------------------
+
+
+def _smoke_artifact():
+    from ..core.toolchain import MLPSpec, quantize_mlp
+
+    rng = np.random.default_rng(4)
+    d = 256
+    spec = MLPSpec(
+        weights=[rng.normal(0, 0.4, (d, d)).astype(np.float32) for _ in range(2)],
+        biases=[rng.normal(0, 0.2, (d,)).astype(np.float32) for _ in range(2)],
+        activations=["Relu", None],
+    )
+    calib = rng.normal(0, 1.0, (64, d)).astype(np.float32)
+    return quantize_mlp(spec, calib, name="autotune_smoke")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="autotune smoke: tune a small dynamic MLP's cells on the "
+        "interpret backend and persist the tile cache"
+    )
+    ap.add_argument("--smoke", action="store_true", help="run the smoke model")
+    ap.add_argument("--budget", type=int, default=4, help="candidates per cell step")
+    ap.add_argument("--cache", default="autotune_cache.json", help="tile cache path")
+    ap.add_argument("--cells", default="8,64", help="comma-separated batch buckets")
+    ap.add_argument(
+        "--expect-cached", action="store_true",
+        help="fail unless every cell resolves with zero new measurements "
+        "(the warm-start acceptance check)",
+    )
+    args = ap.parse_args(argv)
+    if not args.smoke:
+        ap.error("nothing to do: pass --smoke")
+
+    from ..core.compile import compile_model
+
+    tuner = Autotuner(budget=args.budget, repeat=3, warmup=1, cache=args.cache)
+    cm = compile_model(_smoke_artifact(), backend="interpret", batch="dynamic", autotune=tuner)
+    sources: Dict[int, set] = {}
+    for cell in (int(c) for c in args.cells.split(",")):
+        plan, _ = cm.specialized(cell)
+        ev = plan.provenance.specializations[-1]
+        sources[cell] = {
+            rec.rsplit("[", 1)[-1].rstrip("]") if rec.endswith("]") else "heuristic"
+            for _, rec in ev.tiles
+        }
+    print(
+        f"autotune smoke: cells={sorted(sources)} measurements={tuner.measurements} "
+        f"cache_entries={len(tuner.cache)} cache={tuner.cache.path}"
+    )
+    for cell, src in sorted(sources.items()):
+        print(f"  cell N={cell}: tile sources {sorted(src)}")
+    if args.expect_cached and tuner.measurements:
+        print(
+            f"FAIL: expected a pure warm start but performed "
+            f"{tuner.measurements} measurement(s)"
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

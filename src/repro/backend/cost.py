@@ -1,0 +1,129 @@
+"""Hardware model + arithmetic-intensity cost estimates for the backend.
+
+One importable home for the numbers that used to live only at the top of
+``benchmarks/roofline.py``: the TPU v5e hardware constants and the
+``T_comp`` / ``T_mem`` / ``T_coll`` roofline terms.  Two consumers share it:
+
+* ``benchmarks/roofline.py`` — the paper's roofline analysis imports the
+  constants and :func:`roofline_terms` instead of duplicating them, and
+* :mod:`repro.backend.autotune` — the measured tile search *seeds* its
+  candidate ranking with :func:`qmatmul_tile_cost` (an analytic
+  max(T_comp, T_mem) per tile configuration), so only the ~6–10 most
+  promising lattice points are ever timed, and prunes candidates whose
+  working set cannot fit VMEM (:func:`qmatmul_vmem_bytes`).
+
+The estimates are deliberately coarse — they rank candidates, they do not
+replace measurement.  Everything here is analytic and deterministic.
+
+Stdlib + dataclasses only; imports nothing from the rest of :mod:`repro`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip accelerator model used for roofline terms and tile costs."""
+
+    name: str
+    peak_bf16_flops: float  # FLOP/s, bf16 MXU peak
+    peak_int8_flops: float  # FLOP/s, int8 double-rate MXU peak
+    hbm_bw: float  # B/s
+    ici_bw: float  # B/s per link
+    chips: int  # chips in the reference (single-pod) fleet
+    vmem_bytes: int  # on-chip vector memory per core
+    mxu: int = 128  # systolic array dimension
+
+
+#: TPU v5e: 197 TFLOP/s bf16 (394 int8), 819 GB/s HBM, ~50 GB/s/link ICI,
+#: 256-chip pod, ~16 MB VMEM per core (see benchmarks/roofline.py docstring).
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    peak_int8_flops=394e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    chips=256,
+    vmem_bytes=16 * 1024 * 1024,
+)
+
+# Flat aliases — the names benchmarks/roofline.py has always exported.
+PEAK_BF16 = TPU_V5E.peak_bf16_flops
+PEAK_INT8 = TPU_V5E.peak_int8_flops
+HBM_BW = TPU_V5E.hbm_bw
+ICI_BW = TPU_V5E.ici_bw
+CHIPS = TPU_V5E.chips
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float = 0.0,
+    *,
+    hw: HardwareSpec = TPU_V5E,
+    peak: float = 0.0,
+) -> Dict[str, float]:
+    """The per-device roofline terms (seconds):
+
+        T_comp = FLOPs / peak        T_mem = HBM_bytes / HBM_bw
+        T_coll = collective_bytes / link_bw
+
+    ``peak`` defaults to the bf16 peak (the roofline benchmark's convention);
+    pass ``hw.peak_int8_flops`` for int8-dominated kernels."""
+    p = peak or hw.peak_bf16_flops
+    return {
+        "t_comp_s": flops / p,
+        "t_mem_s": hbm_bytes / hw.hbm_bw,
+        "t_coll_s": coll_bytes / hw.ici_bw,
+    }
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def qmatmul_hbm_bytes(m: int, k: int, n: int, bm: int, bk: int, bn: int) -> float:
+    """Analytic minimum HBM traffic for the fused int8 qmatmul under the
+    (M/bm, N/bn, K/bk) grid of :mod:`repro.kernels.qmatmul` (k innermost):
+
+    * each ``(bm, bk)`` activation tile streams in once per ``j`` — the whole
+      padded activation is read ``np/bn`` times,
+    * each ``(bk, bn)`` weight tile streams in once per ``i`` — the padded
+      weights are read ``mp/bm`` times,
+    * bias/scale/shift rows (int32 + 2×f32 per output column) once per
+      ``(i, j)``, and the int8 output is written once.
+    """
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    x_bytes = mp * kp * (np_ // bn)  # int8
+    w_bytes = kp * np_ * (mp // bm)  # int8
+    epi_bytes = (4 + 4 + 4) * np_ * (mp // bm)  # bias (i32) + 2 × f32 rows
+    out_bytes = mp * np_  # int8
+    return float(x_bytes + w_bytes + epi_bytes + out_bytes)
+
+
+def qmatmul_vmem_bytes(bm: int, bk: int, bn: int) -> int:
+    """Resident VMEM working set of one grid step: the int8 x/w tiles, the
+    int8 output tile, three (1, bn) epilogue rows, and the int32 accumulator
+    scratch — with double buffering on the streamed operands (the Pallas
+    pipeline keeps two in-flight copies of each block)."""
+    streamed = 2 * (bm * bk + bk * bn + 3 * 4 * bn + bm * bn)
+    acc = 4 * bm * bn
+    return streamed + acc
+
+
+def qmatmul_tile_cost(
+    m: int, k: int, n: int, bm: int, bk: int, bn: int, *, hw: HardwareSpec = TPU_V5E
+) -> float:
+    """Analytic cost (seconds) of one fused qmatmul launch with the given
+    tiles: ``max(T_comp, T_mem)`` over the *padded* problem.  Padding waste
+    (a bucket of 8 run at bm=128 computes 16× the useful rows) and tile-
+    dependent re-streaming both show up here, which is exactly what makes the
+    ranking useful for seeding the measured search."""
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    flops = 2.0 * mp * kp * np_
+    terms = roofline_terms(
+        flops, qmatmul_hbm_bytes(m, k, n, bm, bk, bn), hw=hw, peak=hw.peak_int8_flops
+    )
+    return max(terms["t_comp_s"], terms["t_mem_s"])

@@ -168,7 +168,10 @@ def build_plan(
 
 
 def specialize_plan(
-    template: ExecutionPlan, bindings: Union[int, Dict[str, int]]
+    template: ExecutionPlan,
+    bindings: Union[int, Dict[str, int]],
+    *,
+    tuner: Optional[Any] = None,
 ) -> ExecutionPlan:
     """Bind a scenario-polymorphic plan template to concrete axis buckets.
 
@@ -189,6 +192,15 @@ def specialize_plan(
     case, ``specialize_plan(plan, {})`` on a fully-static plan is a no-op
     (there is nothing to bind); a non-empty bindings dict on a static plan
     is still an error.
+
+    ``tuner`` (an :class:`repro.backend.autotune.Autotuner`, or anything
+    with its ``tune_step`` contract) routes each fully-bound fused step's
+    tile choice through the measured per-cell search: the heuristic shape
+    record goes in, a possibly re-tiled record and a source tag
+    (``heuristic | tuned | cache``) come out.  The provenance tile record
+    carries the tag for non-heuristic sources (``... [tuned]``), so
+    ``plan.pretty(verbose=True)`` shows where every cell's tiles came from;
+    heuristic cells render exactly as before.
     """
     if isinstance(bindings, dict):
         bindings = {str(a): int(v) for a, v in bindings.items()}
@@ -226,10 +238,18 @@ def specialize_plan(
                 else:
                     params = {k: v for k, v in params.items() if k != "dynamic_batch"}
                     shape = kops.bind_qmatmul_axes(step.params["shape"], bindings)
+                    source = "heuristic"
+                    if tuner is not None:
+                        shape, source = tuner.tune_step(
+                            step, shape, backend=template.backend, bindings=bindings
+                        )
                     params["shape"] = shape
-                    tiles[step.name or step.kernel] = ",".join(
+                    rec = ",".join(
                         f"{k}={shape[k]}" for k in ("m", "bm", "bk", "bn") if k in shape
                     )
+                    if source != "heuristic":
+                        rec += f" [{source}]"
+                    tiles[step.name or step.kernel] = rec
             out_info = tuple(
                 ValueInfo(info.dtype, bind(info.shape, bindings)) if info is not None else info
                 for info in step.out_info

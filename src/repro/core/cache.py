@@ -11,6 +11,9 @@ metrics.
 """
 from __future__ import annotations
 
+import json
+import os
+import tempfile
 from collections import OrderedDict
 from typing import Any, Dict, Hashable, Optional
 
@@ -110,3 +113,76 @@ class LruCache:
             f"{type(self).__name__}(size={s['size']}/{s['capacity']}, "
             f"hits={s['hits']}, misses={s['misses']}, evictions={s['evictions']})"
         )
+
+
+class PersistentJsonStore:
+    """A string-keyed dict persisted as one schema-tagged JSON file.
+
+    The on-disk co-design artifacts (the autotune tile cache, and anything
+    shaped like it) share three requirements this class owns:
+
+    * **diffable** — keys are written sorted with stable indentation, so two
+      runs producing the same state produce byte-identical files and a tuned
+      entry shows up as a clean one-hunk diff in review;
+    * **atomic** — :meth:`save` writes to a temp file in the target directory
+      and ``os.replace``\\ s it over the destination, so a crash mid-write can
+      never leave a truncated artifact for the next process to warm-start
+      from;
+    * **schema-checked** — the file carries ``{"schema": ..., "entries":
+      {...}}``; loading a file with a different schema tag raises instead of
+      silently misreading a foreign format.
+
+    A missing file is an empty store (the cold-start case).  ``put`` saves
+    immediately — entries are few and each one cost real measurement time,
+    so losing them to a crash would be the expensive failure mode.
+    """
+
+    def __init__(self, path: str, *, schema: str) -> None:
+        self.path = str(path)
+        self.schema = schema
+        self.entries: Dict[str, Any] = {}
+        self.load()
+
+    def load(self) -> None:
+        """(Re-)read the file; a missing file leaves the store empty."""
+        if not os.path.exists(self.path):
+            return
+        with open(self.path) as f:
+            data = json.load(f)
+        got = data.get("schema")
+        if got != self.schema:
+            raise ValueError(
+                f"{self.path}: schema {got!r} does not match expected {self.schema!r}"
+            )
+        entries = data.get("entries", {})
+        if not isinstance(entries, dict):
+            raise ValueError(f"{self.path}: 'entries' must be an object")
+        self.entries = entries
+
+    def save(self) -> None:
+        """Atomic write: temp file in the destination directory + rename."""
+        payload = {"schema": self.schema, "entries": self.entries}
+        d = os.path.dirname(os.path.abspath(self.path))
+        fd, tmp = tempfile.mkstemp(prefix=".store-", suffix=".json", dir=d)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, self.path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def get(self, key: str, default: Any = None) -> Any:
+        return self.entries.get(str(key), default)
+
+    def put(self, key: str, value: Any) -> None:
+        self.entries[str(key)] = value
+        self.save()
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __contains__(self, key: str) -> bool:
+        return str(key) in self.entries

@@ -390,8 +390,10 @@ class Compiler:
         batch: str = "static",
         dynamic_axes: Optional[Dict[str, object]] = None,
         plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
+        autotune=None,
     ) -> None:
         model.validate()
+        self.autotuner = _resolve_autotuner(autotune)
         if batch not in ("static", "dynamic"):
             raise ValueError(f"batch must be 'static' or 'dynamic', got {batch!r}")
         if batch == "dynamic" and dynamic_axes is None:
@@ -502,6 +504,7 @@ class Compiler:
             self.model, plan, self.stats, self.pass_report,
             plan_cache_capacity=self.plan_cache_capacity,
             dynamic_axes=self.dynamic_axes,
+            autotuner=self.autotuner,
         )
 
     def _fused_draft(self, node: Node, consumed: set) -> Optional[StepDraft]:
@@ -566,9 +569,13 @@ class CompiledModel:
         *,
         plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
         dynamic_axes: Optional[Dict[str, object]] = None,
+        autotuner=None,
     ) -> None:
         self.model = model
         self.plan = plan
+        #: optional repro.backend.autotune.Autotuner — when set, every lazy
+        #: specialization routes its tile choice through the measured search
+        self.autotuner = autotuner
         self.steps = plan.steps
         self.stats = stats
         self.pass_report = pass_report if pass_report is not None else PipelineReport()
@@ -685,7 +692,7 @@ class CompiledModel:
         key = bindings_key(bindings)
         entry = self.plan_cache.get(key)
         if entry is None:
-            plan = specialize_plan(self.plan, bindings)
+            plan = specialize_plan(self.plan, bindings, tuner=self.autotuner)
             entry = (plan, jax.jit(plan.execute))
             self.plan_cache.put(key, entry)
         return entry
@@ -756,6 +763,23 @@ class CompiledModel:
             return out
 
 
+def _resolve_autotuner(autotune):
+    """Normalize the ``compile_model(autotune=...)`` sugar to an Autotuner
+    (or None): True → in-memory session, a path → persistent tile cache,
+    a tuner instance → as-is.  Tuners are duck-typed on the ``tune_step``
+    contract (not ``isinstance``) so injected test doubles — and the module
+    run under ``python -m``, where the class exists twice — both work."""
+    if not autotune:
+        return None
+    from ..backend.autotune import Autotuner
+
+    if autotune is True:
+        return Autotuner()
+    if hasattr(autotune, "tune_step"):
+        return autotune
+    return Autotuner(cache=str(autotune))
+
+
 def compile_model(
     model: Model,
     *,
@@ -766,6 +790,7 @@ def compile_model(
     batch: str = "static",
     dynamic_axes: Optional[Dict[str, object]] = None,
     plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
+    autotune=None,
 ) -> CompiledModel:
     """Compile a PQ-IR artifact for the TPU backend.
 
@@ -794,6 +819,15 @@ def compile_model(
     plan_cache_capacity:
                    bound on resident per-bucket specializations (dynamic
                    mode; LRU-evicted beyond this).
+    autotune:      measured per-cell tile search (dynamic mode, tiled
+                   backends): ``True`` → an in-memory
+                   :class:`repro.backend.autotune.Autotuner` session, a path
+                   → a session persisted to that JSON tile cache (warm
+                   starts perform zero measurements), an Autotuner instance
+                   → shared/injected (tests pass one with a deterministic
+                   ``measure_fn``).  Each lazy specialization then measures
+                   a budgeted, cost-model-seeded candidate list and the plan
+                   provenance tags every cell's tile source.
     """
     with _trace.span(
         "compile", graph=model.graph.name, backend=backend,
@@ -802,5 +836,5 @@ def compile_model(
         return Compiler(
             model, backend=backend, fuse=fuse, optimize=optimize,
             verify_passes=verify_passes, batch=batch, dynamic_axes=dynamic_axes,
-            plan_cache_capacity=plan_cache_capacity,
+            plan_cache_capacity=plan_cache_capacity, autotune=autotune,
         ).compile()

@@ -133,6 +133,49 @@ def bind_qmatmul_axes(shape: dict, bindings: Optional[dict], *, partial: bool = 
     return bound
 
 
+def with_tiles(
+    shape: dict,
+    *,
+    bm: Optional[int] = None,
+    bk: Optional[int] = None,
+    bn: Optional[int] = None,
+) -> dict:
+    """A copy of a *bound* qmatmul shape record with tile overrides — the
+    autotuner's way of re-tiling a cell without touching the template.
+
+    Overrides are validated against the kernel's alignment constraints
+    (:func:`repro.kernels.qmatmul.tile_aligned`), and ``bk``/``bn`` must
+    additionally *divide* the template's padded ``kp``/``np`` — the padded
+    parameter arrays were built once at template time and every tuned
+    specialization shares them zero-copy, so a tile that would change the
+    padding is not a legal candidate.  ``bm`` is free (any 32-multiple): the
+    activation is padded per call, not baked into the template."""
+    out = dict(shape)
+    if bm is not None:
+        if bm <= 0 or bm % _qmm.MIN_SUBLANE:
+            raise ValueError(f"bm={bm} is not a positive {_qmm.MIN_SUBLANE}-multiple")
+        out["bm"] = int(bm)
+    if bk is not None:
+        if bk <= 0 or bk % _qmm.MIN_LANE:
+            raise ValueError(f"bk={bk} is not a positive {_qmm.MIN_LANE}-multiple")
+        if shape["kp"] % bk:
+            raise ValueError(
+                f"bk={bk} does not divide the template's padded kp={shape['kp']} "
+                "(tuned tiles must reuse the pre-padded parameter arrays)"
+            )
+        out["bk"] = int(bk)
+    if bn is not None:
+        if bn <= 0 or bn % _qmm.MIN_LANE:
+            raise ValueError(f"bn={bn} is not a positive {_qmm.MIN_LANE}-multiple")
+        if shape["np"] % bn:
+            raise ValueError(
+                f"bn={bn} does not divide the template's padded np={shape['np']} "
+                "(tuned tiles must reuse the pre-padded parameter arrays)"
+            )
+        out["bn"] = int(bn)
+    return out
+
+
 def bind_qmatmul_batch(shape: dict, batch: Optional[int]) -> dict:
     """Single-axis sugar over :func:`bind_qmatmul_axes` (the PR 4 calling
     convention): bind the implicit batch axis only."""

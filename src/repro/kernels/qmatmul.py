@@ -38,8 +38,21 @@ BM, BK, BN = 128, 256, 128
 
 # Minimum tile granularity: int8 operands want (32, 128)-aligned tiles and the
 # int32 accumulator (8, 128) — 32-multiple sublanes × 128-lane last dims
-# satisfy both.
-_MIN_SUBLANE, _MIN_LANE = 32, 128
+# satisfy both.  Public: the autotuner's candidate lattice is built from these.
+MIN_SUBLANE, MIN_LANE = 32, 128
+_MIN_SUBLANE, _MIN_LANE = MIN_SUBLANE, MIN_LANE
+
+
+def tile_aligned(bm: int, bk: int, bn: int) -> bool:
+    """True iff (bm, bk, bn) satisfies the kernel's tile constraints: positive
+    blocks, bm a 32-multiple (int8 sublane minimum, which also covers the
+    int32 accumulator's 8), bk and bn 128-lane multiples."""
+    return (
+        min(bm, bk, bn) > 0
+        and bm % MIN_SUBLANE == 0
+        and bk % MIN_LANE == 0
+        and bn % MIN_LANE == 0
+    )
 
 
 def _ceil_to(x: int, m: int) -> int:

@@ -56,7 +56,13 @@ class FusionRecord:
 
 @dataclasses.dataclass(frozen=True)
 class SpecializationEvent:
-    """One scenario-cell specialization of a plan template."""
+    """One scenario-cell specialization of a plan template.
+
+    Each tile record is the bound ``m=..,bm=..,bk=..,bn=..`` string; when the
+    tiles came from the measured autotuner rather than the static heuristic
+    the record carries a trailing source tag (``... [tuned]`` / ``[cache]``).
+    Heuristic tiles render untagged — existing golden renderings are
+    byte-identical."""
 
     bindings: Tuple[Tuple[str, int], ...]  # sorted (axis, bucket)
     tiles: Tuple[Tuple[str, str], ...]  # (fused step name, bound tile record)

@@ -1,0 +1,390 @@
+"""Measured per-cell tile autotuning (PR 7).
+
+* Correctness floor: EVERY candidate tile configuration the search could
+  ever pick must be bit-exact against the ref oracle — the tuner may only
+  trade time, never numerics.
+* Search-space properties: every candidate satisfies the kernel's alignment
+  constraints and the template-padding divisibility contract.
+* Sessions and the persisted co-design artifact: session memoization, disk
+  warm start with zero measurements, provenance source tags, the
+  ``compile_model(autotune=...)`` sugar, and the PersistentJsonStore
+  mechanics underneath.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backend import cost
+from repro.backend.autotune import (
+    CACHE_SCHEMA,
+    Autotuner,
+    AutotuneCache,
+    measure_median,
+    seed_candidates,
+    tile_candidates,
+)
+from repro.backend.lowering import specialize_plan
+from repro.core.cache import PersistentJsonStore
+from repro.core.compile import compile_model
+from repro.core.toolchain import MLPSpec, quantize_mlp
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.qmatmul import MIN_LANE, MIN_SUBLANE, tile_aligned
+
+
+def _mlp(layers=2, width=256, seed=4):
+    rng = np.random.default_rng(seed)
+    spec = MLPSpec(
+        weights=[rng.normal(0, 0.4, (width, width)).astype(np.float32) for _ in range(layers)],
+        biases=[rng.normal(0, 0.2, (width,)).astype(np.float32) for _ in range(layers)],
+        activations=["Relu"] * (layers - 1) + [None],
+    )
+    calib = rng.normal(0, 1.0, (64, width)).astype(np.float32)
+    return quantize_mlp(spec, calib, name="autotune_test")
+
+
+def _cost_measure(step, shape, backend):
+    """Deterministic timing oracle: the analytic intensity model itself."""
+    return cost.qmatmul_tile_cost(
+        shape["m"], shape["k"], shape["n"], shape["bm"], shape["bk"], shape["bn"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# search space properties
+# ---------------------------------------------------------------------------
+
+
+class TestSearchSpace:
+    @pytest.mark.parametrize("m", [1, 7, 8, 32, 64, 200, 256])
+    @pytest.mark.parametrize("kp,np_", [(128, 128), (256, 256), (512, 384), (256, 640)])
+    def test_candidates_satisfy_all_constraints(self, m, kp, np_):
+        cands = tile_candidates(m, kp, np_)
+        assert cands, (m, kp, np_)
+        mp = max(32, -(-m // 32) * 32)
+        assert len(set(cands)) == len(cands)
+        for bm, bk, bn in cands:
+            assert tile_aligned(bm, bk, bn), (bm, bk, bn)
+            assert bm % MIN_SUBLANE == 0 and bk % MIN_LANE == 0 and bn % MIN_LANE == 0
+            assert kp % bk == 0, "bk must divide the template's padded kp"
+            assert np_ % bn == 0, "bn must divide the template's padded np"
+            assert bm <= mp, "a bm beyond the padded M only adds padding"
+            assert cost.qmatmul_vmem_bytes(bm, bk, bn) <= cost.TPU_V5E.vmem_bytes
+
+    def test_seeding_puts_heuristic_first_and_respects_budget(self):
+        _, shape = kops.template_qmatmul_params(
+            np.zeros((256, 256), np.int8), None, np.float32(0.1), np.float32(0.5)
+        )
+        bound = kops.bind_qmatmul_axes({**shape, "lead": ("N",)}, {"N": 64})
+        heuristic = (bound["bm"], bound["bk"], bound["bn"])
+        for budget in (1, 2, 3, 100):
+            cands = seed_candidates(bound, budget=budget)
+            assert cands[0] == heuristic
+            assert len(cands) <= max(budget, 1)
+            assert len(set(cands)) == len(cands)
+        full = seed_candidates(bound, budget=100)
+        assert set(full) == set(tile_candidates(64, bound["kp"], bound["np"]))
+        # the non-heuristic tail is ranked by the analytic cost model
+        costs = [
+            cost.qmatmul_tile_cost(bound["m"], bound["k"], bound["n"], *c)
+            for c in full[1:]
+        ]
+        assert costs == sorted(costs)
+
+
+# ---------------------------------------------------------------------------
+# every candidate is bit-exact (the differential sweep)
+# ---------------------------------------------------------------------------
+
+
+class TestEveryCandidateBitExact:
+    @pytest.mark.parametrize("m,k,n", [(7, 200, 130), (64, 256, 256)])
+    def test_all_candidate_tilings_match_ref(self, m, k, n):
+        """The search may pick ANY lattice point; all of them must agree with
+        the ref oracle bit-for-bit on ragged real-world shapes."""
+        rng = np.random.default_rng(m * 1000 + n)
+        x = rng.integers(-128, 128, (m, k)).astype(np.int8)
+        w = rng.integers(-128, 128, (k, n)).astype(np.int8)
+        b = rng.integers(-(2**18), 2**18, (n,)).astype(np.int32)
+        qs, qsh = np.float32(417.0), np.float32(2.0**-21)
+        consts, shape = kops.template_qmatmul_params(w, b, qs, qsh)
+        bound = kops.bind_qmatmul_axes({**shape, "lead": (m,)}, None)
+        expect = np.asarray(
+            kref.qmatmul_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                             jnp.float32(qs), jnp.float32(qsh), relu=True)
+        )
+        cands = tile_candidates(m, bound["kp"], bound["np"])
+        assert len(cands) >= 2, "sweep must cover a non-trivial lattice"
+        for bm, bk, bn in cands:
+            tiled = kops.with_tiles(bound, bm=bm, bk=bk, bn=bn)
+            got = kops.quantized_matmul_planned(
+                jnp.asarray(x), *consts, tiled,
+                out_dtype=jnp.int8, relu=True, two_mul=True, interpret=True,
+            )
+            np.testing.assert_array_equal(np.asarray(got), expect, err_msg=str((bm, bk, bn)))
+
+
+class TestWithTiles:
+    def setup_method(self):
+        _, shape = kops.template_qmatmul_params(
+            np.zeros((256, 256), np.int8), None, np.float32(0.1), np.float32(0.5)
+        )
+        self.bound = kops.bind_qmatmul_axes({**shape, "lead": (8,)}, None)
+
+    def test_legal_override(self):
+        out = kops.with_tiles(self.bound, bm=64, bk=128, bn=128)
+        assert (out["bm"], out["bk"], out["bn"]) == (64, 128, 128)
+        assert self.bound["bm"] != 64 or True  # original untouched
+        assert out is not self.bound
+
+    @pytest.mark.parametrize(
+        "kw",
+        [{"bm": 48}, {"bm": 0}, {"bm": -32}, {"bk": 192}, {"bk": 64}, {"bn": 96}],
+    )
+    def test_misaligned_tiles_rejected(self, kw):
+        with pytest.raises(ValueError):
+            kops.with_tiles(self.bound, **kw)
+
+    def test_non_dividing_tiles_rejected(self):
+        # kp = np = 256 here: 512 is aligned but does not divide the padding
+        with pytest.raises(ValueError, match="does not divide"):
+            kops.with_tiles(self.bound, bk=512)
+        with pytest.raises(ValueError, match="does not divide"):
+            kops.with_tiles(self.bound, bn=512)
+
+
+# ---------------------------------------------------------------------------
+# stable timing helper
+# ---------------------------------------------------------------------------
+
+
+class TestMeasureMedian:
+    def test_call_count_and_median(self, monkeypatch):
+        from repro.backend import autotune as at
+
+        # fake clock: (t0, t1) pairs for 3 samples of 10 / 20 / 1 ms
+        ticks = iter([0.0, 0.010, 0.010, 0.030, 0.030, 0.031])
+        monkeypatch.setattr(at.time, "perf_counter", lambda: next(ticks))
+        calls = []
+        got = measure_median(lambda: calls.append(1), repeat=3, warmup=2)
+        assert len(calls) == 5  # warmup runs happen before the clock is read
+        assert got == pytest.approx(0.010)  # median, not mean (noise-robust)
+
+    def test_even_repeat_averages_middle_pair(self, monkeypatch):
+        from repro.backend import autotune as at
+
+        ticks = iter([0.0, 0.004, 0.004, 0.012, 0.012, 0.013, 0.013, 0.033])
+        monkeypatch.setattr(at.time, "perf_counter", lambda: next(ticks))
+        got = measure_median(lambda: None, repeat=4, warmup=0)
+        assert got == pytest.approx(0.5 * (0.004 + 0.008))
+
+    def test_repeat_must_be_positive(self):
+        with pytest.raises(ValueError, match="repeat"):
+            measure_median(lambda: None, repeat=0)
+
+
+# ---------------------------------------------------------------------------
+# the tuner: sessions, provenance tags, persistence
+# ---------------------------------------------------------------------------
+
+
+class TestAutotunerSessions:
+    def test_measured_search_tags_provenance_and_memoizes(self):
+        tuner = Autotuner(budget=4, measure_fn=_cost_measure)
+        cm = compile_model(_mlp(), backend="interpret", batch="dynamic", autotune=tuner)
+        plan, _ = cm.specialized(64)
+        ev = plan.provenance.specializations[-1]
+        assert ev.tiles and all("[tuned]" in rec for _, rec in ev.tiles)
+        assert tuner.measurements == 8  # 2 fused steps x budget 4
+        # session memoization: re-specializing the same cell measures nothing
+        specialize_plan(cm.plan, 64, tuner=tuner)
+        assert tuner.measurements == 8
+        # a different cell is a different search
+        specialize_plan(cm.plan, 8, tuner=tuner)
+        assert tuner.measurements > 8
+
+    def test_collapsed_lattice_stays_heuristic(self):
+        # width 128: kp = np = 128 admit one bk/bn; N=8 pads to mp=32 -> one bm
+        tuner = Autotuner(budget=8, measure_fn=_cost_measure)
+        cm = compile_model(
+            _mlp(width=128), backend="interpret", batch="dynamic", autotune=tuner
+        )
+        plan, _ = cm.specialized(8)
+        ev = plan.provenance.specializations[-1]
+        assert all("[" not in rec for _, rec in ev.tiles)  # untagged = heuristic
+        assert tuner.measurements == 0
+
+    def test_budget_one_never_measures(self):
+        tuner = Autotuner(budget=1, measure_fn=_cost_measure)
+        cm = compile_model(_mlp(), backend="interpret", batch="dynamic", autotune=tuner)
+        plan, _ = cm.specialized(64)
+        assert tuner.measurements == 0
+        ev = plan.provenance.specializations[-1]
+        assert all("[" not in rec for _, rec in ev.tiles)
+
+    def test_ref_backend_is_not_tunable(self):
+        tuner = Autotuner(budget=8, measure_fn=_cost_measure)
+        cm = compile_model(_mlp(), backend="ref", batch="dynamic", autotune=tuner)
+        cm.specialized(64)
+        assert tuner.measurements == 0
+
+    def test_invalid_budget_rejected(self):
+        with pytest.raises(ValueError, match="budget"):
+            Autotuner(budget=0)
+
+    def test_tuned_plan_is_bitexact_vs_untuned(self):
+        model = _mlp()
+        tuner = Autotuner(budget=4, measure_fn=_cost_measure)
+        cm_t = compile_model(model, backend="interpret", batch="dynamic", autotune=tuner)
+        cm_h = compile_model(model, backend="interpret", batch="dynamic")
+        rng = np.random.default_rng(0)
+        feeds = {"input_q": rng.integers(-128, 128, (64, 256)).astype(np.int8)}
+        got = cm_t.run(feeds)
+        expect = cm_h.run(feeds)
+        for k in expect:
+            np.testing.assert_array_equal(got[k], expect[k])
+
+
+class TestPersistence:
+    def test_disk_cache_warm_start_measures_nothing(self, tmp_path):
+        path = str(tmp_path / "tiles.json")
+        model = _mlp()
+        t1 = Autotuner(budget=4, measure_fn=_cost_measure, cache=path)
+        cm1 = compile_model(model, backend="interpret", batch="dynamic", autotune=t1)
+        cm1.specialized(64)
+        assert t1.measurements == 8
+        assert len(t1.cache) == 2  # one entry per fused step
+
+        t2 = Autotuner(budget=4, measure_fn=_cost_measure, cache=path)
+        cm2 = compile_model(model, backend="interpret", batch="dynamic", autotune=t2)
+        plan, _ = cm2.specialized(64)
+        assert t2.measurements == 0
+        ev = plan.provenance.specializations[-1]
+        assert ev.tiles and all("[cache]" in rec for _, rec in ev.tiles)
+        # warm-start winners are the measured winners
+        e1 = {k: (v["bm"], v["bk"], v["bn"]) for k, v in t1.cache.store.entries.items()}
+        e2 = {k: (v["bm"], v["bk"], v["bn"]) for k, v in t2.cache.store.entries.items()}
+        assert e1 == e2
+
+    def test_cache_entry_carries_measurement_evidence(self, tmp_path):
+        path = str(tmp_path / "tiles.json")
+        tuner = Autotuner(budget=4, measure_fn=_cost_measure, cache=path)
+        cm = compile_model(_mlp(layers=1), backend="interpret", batch="dynamic", autotune=tuner)
+        cm.specialized(64)
+        (key, entry), = tuner.cache.store.entries.items()
+        step, backend, cell, shp = key.split("|")
+        assert backend == "interpret" and cell == "N=64"
+        assert shp == "m=64,k=256,n=256,kp=256,np=256"
+        assert entry["measured"] == 4 == len(entry["candidates_us"])
+        assert entry["best_us"] <= entry["heuristic_us"]
+        assert entry["best_us"] == min(entry["candidates_us"].values())
+
+    def test_compile_model_autotune_path_sugar(self, tmp_path):
+        path = str(tmp_path / "tiles.json")
+        cm = compile_model(_mlp(), backend="interpret", batch="dynamic", autotune=path)
+        assert isinstance(cm.autotuner, Autotuner)
+        assert cm.autotuner.cache is not None and cm.autotuner.cache.path == path
+
+    def test_compile_model_autotune_true_sugar(self):
+        cm = compile_model(_mlp(), backend="interpret", batch="dynamic", autotune=True)
+        assert isinstance(cm.autotuner, Autotuner)
+        assert cm.autotuner.cache is None
+
+    def test_compile_model_autotune_duck_typed_instance(self):
+        class FakeTuner:
+            def tune_step(self, step, shape, *, backend, bindings):
+                return shape, "heuristic"
+
+        fake = FakeTuner()
+        cm = compile_model(_mlp(), backend="interpret", batch="dynamic", autotune=fake)
+        assert cm.autotuner is fake
+
+
+class TestPersistentJsonStore:
+    def test_roundtrip_and_reload(self, tmp_path):
+        path = str(tmp_path / "store.json")
+        s = PersistentJsonStore(path, schema="test-v1")
+        assert len(s) == 0
+        s.put("a", {"x": 1})
+        assert "a" in s and s.get("a") == {"x": 1}
+        data = json.loads(open(path).read())
+        assert data["schema"] == "test-v1"
+        s2 = PersistentJsonStore(path, schema="test-v1")
+        assert s2.get("a") == {"x": 1}
+
+    def test_schema_mismatch_raises(self, tmp_path):
+        path = str(tmp_path / "store.json")
+        PersistentJsonStore(path, schema="test-v1").put("a", 1)
+        with pytest.raises(ValueError, match="schema"):
+            PersistentJsonStore(path, schema="test-v2")
+        with pytest.raises(ValueError, match="schema"):
+            AutotuneCache(path)  # the tile cache checks its own tag too
+
+    def test_missing_file_is_empty_store(self, tmp_path):
+        s = PersistentJsonStore(str(tmp_path / "never_written.json"), schema="x")
+        assert len(s) == 0 and s.get("a") is None
+        assert not os.path.exists(s.path)  # load never creates the file
+
+    def test_save_leaves_no_temp_files(self, tmp_path):
+        path = str(tmp_path / "store.json")
+        s = PersistentJsonStore(path, schema=CACHE_SCHEMA)
+        for i in range(3):
+            s.put(f"k{i}", i)
+        assert sorted(p.name for p in tmp_path.iterdir()) == ["store.json"]
+
+    def test_deterministic_rendering(self, tmp_path):
+        a, b = str(tmp_path / "a.json"), str(tmp_path / "b.json")
+        sa = PersistentJsonStore(a, schema="x")
+        sb = PersistentJsonStore(b, schema="x")
+        sa.put("k1", 1)
+        sa.put("k2", 2)
+        sb.put("k2", 2)  # insertion order must not leak into the artifact
+        sb.put("k1", 1)
+        assert open(a).read() == open(b).read()
+
+
+# ---------------------------------------------------------------------------
+# bench-compare guard (satellite: clean no-overlap behavior)
+# ---------------------------------------------------------------------------
+
+
+class TestBenchCompareGuards:
+    def _payload(self, path, names):
+        payload = {
+            "schema": "repro-bench-v1",
+            "rows": [{"name": n, "us_per_call": 10.0, "derived": ""} for n in names],
+        }
+        path.write_text(json.dumps(payload))
+        return path
+
+    def test_disjoint_row_sets_exit_cleanly(self, tmp_path, capsys):
+        from benchmarks import compare as bc
+
+        cur = self._payload(tmp_path / "cur.json", ["new_row_a", "new_row_b"])
+        base = self._payload(tmp_path / "base.json", ["old_row"])
+        rc = bc.main([str(cur), "--baseline", str(base), "--strict"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "no shared rows" in out and "nothing to compare" in out
+
+    def test_malformed_row_is_a_clear_error(self, tmp_path):
+        from benchmarks import compare as bc
+
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps({"schema": "repro-bench-v1", "rows": [{"name": "x"}]}))
+        ok = self._payload(tmp_path / "ok.json", ["x"])
+        with pytest.raises(SystemExit, match="malformed"):
+            bc.main([str(bad), "--baseline", str(ok)])
+
+    def test_overlapping_rows_still_compare(self, tmp_path, capsys):
+        from benchmarks import compare as bc
+
+        cur = self._payload(tmp_path / "cur.json", ["shared", "only_new"])
+        base = self._payload(tmp_path / "base.json", ["shared", "only_old"])
+        assert bc.main([str(cur), "--baseline", str(base)]) == 0
+        out = capsys.readouterr().out
+        assert "1 shared rows within tolerance" in out

@@ -159,6 +159,42 @@ def test_quickstart_mlp_provenance_golden():
     _check_golden("quickstart_mlp.provenance.txt", text + "\n")
 
 
+def test_quickstart_mlp_tuned_provenance_golden(tmp_path):
+    """The tuned artifact trail, golden-pinned: a cell whose lattice collapses
+    renders untagged (heuristic), a measured cell renders ``[tuned]``, and a
+    second session warm-started from the persisted tile cache renders
+    ``[cache]`` — all bit-reproducible because the timing oracle is the
+    analytic cost model, not a wall clock."""
+    from repro.backend import cost
+    from repro.backend.autotune import Autotuner
+
+    def cost_measure(step, shape, backend):
+        return cost.qmatmul_tile_cost(
+            shape["m"], shape["k"], shape["n"], shape["bm"], shape["bk"], shape["bn"]
+        )
+
+    cache = str(tmp_path / "tiles.json")
+    t1 = Autotuner(budget=4, measure_fn=cost_measure, cache=cache)
+    cm = compile_model(quickstart_mlp(), backend="interpret", batch="dynamic", autotune=t1)
+    cm.specialized(1)  # mp=32 collapses the lattice: stays heuristic, untagged
+    cm.specialized(64)  # bm ∈ {32, 64} per step: measured -> [tuned]
+    assert t1.measurements == 6  # 3 fused steps x 2 candidates
+
+    t2 = Autotuner(budget=4, measure_fn=cost_measure, cache=cache)
+    cm2 = compile_model(quickstart_mlp(), backend="interpret", batch="dynamic", autotune=t2)
+    cm2.specialized(64)  # warm start from the artifact -> [cache]
+    assert t2.measurements == 0
+
+    default = cm.plan.pretty()  # default rendering carries no source tags
+    assert "[tuned]" not in default and "[cache]" not in default
+    text = (
+        cm.plan.pretty(verbose=True)
+        + "\n--- second session, warm-started from the tile cache ---\n"
+        + cm2.plan.pretty(verbose=True)
+    )
+    _check_golden("quickstart_mlp.tuned.provenance.txt", text + "\n")
+
+
 def test_two_axis_specialization_renders_bindings():
     cm = compile_model(two_axis_mlp(), backend="interpret", dynamic_axes={"N": None, "S": 32})
     plan, _ = cm.specialized({"N": 4, "S": 32})

@@ -351,6 +351,121 @@ class TestDeadlineAwareCoalescing:
         assert srv.metrics["window_hits"] == 0
 
 
+def _tunable_artifact():
+    """A width-256 MLP on the interpret backend: kp = np = 256 admit a
+    {128, 256} bk/bn lattice, so every cell has a real (4-candidate) search."""
+    rng = np.random.default_rng(17)
+    spec = MLPSpec(
+        weights=[rng.normal(0, 0.4, (256, 256)).astype(np.float32) for _ in range(2)],
+        biases=[rng.normal(0, 0.2, (256,)).astype(np.float32) for _ in range(2)],
+        activations=["Relu", None],
+    )
+    calib = rng.normal(0, 1.0, (64, 256)).astype(np.float32)
+    return quantize_mlp(spec, calib, name="tuned_served_mlp"), rng
+
+
+def _cost_measure(step, shape, backend):
+    """Deterministic timing oracle for background-tuning tests."""
+    from repro.backend import cost
+
+    return cost.qmatmul_tile_cost(
+        shape["m"], shape["k"], shape["n"], shape["bm"], shape["bk"], shape["bn"]
+    )
+
+
+class TestBackgroundTuning:
+    """Non-blocking autotuning: serve on heuristic tiles immediately, measure
+    a bounded number of candidates between batches, swap the tuned executor
+    into the PlanCache atomically when the cell's search completes."""
+
+    def _server(self, per_step=2):
+        from repro.backend.autotune import Autotuner
+
+        model, rng = _tunable_artifact()
+        tuner = Autotuner(budget=4, measure_fn=_cost_measure)
+        cm = compile_model(model, backend="interpret", batch="dynamic", autotune=tuner)
+        srv = CompiledModelServer(
+            cm,
+            CompiledServerConfig(max_batch=8, tune_candidates_per_step=per_step),
+        )
+        return model, rng, tuner, cm, srv
+
+    def test_step_serves_before_tuning_completes(self):
+        """The first step on a fresh cell must go out on heuristic tiles with
+        at most tune_candidates_per_step measurements spent — never the full
+        blocking search."""
+        model, rng, tuner, cm, srv = self._server(per_step=2)
+        # the server owns the search: a first-touch specialization inside
+        # step() must not route through the tuner (that would block)
+        assert cm.autotuner is None
+        reqs = [srv.submit(rng.integers(-128, 128, (256,)).astype(np.int8)) for _ in range(8)]
+        done = srv.step()
+        assert len(done) == 8 and all(r.done for r in reqs)
+        assert tuner.measurements == 2  # bounded budget, spent AFTER serving
+        assert srv.tuning_pending == 6  # 2 steps x 4 candidates - 2 measured
+        assert srv.metrics["tuned_swaps"] == 0
+        # the plan serving the cell right now carries untagged heuristic tiles
+        from repro.backend.plan import bindings_key
+
+        plan, _ = cm.plan_cache.get(bindings_key({"N": 8}))
+        shape = next(s.params["shape"] for s in plan.steps if "shape" in s.params)
+        assert (shape["bm"], shape["bk"], shape["bn"]) == (32, 256, 128)
+
+    def test_idle_steps_advance_and_swap_atomically(self):
+        model, rng, tuner, cm, srv = self._server(per_step=2)
+        rt = ReferenceRuntime(model)
+        out_name = cm.output_names[0]
+        xs = [rng.integers(-128, 128, (256,)).astype(np.int8) for _ in range(8)]
+        for x in xs:
+            srv.submit(x)
+        before = srv.step()  # serve wave 1 on heuristic tiles (+2 candidates)
+        for expected in (4, 6, 8):  # idle cycles keep spending the budget
+            srv.step()
+            assert tuner.measurements == expected
+        assert srv.tuning_pending == 0
+        assert srv.metrics["tuned_swaps"] == 1
+        assert srv.registry.snapshot()["autotune.swaps"] == 1
+        # the swapped-in plan is the tuned one, provenance-tagged
+        from repro.backend.plan import bindings_key
+
+        plan, _ = cm.plan_cache.get(bindings_key({"N": 8}))
+        ev = plan.provenance.specializations[-1]
+        assert ev.tiles and all("[tuned]" in rec for _, rec in ev.tiles)
+        # and the swap changed tiles without changing a single output bit
+        for x in xs:
+            srv.submit(x)
+        after = srv.run_until_drained()
+        for rb, ra in zip(before, after):
+            solo = rt.run({"input_q": ra.x[None, :]})[out_name][0]
+            np.testing.assert_array_equal(ra.outputs[out_name], solo)
+            np.testing.assert_array_equal(rb.outputs[out_name], ra.outputs[out_name])
+        # the swap itself counted no extra specialization-by-miss
+        assert srv.summary()["tuning_pending"] == 0
+
+    def test_cell_enqueues_exactly_one_job(self):
+        model, rng, tuner, cm, srv = self._server(per_step=1)
+        for _ in range(3):  # three waves on the same bucket
+            for _ in range(8):
+                srv.submit(rng.integers(-128, 128, (256,)).astype(np.int8))
+            srv.step()
+        assert len(srv._tuned_cells) == 1
+        assert len(srv._tune_jobs) == 1  # still the one (slowly draining) job
+        assert tuner.measurements == 3  # one candidate per step, three steps
+
+    def test_no_tuner_means_no_tuning_state(self):
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm)
+        srv.submit(_examples(rng, 1)[0])
+        srv.step()
+        assert srv.tuning_pending == 0 and srv.metrics["tuned_swaps"] == 0
+        assert srv.summary()["tuning_pending"] == 0
+
+    def test_rejects_bad_tune_budget(self):
+        with pytest.raises(ValueError, match="tune_candidates_per_step"):
+            CompiledServerConfig(tune_candidates_per_step=0)
+
+
 class TestUniformCacheMetrics:
     def test_plan_cache_hit_rate_is_the_lru_rate(self):
         """summary()['plan_cache_hit_rate'] is LruCache's own hit_rate — one
