@@ -29,6 +29,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
                            lose beyond noise), plus the persisted-tile-cache
                            round trip (a warm-started second session must
                            measure nothing)
+  sys_fleet              — fleet serving from one AOT plan artifact: a
+                           3-replica ShardedRouter (warm-started, cell
+                           affinity) vs a single warm server on the same
+                           mixed-cell traffic (derived: rps both ways,
+                           per-replica plan-cache hit rates pinned ≥ the
+                           single-server baseline, warm vs cold first-wave
+                           latency, lost/dup request counters)
   sys_w8a8_decode        — reduced-arch decode step: bf16 vs W8A8+int8-KV
   sys_grad_compress      — int8 cross-pod gradient all-reduce (derived: wire-
                            bytes ratio vs f32)
@@ -36,7 +43,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
 Run:  PYTHONPATH=src python -m benchmarks.run [--smoke] [--json PATH]
 
 ``--smoke`` runs the fast subset (fig1, pass pipeline, plan overhead,
-per-channel overhead, serving-compiled, seq buckets, autotune) for CI.  ``--json BENCH_<n>.json``
+per-channel overhead, serving-compiled, seq buckets, autotune, fleet) for CI.  ``--json BENCH_<n>.json``
 additionally persists the rows as JSON so the perf trajectory survives
 across PRs (CI uploads the file as a build artifact).
 """
@@ -482,6 +489,103 @@ def bench_autotune():
     )
 
 
+def bench_fleet():
+    """Fleet-scale serving from one AOT plan artifact: a 3-replica
+    ShardedRouter (each replica warm-started by ``load_artifact`` — plan
+    cache pre-seeded with the recorded hot cells, jit traces primed) vs a
+    single warm-started server on the same mixed-cell traffic.  Cell
+    affinity must keep every replica's plan-cache hit rate at least the
+    single-server baseline (sharding must not divide cache locality by N),
+    and the warm start must serve its first wave faster than a cold
+    compile-specialize-jit does.  Zero lost, zero duplicated requests."""
+    import os
+    import tempfile
+
+    from repro.backend.artifact import load_artifact, save_artifact
+    from repro.core import patterns, pqir, quant
+    from repro.core.compile import compile_model
+    from repro.serving import CompiledModelServer, CompiledServerConfig, ShardedRouter
+
+    rng = np.random.default_rng(11)
+    p = quant.quantize_linear_layer(
+        rng.normal(size=(64, 64)).astype(np.float32) * 0.05,
+        rng.normal(size=(64,)).astype(np.float32) * 0.1, 0.05, 0.1,
+    )
+
+    def build_model():
+        gb = pqir.GraphBuilder("bench_fleet")
+        x = gb.add_input("x", "int8", ("N", "S", 64))
+        y = patterns.fc_layer(gb, x, p, "fc0", two_mul=True, activation="Relu")
+        gb.add_output(y, "int8", ("N", "S", 64))
+        return gb.build()
+
+    # the traffic mix: three seq-bucket cells (S ∈ {8, 16, 24}), waves of 4
+    seq_lens, wave = (4, 12, 20), 4
+    cfg = CompiledServerConfig(max_batch=wave)
+
+    def serve_waves(submit, drain, n_waves):
+        for _ in range(n_waves):
+            for s in seq_lens:
+                for _ in range(wave):
+                    submit(rng.integers(-128, 128, (s, 64)).astype(np.int8))
+            drain()
+
+    # record the hot cells once and save the artifact the whole fleet shares
+    cm_rec = compile_model(build_model(), backend="interpret", dynamic_axes={"N": None, "S": 8})
+    srv_rec = CompiledModelServer(cm_rec, cfg)
+    serve_waves(srv_rec.submit, srv_rec.run_until_drained, 1)
+    path = os.path.join(tempfile.mkdtemp(prefix="repro-fleet-"), "fleet.json")
+    save_artifact(cm_rec, path)
+
+    # warm-start value: first wave on a pre-seeded + jit-primed replica vs a
+    # cold compile (specialize + jit on first touch, per cell)
+    cm_cold = compile_model(build_model(), backend="interpret", dynamic_axes={"N": None, "S": 8})
+    srv_cold = CompiledModelServer(cm_cold, cfg)
+    t0 = time.perf_counter()
+    serve_waves(srv_cold.submit, srv_cold.run_until_drained, 1)
+    cold_ms = (time.perf_counter() - t0) * 1e3
+
+    srv_single = CompiledModelServer(load_artifact(path, warm=True), cfg)
+    t0 = time.perf_counter()
+    serve_waves(srv_single.submit, srv_single.run_until_drained, 1)
+    warm_ms = (time.perf_counter() - t0) * 1e3
+
+    # single warm-started server baseline throughput + hit rate
+    n_waves = 10
+    t0 = time.perf_counter()
+    serve_waves(srv_single.submit, srv_single.run_until_drained, n_waves)
+    single_rps = len(seq_lens) * wave * n_waves / (time.perf_counter() - t0)
+    single_summary = srv_single.summary()
+    single_rate = single_summary["plan_cache_hit_rate"]
+
+    # the fleet: 3 replicas, one front door, cell-affinity sharding
+    router = ShardedRouter.from_artifact(path, replicas=3, server_cfg=cfg)
+    serve_waves(router.submit, router.run_until_drained, 1)  # route the cells
+    t0 = time.perf_counter()
+    serve_waves(router.submit, router.run_until_drained, n_waves)
+    fleet_rps = len(seq_lens) * wave * n_waves / (time.perf_counter() - t0)
+    s = router.summary()
+    assert s["lost"] == 0 and s["duplicates"] == 0, s
+    assert len(set(s["cell_owners"].values())) == 3, s["cell_owners"]
+    rates = s["plan_cache_hit_rates"]
+    for name, rate in rates.items():
+        assert rate >= single_rate - 1e-9, (
+            f"replica {name} hit rate {rate:.3f} fell below the single-server "
+            f"baseline {single_rate:.3f}: sharding broke cache locality"
+        )
+    us = 1e6 / single_rps
+    row(
+        "sys_fleet",
+        us,
+        f"fleet_rps={fleet_rps:.0f};single_rps={single_rps:.0f};replicas=3;"
+        f"cells={len(seq_lens)};hit_rate_single={single_rate:.2f};"
+        f"hit_rate_replicas_min={min(rates.values()):.2f};"
+        f"warm_first_wave_ms={warm_ms:.0f};cold_first_wave_ms={cold_ms:.0f};"
+        f"warm_speedup={cold_ms / warm_ms:.1f}x;"
+        f"lost={s['lost']};dup={s['duplicates']}",
+    )
+
+
 def bench_grad_compress():
     import jax
     import jax.numpy as jnp
@@ -551,6 +655,7 @@ def main(argv=None) -> None:
     bench_serving_compiled()
     bench_seq_buckets()
     bench_autotune()
+    bench_fleet()
     if not args.smoke:
         bench_w8a8_decode()
         bench_grad_compress()

@@ -95,3 +95,6 @@ from .plan import (  # noqa: F401
     resolve_bucketing,
 )
 from .registry import UnknownKernelError, backends_for, kernel_ids, lookup, register  # noqa: F401
+
+# last: artifact lazily imports repro.core.compile, which imports this package
+from .artifact import ARTIFACT_SCHEMA, load_artifact, save_artifact, sidecar_path  # noqa: F401,E402

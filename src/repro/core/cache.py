@@ -58,6 +58,12 @@ class LruCache:
             _trace.event(f"cache.{self.scope}.miss", key=str(key))
         return default
 
+    def peek(self, key: Hashable, default: Any = None) -> Any:
+        """Read an entry without touching hit/miss counters, recency order or
+        the obs plane — for introspection (e.g. serializing the resident
+        entries into an AOT artifact), never for the serving path."""
+        return self._entries.get(key, default)
+
     def put(self, key: Hashable, value: Any) -> None:
         if key in self._entries:
             self._entries.move_to_end(key)

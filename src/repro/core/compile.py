@@ -101,13 +101,16 @@ from ..passes.analysis import (
     implicit_batch_graph,
 )
 from ..passes.rewrite import Match, OpSpec, Pattern, match_chain, ql_params
+from . import runtime
 from .pqir import Model, Node
 
 # ---------------------------------------------------------------------------
 # fusion: declarative pattern specs + plan-step builders
 # ---------------------------------------------------------------------------
 
-_NP_ACT = {"Tanh": np.tanh, "Sigmoid": lambda x: (1.0 / (1.0 + np.exp(-x.astype(np.float32)))).astype(x.dtype)}
+# activation references the LUT builder bakes; Sigmoid uses the same
+# overflow-safe form as the reference runtime so LUTs stay bit-exact vs it
+_NP_ACT = {"Tanh": np.tanh, "Sigmoid": runtime.stable_sigmoid}
 
 
 def _is_round_clip_ql(ga: GraphAnalysis, node: Node) -> bool:
@@ -445,8 +448,14 @@ class Compiler:
             self.dynamic_axes = {
                 a: resolve_bucketing(dynamic_axes.get(a)) for a in available if a in dynamic_axes
             }
+            # raw (pre-resolution) bucketing specs: what an AOT artifact
+            # serializes, since the resolved policies are callables
+            self.axis_specs = {
+                a: dynamic_axes.get(a) for a in available if a in dynamic_axes
+            }
         else:
             self.dynamic_axes = {}
+            self.axis_specs = {}
         self.plan_cache_capacity = plan_cache_capacity
         self.inits = {k: v for k, v in self.graph.initializers.items()}
         self.analysis = GraphAnalysis(self.graph)
@@ -504,6 +513,7 @@ class Compiler:
             self.model, plan, self.stats, self.pass_report,
             plan_cache_capacity=self.plan_cache_capacity,
             dynamic_axes=self.dynamic_axes,
+            axis_specs=self.axis_specs,
             autotuner=self.autotuner,
         )
 
@@ -569,10 +579,21 @@ class CompiledModel:
         *,
         plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
         dynamic_axes: Optional[Dict[str, object]] = None,
+        axis_specs: Optional[Dict[str, object]] = None,
         autotuner=None,
     ) -> None:
         self.model = model
         self.plan = plan
+        #: per-axis raw bucketing specs (None / int / callable) as declared at
+        #: compile time — the serializable counterpart of ``dynamic_axes``,
+        #: whose values are already-resolved policy callables
+        self.plan_cache_capacity = plan_cache_capacity
+        if plan.batch == "dynamic":
+            self.axis_specs: Dict[str, object] = (
+                dict(axis_specs) if axis_specs is not None else {a: None for a in plan.axes}
+            )
+        else:
+            self.axis_specs = {}
         #: optional repro.backend.autotune.Autotuner — when set, every lazy
         #: specialization routes its tile choice through the measured search
         self.autotuner = autotuner

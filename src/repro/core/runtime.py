@@ -150,11 +150,26 @@ def _tanh(node: Node, inputs):
     return [np.tanh(x).astype(x.dtype)]
 
 
+def stable_sigmoid(x: np.ndarray) -> np.ndarray:
+    """Numerically stable logistic in float32, cast back to ``x.dtype``.
+
+    The naive ``1/(1+exp(-x))`` overflows ``exp`` for large-magnitude
+    negative inputs (int-dequantized activations easily reach them).  The
+    two-branch form only ever exponentiates ``-|x|`` ∈ (-inf, 0], which
+    cannot overflow; both branches are algebraically identical to the naive
+    form.  The LUT fusion bakes this exact function (see
+    ``repro.core.compile._NP_ACT``), so compiled LUTs stay bit-exact
+    against this reference."""
+    x = np.asarray(x)
+    z = x.astype(np.float32)
+    e = np.exp(-np.abs(z))
+    y = np.where(z >= 0, 1.0 / (1.0 + e), e / (1.0 + e))
+    return y.astype(x.dtype)
+
+
 @op("Sigmoid")
 def _sigmoid(node: Node, inputs):
-    x = inputs[0].astype(np.float32)
-    y = 1.0 / (1.0 + np.exp(-x))
-    return [y.astype(inputs[0].dtype)]
+    return [stable_sigmoid(inputs[0])]
 
 
 @op("Erf")

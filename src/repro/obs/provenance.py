@@ -137,6 +137,28 @@ class PlanProvenance:
             lines.append(f"{pad}  trace: {self.trace_id}")
         return "\n".join(lines)
 
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PlanProvenance":
+        """Inverse of :meth:`to_dict` — reconstructs the record from its
+        JSON-able form (AOT artifacts round-trip provenance through this).
+        ``to_dict(from_dict(d)) == d`` for any ``to_dict`` output."""
+        prov = cls(
+            nodes_before=int(d.get("nodes_before", 0)),
+            nodes_after=int(d.get("nodes_after", 0)),
+            pass_iterations=int(d.get("pass_iterations", 0)),
+            trace_id=d.get("trace_id"),
+        )
+        for e in d.get("passes", ()):
+            prov.add_pass(int(e["iteration"]), str(e["name"]), dict(e["counters"]))
+        for f in d.get("fusions", ()):
+            prov.add_fusion(
+                str(f["pattern"]), str(f["anchor"]),
+                tuple(f["nodes"]), str(f["output"]),
+            )
+        for s in d.get("specializations", ()):
+            prov.add_specialization(dict(s["bindings"]), dict(s["tiles"]))
+        return prov
+
     def to_dict(self) -> Dict[str, Any]:
         """JSON-able form (what ``benchmarks/run.py --trace`` embeds)."""
         return {

@@ -4,3 +4,4 @@ from .compiled import (  # noqa: F401
     CompiledServerConfig,
 )
 from .engine import EngineConfig, Request, ServeEngine, sample_token  # noqa: F401
+from .router import RoutedRequest, RouterConfig, ShardedRouter  # noqa: F401

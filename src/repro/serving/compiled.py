@@ -115,6 +115,8 @@ class CompiledModelServer:
         *,
         registry: Optional[MetricsRegistry] = None,
         autotuner=None,
+        name: str = "",
+        uid_start: int = 0,
     ) -> None:
         if not cm.is_dynamic:
             raise ValueError(
@@ -165,8 +167,13 @@ class CompiledModelServer:
             self._seq_pos = pos - 1  # example-local (batch dim stripped)
         else:
             self._seq_pos = None
+        #: replica name when fronted by a router — stamps every span with a
+        #: ``replica=`` attribute so fleet traces separate by owner
+        self.name = name
         self.queue: Deque[CompiledRequest] = deque()
-        self._uid = 0
+        # a router shares the uid space across replicas by offsetting each
+        # replica's counter — uids stay fleet-unique for trace/fleet accounting
+        self._uid = uid_start
         # per-instance registry unless the caller injects a shared one; the
         # plan cache publishes its canonical cache.plan.* gauges into it
         self.registry = registry if registry is not None else MetricsRegistry()
@@ -261,10 +268,12 @@ class CompiledModelServer:
         n = min(len(self.queue), self.cfg.max_batch)
         reqs = [self.queue.popleft() for _ in range(n)]
         with _trace.span("serve.step", n=n) as step_span:
-            # queue wait ends at dequeue; what follows is coalesce + compute
+            if _trace.enabled and self.name:
+                step_span.set(replica=self.name)
+            # queue wait ends at dequeue, but is only *observed* after the
+            # batch succeeds — a failed batch re-queues its requests, and
+            # observing here would count each retried request once per attempt
             t_deq = time.monotonic()
-            for r in reqs:
-                self._queue_wait.observe((t_deq - r.t_submit) * 1e3)
             # batch assembly AND execution both re-queue on failure: a failure
             # anywhere here (a shape mismatch np.stack rejects, a backend/jit
             # error) must not lose the coalesced requests — they go back to
@@ -293,8 +302,15 @@ class CompiledModelServer:
                 with _trace.span("serve.compute"):
                     outs = self.cm.run({self.input_name: batch})
             except Exception:
+                # back to the head of the queue in original order; their
+                # serve.request async spans stay open — each closes exactly
+                # once, when the request is finally served
                 self.queue.extendleft(reversed(reqs))
                 raise
+            # dequeue is now final: observe each request's queue wait exactly
+            # once (measured at dequeue, not at completion)
+            for r in reqs:
+                self._queue_wait.observe((t_deq - r.t_submit) * 1e3)
             bucket = self.cm.bucket_for(BATCH_AXIS, n)
             cell_bindings = {BATCH_AXIS: bucket}
             self._count("batches")

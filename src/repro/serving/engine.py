@@ -181,6 +181,24 @@ class ServeEngine:
 
     # -- request lifecycle ----------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Admission-time validation, then enqueue (same discipline as
+        ``CompiledModelServer.submit``: reject at the boundary, never let a
+        bad request reach the batched hot loop)."""
+        plen = len(req.prompt)
+        if plen < 1:
+            raise ValueError("prompt must contain at least one token")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {req.max_new_tokens}")
+        bucket = bucket_multiple(plen, self.ecfg.prefill_bucket)
+        if bucket > self.ecfg.max_len or (req.max_new_tokens > 1 and plen >= self.ecfg.max_len):
+            # the per-slot KV cache is init_cache(cfg, 1, max_len): a prefill
+            # bucket beyond it (or a decode position at max_len) would clip
+            # the cache write silently — reject instead
+            raise ValueError(
+                f"prompt of {plen} tokens (prefill bucket {bucket}) does not fit the "
+                f"per-slot KV cache (max_len={self.ecfg.max_len}); shorten the prompt "
+                "or raise EngineConfig.max_len"
+            )
         req.t_submit = time.monotonic()
         req.generated = []
         self.queue.append(req)
@@ -204,29 +222,38 @@ class ServeEngine:
 
     def _admit(self) -> None:
         for slot in range(self.ecfg.slots):
-            if self.slot_live[slot] or not self.queue:
-                continue
-            req = self.queue.popleft()
-            plen = len(req.prompt)
-            bucket = bucket_multiple(plen, self.ecfg.prefill_bucket)
-            padded = np.zeros((1, bucket), np.int32)
-            padded[0, :plen] = req.prompt
-            pcache = M.init_cache(self.cfg, 1, self.ecfg.max_len)
-            with _trace.span("engine.prefill", uid=req.uid, plen=plen, bucket=bucket):
-                logits, pcache = self._prefill_fn(bucket)(self.params, jnp.asarray(padded), pcache)
-            # prefill wrote [0, bucket); only [0, plen) is meaningful — the
-            # causal mask means padding beyond plen is never attended by
-            # positions < plen, and decode continues exactly at plen.
-            first_logits, _ = self._logits_at(padded, plen, logits, pcache)
-            self._scatter_cache(slot, pcache)
-            tok = self._select(first_logits)
-            req.generated.append(tok)
-            req.t_first = time.monotonic()
-            self.active[slot] = req
-            self.slot_pos[slot] = plen
-            self.slot_live[slot] = True
-            self.slot_budget[slot] = req.max_new_tokens - 1
-            self._count("prefills")
+            # a request whose budget is exhausted by the prefill token never
+            # occupies the slot, so keep admitting until it is actually filled
+            while not self.slot_live[slot] and self.queue:
+                req = self.queue.popleft()
+                plen = len(req.prompt)
+                bucket = bucket_multiple(plen, self.ecfg.prefill_bucket)
+                padded = np.zeros((1, bucket), np.int32)
+                padded[0, :plen] = req.prompt
+                pcache = M.init_cache(self.cfg, 1, self.ecfg.max_len)
+                with _trace.span("engine.prefill", uid=req.uid, plen=plen, bucket=bucket):
+                    logits, pcache = self._prefill_fn(bucket)(self.params, jnp.asarray(padded), pcache)
+                # prefill wrote [0, bucket); only [0, plen) is meaningful — the
+                # causal mask means padding beyond plen is never attended by
+                # positions < plen, and decode continues exactly at plen.
+                first_logits, _ = self._logits_at(padded, plen, logits, pcache)
+                tok = self._select(first_logits)
+                req.generated.append(tok)
+                req.t_first = time.monotonic()
+                self._count("prefills")
+                if req.max_new_tokens <= 1:
+                    # the prefill token already spent the whole budget: done at
+                    # admit — decoding the slot once more would emit a second
+                    # token and violate max_new_tokens
+                    req.done = True
+                    req.t_done = req.t_first
+                    self._count("completed")
+                    continue
+                self._scatter_cache(slot, pcache)
+                self.active[slot] = req
+                self.slot_pos[slot] = plen
+                self.slot_live[slot] = True
+                self.slot_budget[slot] = req.max_new_tokens - 1
 
     def _logits_at(self, padded, plen, last_logits, pcache):
         """Logits for the true last prompt token (bucket may extend past it)."""

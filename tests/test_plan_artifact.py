@@ -1,0 +1,360 @@
+"""AOT plan artifacts: save/load round-trips that survive a process boundary.
+
+The contract under test: ``load_artifact`` rebuilds a served compiled model
+**without re-running passes, fusion or lowering** (no ``compile.fuse`` /
+``compile.lower`` span ever fires on load), pre-seeds the plan cache with the
+hot scenario cells recorded at save (so serving the recorded traffic
+specializes nothing new), and round-trips provenance — including the
+``[tuned]`` source tags on measured tile choices.
+"""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.backend.artifact import (
+    ARTIFACT_SCHEMA,
+    load_artifact,
+    save_artifact,
+    sidecar_path,
+)
+from repro.backend.plan import bindings_key
+from repro.core.compile import compile_model
+from repro.core.toolchain import MLPSpec, quantize_mlp
+from repro.obs import trace as _trace
+
+
+def _mlp_model(seed=21, name="aot_mlp"):
+    rng = np.random.default_rng(seed)
+    spec = MLPSpec(
+        weights=[
+            rng.normal(size=(16, 32)).astype(np.float32) * 0.2,
+            rng.normal(size=(32, 8)).astype(np.float32) * 0.2,
+        ],
+        biases=[
+            rng.normal(size=(32,)).astype(np.float32) * 0.1,
+            rng.normal(size=(8,)).astype(np.float32) * 0.1,
+        ],
+        activations=["Relu", None],
+    )
+    calib = rng.normal(size=(64, 16)).astype(np.float32)
+    return quantize_mlp(spec, calib, name=name), rng
+
+
+def _seq_model():
+    """A ('N', 'S', 16) two-axis model: the artifact's hot cells live on a
+    (batch bucket x seq bucket) grid, not a single free axis."""
+    from repro.core import patterns, pqir, quant
+
+    rng = np.random.default_rng(31)
+    p = quant.quantize_linear_layer(
+        rng.normal(size=(16, 8)).astype(np.float32) * 0.2,
+        rng.normal(size=(8,)).astype(np.float32) * 0.1, 0.05, 0.1,
+    )
+    gb = pqir.GraphBuilder("aot_seq")
+    x = gb.add_input("x", "int8", ("N", "S", 16))
+    y = patterns.fc_layer(gb, x, p, "fc0", two_mul=True, activation="Relu")
+    gb.add_output(y, "int8", ("N", "S", 8))
+    return gb.build(), rng
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("backend", ["ref", "interpret"])
+    def test_bit_exact_across_the_grid(self, tmp_path, backend):
+        """Outputs from a loaded artifact match a fresh compile bit-for-bit,
+        on recorded cells and on cells the load never saw."""
+        model, rng = _seq_model()
+        cm = compile_model(model, backend=backend, dynamic_axes={"N": None, "S": 8})
+        inp = cm.input_names[0]
+        feeds = {
+            (n, s): rng.integers(-128, 128, (n, s, 16)).astype(np.int8)
+            for n, s in [(2, 5), (4, 8), (2, 13)]
+        }
+        for x in feeds.values():
+            cm.run({inp: x})
+        path = str(tmp_path / "seq.json")
+        save_artifact(cm, path)
+
+        loaded = load_artifact(path)
+        fresh = compile_model(
+            _seq_model()[0], backend=backend, dynamic_axes={"N": None, "S": 8}
+        )
+        # recorded cells + one cell ((8, 24) grid point) neither model has seen
+        feeds[(8, 24)] = rng.integers(-128, 128, (8, 24, 16)).astype(np.int8)
+        for x in feeds.values():
+            got = loaded.run({inp: x})
+            want = fresh.run({inp: x})
+            assert set(got) == set(want)
+            for k in want:
+                np.testing.assert_array_equal(got[k], want[k])
+
+    def test_model_and_plan_structure_survive(self, tmp_path):
+        model, rng = _mlp_model()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        cm.run({cm.input_names[0]: rng.integers(-128, 128, (4, 16)).astype(np.int8)})
+        path = str(tmp_path / "mlp.json")
+        save_artifact(cm, path)
+        loaded = load_artifact(path)
+        assert loaded.input_names == cm.input_names
+        assert loaded.output_names == cm.output_names
+        assert loaded.plan.backend == cm.plan.backend
+        assert loaded.plan.num_slots == cm.plan.num_slots
+        assert loaded.plan.axes == cm.plan.axes
+        assert len(loaded.plan.steps) == len(cm.plan.steps)
+        for a, b in zip(loaded.plan.steps, cm.plan.steps):
+            assert (a.kernel, a.kind, a.name) == (b.kernel, b.kind, b.name)
+            assert a.out_slots == b.out_slots and a.outputs == b.outputs
+            assert set(a.params) == set(b.params)
+        assert loaded.stats == cm.stats
+        assert loaded.axis_specs == cm.axis_specs
+        assert loaded.plan_cache_capacity == cm.plan_cache_capacity
+
+    def test_save_returns_path_and_writes_sidecar(self, tmp_path):
+        model, rng = _mlp_model()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        path = str(tmp_path / "a.json")
+        assert save_artifact(cm, path) == path
+        assert (tmp_path / "a.npz").exists()
+        assert sidecar_path("x/y.json") == "x/y.npz"
+        assert sidecar_path("bare") == "bare.npz"
+
+
+class TestWarmStart:
+    def test_load_emits_no_fuse_or_lower_span(self, tmp_path):
+        """The acceptance gate: zero re-compilation on load.  Only
+        backend.specialize fires (one per pre-seeded cell)."""
+        model, rng = _mlp_model()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        inp = cm.input_names[0]
+        for n in (2, 8):
+            cm.run({inp: rng.integers(-128, 128, (n, 16)).astype(np.int8)})
+        path = str(tmp_path / "warm.json")
+        save_artifact(cm, path)
+
+        tracer = _trace.install()
+        try:
+            loaded = load_artifact(path)
+        finally:
+            _trace.uninstall()
+        assert tracer.spans("compile.fuse") == []
+        assert tracer.spans("compile.lower") == []
+        assert len(tracer.spans("backend.specialize")) == 2
+
+    def test_recorded_cells_serve_with_zero_new_specializations(self, tmp_path):
+        model, rng = _mlp_model()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        inp = cm.input_names[0]
+        xs = [rng.integers(-128, 128, (n, 16)).astype(np.int8) for n in (2, 4, 8)]
+        for x in xs:
+            cm.run({inp: x})
+        path = str(tmp_path / "seeded.json")
+        save_artifact(cm, path)
+
+        loaded = load_artifact(path)
+        # pre-seeding is by put, not get: the counters start clean
+        assert loaded.cache_stats["hits"] == 0 and loaded.cache_stats["misses"] == 0
+        assert sorted(loaded.plan_cache.keys()) == [
+            bindings_key({"N": n}) for n in (2, 4, 8)
+        ]
+        for x in xs:
+            loaded.run({inp: x})
+        stats = loaded.cache_stats
+        assert stats["misses"] == 0  # nothing re-specialized
+        assert stats["hits"] == len(xs)
+        # an unrecorded cell still specializes lazily, exactly once
+        loaded.run({inp: rng.integers(-128, 128, (16, 16)).astype(np.int8)})
+        assert loaded.cache_stats["misses"] == 1
+
+    def test_warm_true_primes_the_jit_traces(self, tmp_path):
+        model, rng = _mlp_model()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        inp = cm.input_names[0]
+        cm.run({inp: rng.integers(-128, 128, (4, 16)).astype(np.int8)})
+        path = str(tmp_path / "jit.json")
+        save_artifact(cm, path)
+        loaded = load_artifact(path, warm=True)
+        out = loaded.run({inp: rng.integers(-128, 128, (4, 16)).astype(np.int8)})
+        assert loaded.cache_stats == {
+            **loaded.cache_stats, "hits": 1, "misses": 0
+        }
+        assert out[loaded.output_names[0]].shape == (4, 8)
+
+
+class TestProvenance:
+    def test_passes_and_fusions_carry_over_verbatim(self, tmp_path):
+        model, rng = _mlp_model()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        inp = cm.input_names[0]
+        cm.run({inp: rng.integers(-128, 128, (4, 16)).astype(np.int8)})
+        path = str(tmp_path / "prov.json")
+        save_artifact(cm, path)
+        loaded = load_artifact(path)
+        want = cm.plan.provenance.to_dict()
+        got = loaded.plan.provenance.to_dict()
+        assert got["passes"] == want["passes"]
+        assert got["fusions"] == want["fusions"]
+        # the live record re-accumulates the hot cells as they are re-seeded
+        assert [ev["bindings"] for ev in got["specializations"]] == [
+            ev["bindings"] for ev in want["specializations"]
+        ]
+        # the artifact JSON itself retains the saved history verbatim
+        # (up to JSON's tuple -> list normalization)
+        doc = json.load(open(path))
+        assert doc["provenance"] == json.loads(json.dumps(want))
+
+    def test_tuned_tile_tags_round_trip(self, tmp_path):
+        """Tiles picked by a measured search must come back `[tuned]`, with
+        the tuned bk/bn choice itself — not the heuristic's."""
+        from repro.backend import cost
+        from repro.backend.autotune import Autotuner
+
+        rng = np.random.default_rng(17)
+        spec = MLPSpec(
+            weights=[rng.normal(0, 0.4, (256, 256)).astype(np.float32) for _ in range(2)],
+            biases=[rng.normal(0, 0.2, (256,)).astype(np.float32) for _ in range(2)],
+            activations=["Relu", None],
+        )
+        calib = rng.normal(0, 1.0, (64, 256)).astype(np.float32)
+        model = quantize_mlp(spec, calib, name="tuned_aot")
+
+        def measure(step, shape, backend):
+            return cost.qmatmul_tile_cost(
+                shape["m"], shape["k"], shape["n"], shape["bm"], shape["bk"], shape["bn"]
+            )
+
+        tuner = Autotuner(measure_fn=measure)
+        cm = compile_model(model, backend="interpret", batch="dynamic", autotune=tuner)
+        inp = cm.input_names[0]
+        cm.run({inp: rng.integers(-128, 128, (8, 256)).astype(np.int8)})
+        key = bindings_key({"N": 8})
+        plan, _ = cm.plan_cache.peek(key)
+        tuned_tiles = {
+            s.name: (s.params["shape"]["bm"], s.params["shape"]["bk"], s.params["shape"]["bn"])
+            for s in plan.steps
+            if isinstance(s.params.get("shape"), dict) and "bm" in s.params["shape"]
+        }
+        assert tuned_tiles  # the 256-wide MLP has a real tile lattice
+
+        path = str(tmp_path / "tuned.json")
+        save_artifact(cm, path)
+        doc = json.load(open(path))
+        by_cell = {tuple(sorted(c["bindings"].items())): c["tiles"] for c in doc["cells"]}
+        recs = by_cell[(("N", 8),)]
+        assert set(recs) == set(tuned_tiles)
+        for name, rec in recs.items():
+            assert rec["source"] == "tuned"
+            assert (rec["bm"], rec["bk"], rec["bn"]) == tuned_tiles[name]
+
+        loaded = load_artifact(path)
+        lplan, _ = loaded.plan_cache.peek(key)
+        got_tiles = {
+            s.name: (s.params["shape"]["bm"], s.params["shape"]["bk"], s.params["shape"]["bn"])
+            for s in lplan.steps
+            if isinstance(s.params.get("shape"), dict) and "bm" in s.params["shape"]
+        }
+        assert got_tiles == tuned_tiles
+        ev = loaded.plan.provenance.specializations[-1]
+        assert ev.tiles and all("[tuned]" in rec for _, rec in ev.tiles)
+        # and the tuned-tile plan still serves bit-exactly
+        x = rng.integers(-128, 128, (8, 256)).astype(np.int8)
+        np.testing.assert_array_equal(
+            loaded.run({inp: x})[loaded.output_names[0]],
+            cm.run({inp: x})[cm.output_names[0]],
+        )
+
+
+class TestRejection:
+    def _saved(self, tmp_path):
+        model, rng = _mlp_model()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        cm.run({cm.input_names[0]: rng.integers(-128, 128, (2, 16)).astype(np.int8)})
+        path = str(tmp_path / "r.json")
+        save_artifact(cm, path)
+        return path
+
+    def test_schema_version_mismatch_rejected(self, tmp_path):
+        path = self._saved(tmp_path)
+        doc = json.load(open(path))
+        doc["schema"] = "repro-plan-v0"
+        json.dump(doc, open(path, "w"))
+        with pytest.raises(ValueError, match="schema"):
+            load_artifact(path)
+
+    def test_missing_schema_rejected(self, tmp_path):
+        path = self._saved(tmp_path)
+        doc = json.load(open(path))
+        del doc["schema"]
+        json.dump(doc, open(path, "w"))
+        with pytest.raises(ValueError, match="schema"):
+            load_artifact(path)
+
+    def test_corrupt_json_rejected(self, tmp_path):
+        path = self._saved(tmp_path)
+        with open(path, "w") as f:
+            f.write('{"schema": "repro-plan-v1", "plan": {')
+        with pytest.raises(ValueError, match="corrupt"):
+            load_artifact(path)
+
+    def test_sidecar_digest_mismatch_rejected(self, tmp_path):
+        path = self._saved(tmp_path)
+        npz = sidecar_path(path)
+        with open(npz, "ab") as f:
+            f.write(b"\x00")  # truncation and tampering look the same: bad digest
+        with pytest.raises(ValueError, match="digest"):
+            load_artifact(path)
+
+    def test_missing_sidecar_rejected(self, tmp_path):
+        import os
+
+        path = self._saved(tmp_path)
+        os.unlink(sidecar_path(path))
+        with pytest.raises(ValueError, match="sidecar"):
+            load_artifact(path)
+
+    def test_callable_bucketing_policy_rejected_at_save(self, tmp_path):
+        model, _ = _mlp_model()
+        cm = compile_model(
+            model, backend="ref", dynamic_axes={"N": lambda n: max(1, n)}
+        )
+        with pytest.raises(ValueError, match="callable"):
+            save_artifact(cm, str(tmp_path / "cb.json"))
+
+
+class TestPlanDiff:
+    def _save(self, tmp_path, tag, batches):
+        model, rng = _mlp_model(name="diffed")
+        cm = compile_model(model, backend="interpret", batch="dynamic")
+        inp = cm.input_names[0]
+        for n in batches:
+            cm.run({inp: rng.integers(-128, 128, (n, 16)).astype(np.int8)})
+        path = str(tmp_path / f"{tag}.json")
+        save_artifact(cm, path)
+        return path
+
+    def _diff(self, a, b):
+        return subprocess.run(
+            [sys.executable, "scripts/plan_diff.py", a, b],
+            capture_output=True, text=True, cwd="/root/repo",
+        )
+
+    def test_self_diff_is_identical(self, tmp_path):
+        a = self._save(tmp_path, "a", (2, 8))
+        r = self._diff(a, a)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "structurally identical" in r.stdout
+
+    def test_cell_set_change_is_structural(self, tmp_path):
+        a = self._save(tmp_path, "a", (2, 8))
+        b = self._save(tmp_path, "b", (2, 16))
+        r = self._diff(a, b)
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "STRUCTURALLY DIFFERENT" in r.stdout
+        assert "N=8" in r.stdout and "N=16" in r.stdout
+
+    def test_non_artifact_input_rejected(self, tmp_path):
+        bad = tmp_path / "x.json"
+        bad.write_text('{"schema": "other"}')
+        r = self._diff(str(bad), str(bad))
+        assert r.returncode == 2

@@ -1,0 +1,356 @@
+"""Sharded replica router: cell affinity, failover, fleet accounting.
+
+The contract under test: N replicas warm-started from one AOT artifact serve
+through one front door; distinct sequence-bucket cells stick to distinct
+replicas (so each replica's plan cache stays hot); a replica failure migrates
+its queue in order onto a healthy replica with zero lost and zero duplicated
+requests; and all replicas publish into one shared metrics registry.
+"""
+import numpy as np
+import pytest
+
+from repro.backend.artifact import save_artifact
+from repro.core.compile import compile_model
+from repro.core.runtime import ReferenceRuntime
+from repro.core.toolchain import MLPSpec, quantize_mlp
+from repro.obs import trace as _trace
+from repro.obs.metrics import MetricsRegistry
+from repro.serving import (
+    CompiledModelServer,
+    CompiledServerConfig,
+    RouterConfig,
+    ShardedRouter,
+)
+
+
+def _batch_model(name="fleet_mlp"):
+    rng = np.random.default_rng(21)
+    spec = MLPSpec(
+        weights=[
+            rng.normal(size=(16, 32)).astype(np.float32) * 0.2,
+            rng.normal(size=(32, 8)).astype(np.float32) * 0.2,
+        ],
+        biases=[
+            rng.normal(size=(32,)).astype(np.float32) * 0.1,
+            rng.normal(size=(8,)).astype(np.float32) * 0.1,
+        ],
+        activations=["Relu", None],
+    )
+    calib = rng.normal(size=(64, 16)).astype(np.float32)
+    return quantize_mlp(spec, calib, name=name), rng
+
+
+def _seq_model():
+    from repro.core import patterns, pqir, quant
+
+    rng = np.random.default_rng(31)
+    p = quant.quantize_linear_layer(
+        rng.normal(size=(16, 8)).astype(np.float32) * 0.2,
+        rng.normal(size=(8,)).astype(np.float32) * 0.1, 0.05, 0.1,
+    )
+    gb = pqir.GraphBuilder("fleet_seq")
+    x = gb.add_input("x", "int8", ("N", "S", 16))
+    y = patterns.fc_layer(gb, x, p, "fc0", two_mul=True, activation="Relu")
+    gb.add_output(y, "int8", ("N", "S", 8))
+    return gb.build(), rng
+
+
+def _seq_artifact(tmp_path, warm_lens=(4, 12, 20)):
+    """Save a two-axis artifact whose hot cells cover the seq buckets the
+    tests route on (batch bucket 4 x seq buckets 8/16/24)."""
+    model, rng = _seq_model()
+    cm = compile_model(model, backend="ref", dynamic_axes={"N": None, "S": 8})
+    srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=4))
+    for s in warm_lens:
+        for _ in range(4):
+            srv.submit(rng.integers(-128, 128, (s, 16)).astype(np.int8))
+        srv.step()
+    path = str(tmp_path / "fleet_seq.json")
+    save_artifact(cm, path)
+    return model, path, rng
+
+
+def _batch_artifact(tmp_path):
+    model, rng = _batch_model()
+    cm = compile_model(model, backend="ref", batch="dynamic")
+    inp = cm.input_names[0]
+    for n in (4, 8):
+        cm.run({inp: rng.integers(-128, 128, (n, 16)).astype(np.int8)})
+    path = str(tmp_path / "fleet_mlp.json")
+    save_artifact(cm, path)
+    return model, path, rng
+
+
+class TestCellAffinity:
+    def test_distinct_seq_cells_land_on_distinct_replicas(self, tmp_path):
+        model, path, rng = _seq_artifact(tmp_path)
+        router = ShardedRouter.from_artifact(
+            path, replicas=3, server_cfg=CompiledServerConfig(max_batch=4), warm=False
+        )
+        lens_by_cell = {8: 4, 12: 4, 20: 4}  # buckets 8, 16, 24
+        reqs = []
+        for s, n in lens_by_cell.items():
+            for _ in range(n):
+                reqs.append(router.submit(rng.integers(-128, 128, (s, 16)).astype(np.int8)))
+        done = router.run_until_drained()
+        assert len(done) == 12 and all(r.done for r in reqs)
+        s = router.summary()
+        # three cells, three replicas: least-loaded placement spreads them 1:1
+        assert sorted(s["cell_owners"]) == ["S=16", "S=24", "S=8"]
+        assert len(set(s["cell_owners"].values())) == 3
+        # every replica served only its own (pre-seeded) cell: no misses
+        for name, rep_summary in s["replicas"].items():
+            assert rep_summary["plan_cache"]["misses"] == 0, name
+        assert all(rate == 1.0 for rate in s["plan_cache_hit_rates"].values())
+        assert s["lost"] == 0 and s["duplicates"] == 0
+
+    def test_cells_are_sticky_across_waves(self, tmp_path):
+        model, path, rng = _seq_artifact(tmp_path)
+        router = ShardedRouter.from_artifact(
+            path, replicas=2, server_cfg=CompiledServerConfig(max_batch=4), warm=False
+        )
+        for _ in range(3):  # three waves on the same two cells
+            for s in (4, 12):
+                for _ in range(4):
+                    router.submit(rng.integers(-128, 128, (s, 16)).astype(np.int8))
+            router.run_until_drained()
+        owners = router.summary()["cell_owners"]
+        assert set(owners) == {"S=8", "S=16"}
+        assert len(set(owners.values())) == 2  # still one cell per replica
+        for rep in router.replicas:
+            assert rep.server.metrics["batches"] == 3  # its cell's waves only
+
+    def test_results_bit_exact_per_request(self, tmp_path):
+        model, path, rng = _seq_artifact(tmp_path)
+        rt = ReferenceRuntime(model)
+        router = ShardedRouter.from_artifact(
+            path, replicas=3, server_cfg=CompiledServerConfig(max_batch=4), warm=False
+        )
+        lens = [3, 12, 20, 7, 18, 4, 23, 9]
+        reqs = [
+            router.submit(rng.integers(-128, 128, (s, 16)).astype(np.int8)) for s in lens
+        ]
+        router.run_until_drained()
+        out = "fc0_q"
+        out_name = next(iter(reqs[0].outputs))
+        for r, s in zip(reqs, lens):
+            assert r.done and r.outputs[out_name].shape == (s, 8)
+            solo = rt.run({"x": r.inner.x[None, :, :]})[out_name][0]
+            np.testing.assert_array_equal(r.outputs[out_name], solo, err_msg=f"uid {r.uid}")
+
+    def test_batch_only_traffic_is_single_cell(self, tmp_path):
+        """With no sequence axis there is only the empty cell: all traffic
+        sticks to one replica (by design — the batch bucket emerges only at
+        coalescing time, so there is nothing to shard on)."""
+        model, path, rng = _batch_artifact(tmp_path)
+        router = ShardedRouter.from_artifact(
+            path, replicas=2, server_cfg=CompiledServerConfig(max_batch=8), warm=False
+        )
+        for _ in range(8):
+            router.submit(rng.integers(-128, 128, (16,)).astype(np.int8))
+        router.run_until_drained()
+        s = router.summary()
+        assert s["cell_owners"] == {"*": "r0"}
+        assert s["completed"] == 8 and s["lost"] == 0
+
+    def test_fleet_unique_uids(self, tmp_path):
+        model, path, rng = _seq_artifact(tmp_path)
+        router = ShardedRouter.from_artifact(
+            path, replicas=3, server_cfg=CompiledServerConfig(max_batch=4), warm=False
+        )
+        reqs = [
+            router.submit(rng.integers(-128, 128, (s, 16)).astype(np.int8))
+            for s in (4, 12, 20) * 3
+        ]
+        assert len({r.uid for r in reqs}) == len(reqs)
+        replicas_used = {r.replica for r in reqs}
+        assert len(replicas_used) == 3  # uid spaces from three strided counters
+
+
+class TestFailover:
+    def test_failed_replica_queue_migrates_in_order(self, tmp_path):
+        model, path, rng = _seq_artifact(tmp_path)
+        router = ShardedRouter.from_artifact(
+            path, replicas=2,
+            server_cfg=CompiledServerConfig(max_batch=4),
+            cfg=RouterConfig(failure_threshold=1),
+            warm=False,
+        )
+        # two cells, one per replica
+        a = [router.submit(rng.integers(-128, 128, (4, 16)).astype(np.int8)) for _ in range(4)]
+        b = [router.submit(rng.integers(-128, 128, (12, 16)).astype(np.int8)) for _ in range(4)]
+        victim = router.replicas[router._cell_owner[a[0].cell]]
+        survivor = next(r for r in router.replicas if r is not victim)
+        victim.server.cm.run = lambda feeds: (_ for _ in ()).throw(RuntimeError("replica down"))
+
+        expect_order = [r.uid for r in victim.server.queue]
+        done = router.run_until_drained()
+        s = router.summary()
+        assert len(done) == 8 and all(r.done for r in a + b)
+        assert s["lost"] == 0 and s["duplicates"] == 0
+        assert s["failovers"] == 1 and s["rerouted"] == 4
+        assert not victim.healthy and survivor.healthy
+        # the migrated requests kept their order and their handles track the
+        # new owner
+        migrated = [r for r in a if r.rerouted]
+        assert [r.uid for r in migrated] == expect_order
+        assert all(r.replica == survivor.name for r in migrated)
+        # the failed replica's cell now points at the survivor
+        assert set(s["cell_owners"].values()) == {survivor.name}
+        assert s["health"][victim.name]["healthy"] is False
+        assert s["registry"][f"fleet.failures.{victim.name}"] == 1
+
+    def test_below_threshold_failure_retries_in_place(self, tmp_path):
+        """A transient failure (threshold not reached) keeps the queue on the
+        replica — the batch is retried there, in order, once it recovers."""
+        model, path, rng = _batch_artifact(tmp_path)
+        router = ShardedRouter.from_artifact(
+            path, replicas=1,
+            server_cfg=CompiledServerConfig(max_batch=8),
+            cfg=RouterConfig(failure_threshold=3),
+            warm=False,
+        )
+        reqs = [router.submit(rng.integers(-128, 128, (16,)).astype(np.int8)) for _ in range(4)]
+        rep = router.replicas[0]
+        real_run = rep.server.cm.run
+        rep.server.cm.run = lambda feeds: (_ for _ in ()).throw(RuntimeError("transient"))
+        assert router.step() == []
+        assert rep.healthy and rep.failures == 1
+        assert [r.uid for r in rep.server.queue] == [r.uid for r in reqs]
+        rep.server.cm.run = real_run
+        done = router.run_until_drained()
+        assert len(done) == 4 and rep.failures == 0
+        assert router.summary()["lost"] == 0
+
+    def test_new_submissions_avoid_the_dead_replica(self, tmp_path):
+        model, path, rng = _seq_artifact(tmp_path)
+        router = ShardedRouter.from_artifact(
+            path, replicas=2,
+            server_cfg=CompiledServerConfig(max_batch=4),
+            cfg=RouterConfig(failure_threshold=1),
+            warm=False,
+        )
+        r1 = router.submit(rng.integers(-128, 128, (4, 16)).astype(np.int8))
+        victim = router.replicas[router._cell_owner[r1.cell]]
+        victim.server.cm.run = lambda feeds: (_ for _ in ()).throw(RuntimeError("down"))
+        # this cycle kills the victim and migrates its queue — the survivor
+        # may serve the migrated request within the same fleet cycle
+        done = router.step()
+        r2 = router.submit(rng.integers(-128, 128, (4, 16)).astype(np.int8))
+        assert r2.replica != victim.name
+        done += router.run_until_drained()
+        assert len(done) == 2 and r1.done and r2.done
+
+    def test_last_replica_failing_raises(self, tmp_path):
+        model, path, rng = _batch_artifact(tmp_path)
+        router = ShardedRouter.from_artifact(
+            path, replicas=1,
+            cfg=RouterConfig(failure_threshold=1),
+            warm=False,
+        )
+        router.submit(rng.integers(-128, 128, (16,)).astype(np.int8))
+        router.replicas[0].server.cm.run = (
+            lambda feeds: (_ for _ in ()).throw(RuntimeError("down"))
+        )
+        with pytest.raises(RuntimeError, match="no healthy replica"):
+            router.step()
+        with pytest.raises(RuntimeError, match="no healthy replica"):
+            router.submit(rng.integers(-128, 128, (16,)).astype(np.int8))
+
+
+class TestFleetObservability:
+    def test_one_registry_aggregates_all_replicas(self, tmp_path):
+        model, path, rng = _seq_artifact(tmp_path)
+        registry = MetricsRegistry()
+        router = ShardedRouter.from_artifact(
+            path, replicas=3,
+            server_cfg=CompiledServerConfig(max_batch=4),
+            registry=registry, warm=False,
+        )
+        for s in (4, 12, 20):
+            for _ in range(4):
+                router.submit(rng.integers(-128, 128, (s, 16)).astype(np.int8))
+        router.run_until_drained()
+        snap = registry.snapshot()
+        # counters are shared: per-replica serve.* increments sum fleet-wide
+        assert snap["serve.requests"] == 12 and snap["serve.completed"] == 12
+        assert snap["fleet.requests"] == 12 and snap["fleet.completed"] == 12
+        assert snap["serve.latency_ms"]["count"] == 12
+        total_batches = sum(
+            r.server.metrics["batches"] for r in router.replicas
+        )
+        assert snap["serve.batches"] == total_batches == 3
+
+    def test_replica_spans_carry_the_replica_attribute(self, tmp_path):
+        model, path, rng = _seq_artifact(tmp_path)
+        router = ShardedRouter.from_artifact(
+            path, replicas=2, server_cfg=CompiledServerConfig(max_batch=4), warm=False
+        )
+        tracer = _trace.install()
+        try:
+            for s in (4, 12):
+                for _ in range(4):
+                    router.submit(rng.integers(-128, 128, (s, 16)).astype(np.int8))
+            router.run_until_drained()
+        finally:
+            _trace.uninstall()
+        steps = tracer.spans("serve.step")
+        assert steps and all("replica" in sp.attrs for sp in steps)
+        assert {sp.attrs["replica"] for sp in steps} == {"r0", "r1"}
+
+    def test_health_surfaces_straggler_state(self, tmp_path):
+        model, path, rng = _batch_artifact(tmp_path)
+        router = ShardedRouter.from_artifact(
+            path, replicas=1, server_cfg=CompiledServerConfig(max_batch=8), warm=False
+        )
+        for _ in range(8):
+            router.submit(rng.integers(-128, 128, (16,)).astype(np.int8))
+        router.run_until_drained()
+        h = router.health()["r0"]
+        assert h["healthy"] and h["steps"] >= 1 and h["queue"] == 0
+        assert h["step_time_ewma_s"] is None or h["step_time_ewma_s"] >= 0.0
+        assert isinstance(h["straggler_steps"], list)
+
+
+class TestConstruction:
+    def test_rejects_empty_fleet_and_bad_config(self, tmp_path):
+        with pytest.raises(ValueError, match="at least one replica"):
+            ShardedRouter([])
+        with pytest.raises(ValueError, match="replicas"):
+            model, path, rng = _batch_artifact(tmp_path)
+            ShardedRouter.from_artifact(path, replicas=0)
+        with pytest.raises(ValueError, match="failure_threshold"):
+            RouterConfig(failure_threshold=0)
+
+    def test_rejects_duplicate_replica_names(self, tmp_path):
+        model, path, rng = _batch_artifact(tmp_path)
+        from repro.backend.artifact import load_artifact
+
+        servers = [
+            CompiledModelServer(load_artifact(path), name="same")
+            for _ in range(2)
+        ]
+        with pytest.raises(ValueError, match="unique"):
+            ShardedRouter(servers)
+
+    def test_rejects_mixed_artifact_shapes(self, tmp_path):
+        _, bpath, _ = _batch_artifact(tmp_path)
+        _, spath, _ = _seq_artifact(tmp_path)
+        from repro.backend.artifact import load_artifact
+
+        servers = [
+            CompiledModelServer(load_artifact(bpath), name="a"),
+            CompiledModelServer(load_artifact(spath), name="b"),
+        ]
+        with pytest.raises(ValueError, match="same artifact shape"):
+            ShardedRouter(servers)
+
+    def test_warm_start_replicas_preseed_every_cache(self, tmp_path):
+        model, path, rng = _seq_artifact(tmp_path)
+        router = ShardedRouter.from_artifact(
+            path, replicas=2, server_cfg=CompiledServerConfig(max_batch=4), warm=True
+        )
+        for rep in router.replicas:
+            stats = rep.server.cm.cache_stats
+            assert stats["size"] == 3  # the three recorded cells
+            assert stats["hits"] == 0 and stats["misses"] == 0

@@ -466,6 +466,63 @@ class TestBackgroundTuning:
             CompiledServerConfig(tune_candidates_per_step=0)
 
 
+class TestRetryAccounting:
+    """A failed batch re-queues and retries — the retry must not double-count
+    queue waits or leak request spans."""
+
+    def _failing_once(self, cm):
+        """cm.run that raises on the first call, then serves normally."""
+        real_run = cm.run
+        state = {"failed": False}
+
+        def run(feeds):
+            if not state["failed"]:
+                state["failed"] = True
+                raise RuntimeError("transient backend failure")
+            return real_run(feeds)
+
+        cm.run = run
+
+    def test_queue_wait_observed_once_per_request(self):
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=4))
+        for x in _examples(rng, 3):
+            srv.submit(x)
+        self._failing_once(cm)
+        with pytest.raises(RuntimeError, match="transient"):
+            srv.step()
+        srv.run_until_drained()
+        snap = srv.registry.snapshot()
+        # 3 requests, each dequeued twice (failure + retry) but each counted
+        # exactly once — at the dequeue that actually served it
+        assert snap["serve.queue_wait_ms"]["count"] == 3
+        assert snap["serve.latency_ms"]["count"] == 3
+        assert srv.metrics["completed"] == 3
+
+    def test_request_spans_balanced_after_retry(self):
+        from repro.obs import trace as _trace
+
+        model, rng = _artifact()
+        cm = compile_model(model, backend="ref", batch="dynamic")
+        srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=4))
+        tracer = _trace.install()
+        try:
+            reqs = [srv.submit(x) for x in _examples(rng, 3)]
+            self._failing_once(cm)
+            with pytest.raises(RuntimeError, match="transient"):
+                srv.step()
+            srv.run_until_drained()
+        finally:
+            _trace.uninstall()
+        # each request's async serve.request span opens once and closes once
+        # — a failed attempt neither closes nor re-opens it
+        begins = [r for r in tracer.records if r.kind == "async_b" and r.name == "serve.request"]
+        ends = [r for r in tracer.records if r.kind == "async_e" and r.name == "serve.request"]
+        assert sorted(r.aid for r in begins) == [r.uid for r in reqs]
+        assert sorted(r.aid for r in ends) == [r.uid for r in reqs]
+
+
 class TestUniformCacheMetrics:
     def test_plan_cache_hit_rate_is_the_lru_rate(self):
         """summary()['plan_cache_hit_rate'] is LruCache's own hit_rate — one

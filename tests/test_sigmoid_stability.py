@@ -1,0 +1,97 @@
+"""Numerically stable sigmoid: no overflow at any input magnitude, and the
+LUT fusion stays bit-exact against the reference runtime.
+
+The naive ``1/(1+exp(-x))`` overflows ``exp`` for large-magnitude negative
+inputs (dequantized int activations reach them easily).  The runtime's
+``stable_sigmoid`` only ever exponentiates ``-|x|``, which cannot overflow;
+``repro.core.compile._NP_ACT`` bakes the *same* function into the 256-entry
+activation LUT, so the fused kernel and the per-element reference agree bit
+for bit.
+"""
+import numpy as np
+import pytest
+
+from repro.core import patterns, pqir, quant
+from repro.core.compile import _NP_ACT, compile_model
+from repro.core.runtime import ReferenceRuntime, stable_sigmoid
+from repro.kernels.qact_lut import build_lut
+
+
+class TestStableSigmoid:
+    def test_no_overflow_at_any_magnitude(self):
+        x = np.array([-1e4, -500.0, -88.0, -20.0, 0.0, 20.0, 88.0, 500.0, 1e4],
+                     np.float32)
+        with np.errstate(over="raise"):
+            y = stable_sigmoid(x)
+        assert np.all((y >= 0.0) & (y <= 1.0))
+        assert y[0] == 0.0 and y[-1] == 1.0  # saturates, never NaN/inf
+        assert np.isfinite(y).all()
+
+    def test_matches_naive_form_in_the_safe_range(self):
+        x = np.linspace(-30, 30, 2001, dtype=np.float32)
+        naive = (1.0 / (1.0 + np.exp(-x.astype(np.float64)))).astype(np.float32)
+        np.testing.assert_allclose(stable_sigmoid(x), naive, rtol=0, atol=2e-7)
+
+    def test_preserves_dtype(self):
+        for dt in (np.float16, np.float32, np.float64):
+            y = stable_sigmoid(np.array([-1000.0, 2.0], dt))
+            assert y.dtype == dt
+            assert np.isfinite(y.astype(np.float64)).all()
+
+    def test_reference_runtime_sigmoid_op_is_stable(self):
+        gb = pqir.GraphBuilder("sig")
+        x = gb.add_input("x", "float32", (None, 4))
+        y = gb.op("Sigmoid", [x])
+        gb.add_output(y, "float32", (None, 4))
+        rt = ReferenceRuntime(gb.build())
+        feeds = {"x": np.array([[-4000.0, -100.0, 100.0, 4000.0]], np.float32)}
+        with np.errstate(over="raise"):
+            out = rt.run(feeds)[y]
+        assert np.isfinite(out).all() and np.all((out >= 0.0) & (out <= 1.0))
+        # sigmoid(-100) is a subnormal (~4e-44), not exactly zero
+        np.testing.assert_allclose(out, [[0.0, 0.0, 1.0, 1.0]], rtol=0, atol=1e-40)
+
+
+class TestLutBitExactness:
+    def test_lut_table_pins_the_stable_form(self):
+        """The compiler's activation table (_NP_ACT) must be stable_sigmoid
+        itself — the LUT bakes whatever the reference executes, so the two
+        stay bit-exact by construction."""
+        assert _NP_ACT["Sigmoid"] is stable_sigmoid
+        # and the baked table matches an independently computed stable
+        # reference over all 256 codes, including scales that push the
+        # dequantized domain far into saturation
+        for in_scale in (8.0 / 127.0, 100.0, 1e4):
+            lut = build_lut(stable_sigmoid, in_scale, 1.0 / 255.0, "uint8")
+            codes = np.arange(-128, 128, dtype=np.int32).astype(np.float32)
+            z = (codes * np.float32(in_scale)).astype(np.float64)
+            e = np.exp(-np.abs(z))
+            ref = np.where(z >= 0, 1.0 / (1.0 + e), e / (1.0 + e)).astype(np.float32)
+            q = np.clip(np.rint(ref / np.float32(1.0 / 255.0)), 0, 255).astype(np.uint8)
+            np.testing.assert_array_equal(lut, q)
+
+    @pytest.mark.parametrize("backend", ["ref", "interpret"])
+    def test_fused_sigmoid_lut_bit_exact_vs_reference(self, backend):
+        """Fig-6 artifact (FC + fp16 sigmoid → uint8): the compiled LUT path
+        must agree with the per-element reference on every one of the 256
+        reachable int8 codes."""
+        rng = np.random.default_rng(5)
+        w = rng.normal(size=(32, 16)).astype(np.float32) * 0.3
+        b = rng.normal(size=(16,)).astype(np.float32) * 0.1
+        p = quant.quantize_linear_layer(
+            w, b, 4.0 / 127.0, patterns.SIGMOID_INPUT_ABSMAX / 127.0
+        )
+        gb = pqir.GraphBuilder("figsig")
+        xi = gb.add_input("input_q", "int8", (None, 32))
+        y = patterns.fc_fp16_sigmoid(gb, xi, p, "fc0")
+        gb.add_output(y, "uint8", (None, 16))
+        model = gb.build()
+
+        xq = rng.integers(-128, 128, (64, 32)).astype(np.int8)
+        with np.errstate(over="raise"):
+            want = ReferenceRuntime(model).run({"input_q": xq})[y]
+        cm = compile_model(model, backend=backend)
+        assert cm.stats["fused_lut"] == 1
+        got = cm.run({"input_q": xq})[y]
+        assert got.dtype == np.uint8
+        np.testing.assert_array_equal(got, want)
