@@ -10,7 +10,11 @@ tile search and the per-candidate evidence table is printed.  All timing
 goes through the shared seeded warmup + median-of-k helper
 (:func:`repro.backend.autotune.measure_median`), so tuned-vs-heuristic
 deltas are reproducible run to run — ``--seed/--repeat/--warmup`` pin the
-measurement discipline explicitly.
+measurement discipline explicitly, and ``--bits 4`` probes the packed
+sub-8-bit weight lane.  Every analytic number (tile prices, HBM bytes,
+roofline terms) comes from :mod:`repro.backend.cost` — the single source
+of truth the autotuner and ``benchmarks/roofline.py`` also read — so the
+int4 byte accounting can never fork.
 """
 from __future__ import annotations
 
@@ -30,6 +34,7 @@ def measure_tiles(args) -> int:
 
     import numpy as np
 
+    from repro.backend import cost
     from repro.backend.autotune import Autotuner
     from repro.core.compile import compile_model
     from repro.core.toolchain import MLPSpec, quantize_mlp
@@ -42,7 +47,7 @@ def measure_tiles(args) -> int:
         activations=[None],
     )
     calib = rng.normal(0, 1.0, (64, d)).astype(np.float32)
-    model = quantize_mlp(spec, calib, name="decode_tile_probe")
+    model = quantize_mlp(spec, calib, weight_bits=args.bits, name="decode_tile_probe")
 
     cache = os.path.join(tempfile.mkdtemp(prefix="hillclimb-tiles-"), "tiles.json")
     tuner = Autotuner(
@@ -54,7 +59,7 @@ def measure_tiles(args) -> int:
 
     print(
         f"decode-shaped tile search: d={d} cell N={args.cell} budget={args.budget} "
-        f"repeat={args.repeat} warmup={args.warmup} seed={args.seed}"
+        f"repeat={args.repeat} warmup={args.warmup} seed={args.seed} bits={args.bits}"
     )
     for key, entry in sorted(tuner.cache.store.entries.items()):
         print(f"  {key}")
@@ -62,9 +67,19 @@ def measure_tiles(args) -> int:
         for tiles, us in sorted(entry["candidates_us"].items(), key=lambda kv: kv[1]):
             bm, bk, bn = tiles.split(",")
             mark = " <- tuned" if us == entry["best_us"] else ""
+            # analytic price from the shared cost model (the same numbers
+            # that seeded the search) — including the bits-aware HBM bytes,
+            # so the measured-vs-model gap is readable per candidate
+            est_us = cost.qmatmul_tile_cost(
+                args.cell, d, d, int(bm), int(bk), int(bn), weight_bits=args.bits
+            ) * 1e6
+            hbm_kib = cost.qmatmul_hbm_bytes(
+                args.cell, d, d, int(bm), int(bk), int(bn), weight_bits=args.bits
+            ) / 1024.0
             print(
                 f"    bm={bm:>4s} bk={bk:>4s} bn={bn:>4s}  {us:9.1f}us "
-                f"({us / heur_us:.2f}x vs heuristic){mark}"
+                f"({us / heur_us:.2f}x vs heuristic)  "
+                f"model={est_us:.3f}us hbm={hbm_kib:.0f}KiB{mark}"
             )
         print(
             f"    tuned {entry['best_us']:.1f}us vs heuristic {heur_us:.1f}us "
@@ -128,6 +143,11 @@ def main(argv=None) -> int:
     ap.add_argument("--repeat", type=int, default=5, help="median-of-k repeat count")
     ap.add_argument("--warmup", type=int, default=2, help="discarded warmup calls")
     ap.add_argument("--seed", type=int, default=0, help="rng seed for probe data")
+    ap.add_argument(
+        "--bits", type=int, default=8, choices=(4, 8),
+        help="weight bitwidth of the measured probe (4 = packed sub-8-bit "
+        "lane; the cost-model columns use the same bits-aware accounting)",
+    )
     args = ap.parse_args(argv)
     if args.measure_tiles:
         return measure_tiles(args)

@@ -44,6 +44,7 @@ from repro.backend.cost import (  # noqa: F401  (re-exported)
     PEAK_BF16,
     PEAK_INT8,
     TPU_V5E,
+    roofline_fraction,
     roofline_terms,
 )
 
@@ -261,7 +262,8 @@ def roofline_cell(arch: str, shape_name: str, *, multi_pod: bool = False, w8a8: 
         per_dev["bytes"] += 24 * n_dev
     per_dev.update(analytic_memory_bytes(cfg, sc, counts, w8a8=w8a8))
 
-    t_mem_hlo = per_dev["bytes"] / HBM_BW  # unfused upper bound (CPU HLO)
+    # unfused upper bound (CPU HLO) — same T_mem arithmetic as the floor below
+    t_mem_hlo = roofline_terms(0.0, per_dev["bytes"])["t_mem_s"]
     # fused analytic floor for T_mem; T_comp/T_coll straight from the probes
     terms = roofline_terms(
         per_dev["flops"], per_dev["mem_min_bytes"], per_dev["coll_bytes"]
@@ -274,7 +276,7 @@ def roofline_cell(arch: str, shape_name: str, *, multi_pod: bool = False, w8a8: 
     useful = mf / hlo_total_flops if hlo_total_flops else 0.0
     # roofline fraction: model-useful FLOPs per second vs fleet peak,
     # at the bound implied by the dominant term
-    mfu_bound = (mf / step_time) / (CHIPS * PEAK_BF16) if step_time else 0.0
+    mfu_bound = roofline_fraction(mf, step_time)
 
     return {
         "arch": arch, "shape": shape_name, "status": "ok", "multi_pod": multi_pod, "w8a8": w8a8,

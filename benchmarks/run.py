@@ -36,6 +36,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
                            per-replica plan-cache hit rates pinned ≥ the
                            single-server baseline, warm vs cold first-wave
                            latency, lost/dup request counters)
+  sys_int4_decode        — sub-8-bit weight lane on the decode path: one
+                           MLP quantized at weight_bits 8 vs 4 on the tiled
+                           interpret backend, decode-shaped cells M ∈ {1,8}
+                           (derived: tokens/s both ways per cell, cost-model
+                           HBM-byte ratio; asserts packed-int4 bit-exact vs
+                           the unpacked reference and w4 weight bytes ≤
+                           0.55× w8)
   sys_w8a8_decode        — reduced-arch decode step: bf16 vs W8A8+int8-KV
   sys_grad_compress      — int8 cross-pod gradient all-reduce (derived: wire-
                            bytes ratio vs f32)
@@ -43,7 +50,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
 Run:  PYTHONPATH=src python -m benchmarks.run [--smoke] [--json PATH]
 
 ``--smoke`` runs the fast subset (fig1, pass pipeline, plan overhead,
-per-channel overhead, serving-compiled, seq buckets, autotune, fleet) for CI.  ``--json BENCH_<n>.json``
+per-channel overhead, serving-compiled, seq buckets, autotune, fleet,
+int4 decode) for CI.  ``--json BENCH_<n>.json``
 additionally persists the rows as JSON so the perf trajectory survives
 across PRs (CI uploads the file as a build artifact).
 """
@@ -586,6 +594,71 @@ def bench_fleet():
     )
 
 
+def bench_int4_decode():
+    """Sub-8-bit weight lane on the decode path: one 1-layer MLP quantized
+    twice from identical float weights (``weight_bits`` 8 vs 4), compiled on
+    the tiled interpret backend, timed at decode-shaped cells M ∈ {1, 8}
+    (one token per sequence → tokens/s = M / step time).  The packed-int4
+    output must be bit-exact against the *unpacked* int4 reference runtime
+    (the lane's oracle — see docs/quantization.md) at every cell, and the
+    shared cost model must price the w4 weight stream at ≤ 0.55× the w8
+    bytes (it is exactly 0.5×: two nibbles per byte)."""
+    from repro.backend import cost
+    from repro.core.compile import compile_model
+    from repro.core.runtime import ReferenceRuntime
+    from repro.core.toolchain import MLPSpec, quantize_mlp
+    from repro.kernels.qmatmul import choose_tiles
+
+    d = 1024
+
+    def build(bits):
+        rng = np.random.default_rng(7)  # identical float weights both ways
+        spec = MLPSpec(
+            weights=[rng.normal(size=(d, d)).astype(np.float32) * 0.05],
+            biases=[rng.normal(size=(d,)).astype(np.float32) * 0.1],
+            activations=[None],
+        )
+        calib = rng.normal(size=(64, d)).astype(np.float32)
+        return quantize_mlp(spec, calib, weight_bits=bits, name=f"decode_w{bits}")
+
+    m8, m4 = build(8), build(4)
+    cm8 = compile_model(m8, backend="interpret", batch="dynamic")
+    cm4 = compile_model(m4, backend="interpret", batch="dynamic")
+    rt4 = ReferenceRuntime(m4)
+
+    rng = np.random.default_rng(8)
+    cells = (1, 8)
+    parts, best_speedup = [], 0.0
+    for M in cells:
+        feeds = {"input_q": rng.integers(-128, 128, (M, d)).astype(np.int8)}
+        out4, ref4 = cm4.run(feeds), rt4.run(feeds)
+        exact = all(np.array_equal(out4[k], ref4[k]) for k in out4)
+        assert exact, f"packed int4 diverged from the unpacked reference at M={M}"
+        us8 = _timeit(lambda: cm8.run(feeds))
+        us4 = _timeit(lambda: cm4.run(feeds))
+        best_speedup = max(best_speedup, us8 / us4)
+        parts.append(
+            f"tok_s_b{M}_w8={M / (us8 * 1e-6):.0f};tok_s_b{M}_w4={M / (us4 * 1e-6):.0f};"
+            f"speedup_b{M}={us8 / us4:.2f}x"
+        )
+    # analytic HBM accounting from the single source of truth (backend.cost),
+    # at the tiles the decode cell actually specializes to
+    bm, bk, bn = choose_tiles(cells[0], d, d)
+    hbm8 = cost.qmatmul_hbm_bytes(cells[0], d, d, bm, bk, bn, weight_bits=8)
+    hbm4 = cost.qmatmul_hbm_bytes(cells[0], d, d, bm, bk, bn, weight_bits=4)
+    w4_w = hbm8 - hbm4  # the packed stream: exactly the halved weight term
+    weight_ratio = w4_w / (2.0 * w4_w)
+    assert weight_ratio <= 0.55, f"w4 weight bytes {weight_ratio:.2f}x of w8"
+    us_ref4 = _timeit(lambda: rt4.run({"input_q": rng.integers(-128, 128, (1, d)).astype(np.int8)}), repeat=5)
+    row(
+        "sys_int4_decode",
+        us_ref4,
+        ";".join(parts)
+        + f";weight_bytes_ratio={weight_ratio:.2f}x;hbm_est_ratio={hbm4 / hbm8:.2f}x;"
+        f"best_speedup={best_speedup:.2f}x;bitexact=True;width={d}",
+    )
+
+
 def bench_grad_compress():
     import jax
     import jax.numpy as jnp
@@ -656,6 +729,7 @@ def main(argv=None) -> None:
     bench_seq_buckets()
     bench_autotune()
     bench_fleet()
+    bench_int4_decode()
     if not args.smoke:
         bench_w8a8_decode()
         bench_grad_compress()

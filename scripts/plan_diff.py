@@ -23,8 +23,11 @@ from typing import Any, Dict, List, Optional, Tuple
 
 SCHEMA = "repro-plan-v1"
 
-#: shape-record fields worth diffing per step (template + bound forms)
-_TILE_KEYS = ("m", "k", "n", "kp", "np", "bm", "bk", "bn")
+#: shape-record fields worth diffing per step (template + bound forms).
+#: ``bits`` is the weight bitwidth of the sub-8-bit lane (absent = int8): a
+#: w4 plan and its w8 twin have identical logical shapes but different
+#: packed-weight layouts and HBM traffic, so they must never diff clean.
+_TILE_KEYS = ("m", "k", "n", "kp", "np", "bm", "bk", "bn", "bits")
 
 
 def _load(path: str) -> Dict[str, Any]:
@@ -52,6 +55,10 @@ def _step_sig(sj: Dict[str, Any]) -> Dict[str, Any]:
     tiles = {}
     if isinstance(shape, dict):
         tiles = {k: shape[k] for k in _TILE_KEYS if k in shape}
+    # ref-backend fused steps carry no shape record; the bitwidth then rides
+    # as a plain weight_bits param (sub-8-bit only) and must still diff
+    if "bits" not in tiles and "weight_bits" in params:
+        tiles["bits"] = params["weight_bits"]
     return {
         "kernel": sj.get("kernel"),
         "kind": sj.get("kind"),

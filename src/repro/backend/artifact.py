@@ -69,7 +69,9 @@ __all__ = ["ARTIFACT_SCHEMA", "save_artifact", "load_artifact", "sidecar_path"]
 ARTIFACT_SCHEMA = "repro-plan-v1"
 
 #: Shape-record tile fields recorded per hot cell (subset present per step).
-_TILE_KEYS = ("m", "bm", "bk", "bn")
+#: ``bits`` rides along for sub-8-bit weight cells (absent means int8), so a
+#: plan_diff of a w4 artifact against its w8 twin surfaces the precision.
+_TILE_KEYS = ("m", "bm", "bk", "bn", "bits")
 
 
 def sidecar_path(path: str) -> str:

@@ -107,12 +107,14 @@ _BN_LATTICE = (128, 256, 512)
 
 
 def tile_candidates(
-    m: int, kp: int, np_: int, *, hw: cost.HardwareSpec = cost.TPU_V5E
+    m: int, kp: int, np_: int, *, hw: cost.HardwareSpec = cost.TPU_V5E, weight_bits: int = 8
 ) -> List[Tiles]:
     """Every legal (bm, bk, bn) for a bound cell: MXU/sublane-aligned
     (:func:`repro.kernels.qmatmul.tile_aligned`), ``bk | kp`` and ``bn | np``
     (template padding reuse), ``bm`` no larger than the padded M (a bigger
-    block would only add padding), and working set within VMEM."""
+    block would only add padding), and working set within VMEM (packed-int4
+    weight tiles stream at half size, so some candidates are only legal at
+    4 bits)."""
     mp = max(32, (int(m) + 31) // 32 * 32)
     out: List[Tiles] = []
     for bm in _BM_LATTICE:
@@ -126,7 +128,7 @@ def tile_candidates(
                     continue
                 if not _qmm.tile_aligned(bm, bk, bn):
                     continue
-                if cost.qmatmul_vmem_bytes(bm, bk, bn) > hw.vmem_bytes:
+                if cost.qmatmul_vmem_bytes(bm, bk, bn, weight_bits=weight_bits) > hw.vmem_bytes:
                     continue
                 out.append((bm, bk, bn))
     return out
@@ -138,12 +140,15 @@ def seed_candidates(
     """The measurement list for one bound shape record: the heuristic tiles
     first (always measured — the search can only ever *add* information, not
     lose the baseline), then the remaining lattice ranked by the analytic
-    intensity model, truncated to ``budget`` total."""
+    intensity model, truncated to ``budget`` total.  The shape record's
+    ``bits`` (4 ⇒ packed weights) feeds the cost model, so int4 cells are
+    ranked on their true — halved — weight traffic."""
     m, k, n = int(shape["m"]), int(shape["k"]), int(shape["n"])
+    bits = int(shape.get("bits", 8))
     heuristic: Tiles = (int(shape["bm"]), int(shape["bk"]), int(shape["bn"]))
-    cands = tile_candidates(m, int(shape["kp"]), int(shape["np"]), hw=hw)
+    cands = tile_candidates(m, int(shape["kp"]), int(shape["np"]), hw=hw, weight_bits=bits)
     rest = [c for c in cands if c != heuristic]
-    rest.sort(key=lambda c: (cost.qmatmul_tile_cost(m, k, n, *c, hw=hw), c))
+    rest.sort(key=lambda c: (cost.qmatmul_tile_cost(m, k, n, *c, hw=hw, weight_bits=bits), c))
     return [heuristic] + rest[: max(0, budget - 1)]
 
 
@@ -193,8 +198,14 @@ def cell_key(bindings: Dict[str, int]) -> str:
 
 def shape_key(shape: Dict[str, Any]) -> str:
     """Deterministic problem-shape rendering (tiles excluded — they are the
-    *output* of the search, not part of its identity)."""
-    return ",".join(f"{f}={int(shape[f])}" for f in ("m", "k", "n", "kp", "np"))
+    *output* of the search, not part of its identity).  The weight bitwidth
+    *is* identity (an int4 cell runs a different kernel on half the weight
+    bytes); it is appended only when sub-8 so existing int8 cache keys stay
+    byte-identical."""
+    key = ",".join(f"{f}={int(shape[f])}" for f in ("m", "k", "n", "kp", "np"))
+    if shape.get("bits", 8) != 8:
+        key += f",bits={int(shape['bits'])}"
+    return key
 
 
 # ---------------------------------------------------------------------------

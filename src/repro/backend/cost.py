@@ -80,11 +80,25 @@ def roofline_terms(
     }
 
 
+def roofline_fraction(
+    model_flops: float, step_time_s: float, *, hw: HardwareSpec = TPU_V5E
+) -> float:
+    """Model-useful FLOP/s at the given step time as a fraction of the
+    fleet's bf16 peak — the "roofline fraction" column of the paper-style
+    report.  Lives here (not in benchmarks/roofline.py) so every consumer
+    divides by the same fleet peak."""
+    if not step_time_s:
+        return 0.0
+    return (model_flops / step_time_s) / (hw.chips * hw.peak_bf16_flops)
+
+
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-def qmatmul_hbm_bytes(m: int, k: int, n: int, bm: int, bk: int, bn: int) -> float:
+def qmatmul_hbm_bytes(
+    m: int, k: int, n: int, bm: int, bk: int, bn: int, *, weight_bits: int = 8
+) -> float:
     """Analytic minimum HBM traffic for the fused int8 qmatmul under the
     (M/bm, N/bn, K/bk) grid of :mod:`repro.kernels.qmatmul` (k innermost):
 
@@ -94,27 +108,35 @@ def qmatmul_hbm_bytes(m: int, k: int, n: int, bm: int, bk: int, bn: int) -> floa
       weights are read ``mp/bm`` times,
     * bias/scale/shift rows (int32 + 2×f32 per output column) once per
       ``(i, j)``, and the int8 output is written once.
+
+    ``weight_bits=4`` halves the weight term: the packed kernel streams the
+    uint8 nibble array (kp/2 rows) and unpacks in VMEM — for the decode path
+    (small M, weight-dominated traffic) this is the whole point of the lane.
     """
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     x_bytes = mp * kp * (np_ // bn)  # int8
-    w_bytes = kp * np_ * (mp // bm)  # int8
+    w_bytes = kp * np_ * (mp // bm) * weight_bits / 8.0  # int8, or packed int4
     epi_bytes = (4 + 4 + 4) * np_ * (mp // bm)  # bias (i32) + 2 × f32 rows
     out_bytes = mp * np_  # int8
     return float(x_bytes + w_bytes + epi_bytes + out_bytes)
 
 
-def qmatmul_vmem_bytes(bm: int, bk: int, bn: int) -> int:
+def qmatmul_vmem_bytes(bm: int, bk: int, bn: int, *, weight_bits: int = 8) -> int:
     """Resident VMEM working set of one grid step: the int8 x/w tiles, the
     int8 output tile, three (1, bn) epilogue rows, and the int32 accumulator
     scratch — with double buffering on the streamed operands (the Pallas
-    pipeline keeps two in-flight copies of each block)."""
-    streamed = 2 * (bm * bk + bk * bn + 3 * 4 * bn + bm * bn)
+    pipeline keeps two in-flight copies of each block).  A packed-int4 weight
+    tile streams at half size (``bk/2 × bn`` uint8); the transient unpacked
+    tile lives in registers/VPU, not the double-buffered stream."""
+    w_tile = bk * bn * weight_bits // 8
+    streamed = 2 * (bm * bk + w_tile + 3 * 4 * bn + bm * bn)
     acc = 4 * bm * bn
     return streamed + acc
 
 
 def qmatmul_tile_cost(
-    m: int, k: int, n: int, bm: int, bk: int, bn: int, *, hw: HardwareSpec = TPU_V5E
+    m: int, k: int, n: int, bm: int, bk: int, bn: int,
+    *, hw: HardwareSpec = TPU_V5E, weight_bits: int = 8,
 ) -> float:
     """Analytic cost (seconds) of one fused qmatmul launch with the given
     tiles: ``max(T_comp, T_mem)`` over the *padded* problem.  Padding waste
@@ -124,6 +146,9 @@ def qmatmul_tile_cost(
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     flops = 2.0 * mp * kp * np_
     terms = roofline_terms(
-        flops, qmatmul_hbm_bytes(m, k, n, bm, bk, bn), hw=hw, peak=hw.peak_int8_flops
+        flops,
+        qmatmul_hbm_bytes(m, k, n, bm, bk, bn, weight_bits=weight_bits),
+        hw=hw,
+        peak=hw.peak_int8_flops,
     )
     return max(terms["t_comp_s"], terms["t_mem_s"])

@@ -247,6 +247,10 @@ def specialize_plan(
                     rec = ",".join(
                         f"{k}={shape[k]}" for k in ("m", "bm", "bk", "bn") if k in shape
                     )
+                    if "bits" in shape:
+                        # sub-8-bit weight lane: a hardware designer reads the
+                        # precision off the cell record (activations stay int8)
+                        rec += f",w{shape['bits']}/a8"
                     if source != "heuristic":
                         rec += f" [{source}]"
                     tiles[step.name or step.kernel] = rec

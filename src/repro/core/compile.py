@@ -260,6 +260,10 @@ def _build_qlinear(compiler: "Compiler", m: Match) -> Optional[StepDraft]:
     is_conv = core.op_type == "ConvInteger"
     is_gemm = core.op_type == "Gemm"
     ga = compiler.analysis
+    # QONNX-style sub-8-bit weights: the bitwidth rides as a node attribute
+    # on the integer core op (weights stay an unpacked int8 initializer, so
+    # the reference runtime needs no change); the tiled lowering packs on it.
+    weight_bits = int(core.attrs.get("weight_bits", 8))
     zp = ga.const(m.node("ql").inputs[2]) if len(m.node("ql").inputs) > 2 else np.zeros((), np.int8)
     out_dtype = str(np.asarray(zp).dtype)
     relu = m.node("relu") is not None
@@ -307,6 +311,9 @@ def _build_qlinear(compiler: "Compiler", m: Match) -> Optional[StepDraft]:
             strides=tuple(attrs.get("strides", (1, 1))),
             pads=tuple(attrs.get("pads", (0, 0, 0, 0))),
         )
+        if weight_bits != 8:
+            # conv has no packed lane — the bitwidth still renders in the plan
+            params["weight_bits"] = weight_bits
         consts = (
             jnp.asarray(w),
             None if b is None else jnp.asarray(b),
@@ -319,7 +326,11 @@ def _build_qlinear(compiler: "Compiler", m: Match) -> Optional[StepDraft]:
         )
 
     if compiler.backend == "ref":
-        # pure-jnp oracle: unpadded params, uint8 handled by int32 widening
+        # pure-jnp oracle: unpadded params, uint8 handled by int32 widening;
+        # int4 stays *unpacked* here — this path is what the packed kernels
+        # are pinned bit-exact against
+        if weight_bits != 8:
+            params["weight_bits"] = weight_bits
         consts = (
             jnp.asarray(w),
             None if b is None else jnp.asarray(b),
@@ -340,13 +351,16 @@ def _build_qlinear(compiler: "Compiler", m: Match) -> Optional[StepDraft]:
     if compiler.batch == "dynamic":
         # axis-open template: leave the axis-dependent (m, bm) binding to
         # per-bucket-combination specialization (specialize_plan / PlanCache)
-        consts, shape = kops.template_qmatmul_params(w, b, qs, np.asarray(qsh, np.float32))
+        consts, shape = kops.template_qmatmul_params(
+            w, b, qs, np.asarray(qsh, np.float32), weight_bits=weight_bits
+        )
         shape["lead"] = _symbolic_lead(ga.shape(x_name))
         params["shape"] = shape
         params["dynamic_batch"] = True
     else:
         consts, shape = kops.specialize_qmatmul_params(
-            w, b, qs, np.asarray(qsh, np.float32), m=_static_m(ga.shape(x_name))
+            w, b, qs, np.asarray(qsh, np.float32),
+            m=_static_m(ga.shape(x_name)), weight_bits=weight_bits,
         )
         params["shape"] = shape
     return StepDraft(

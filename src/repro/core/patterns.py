@@ -85,9 +85,15 @@ def fc_layer(
 ) -> str:
     """Fig 1 (activation=None, two_mul=True) / Fig 2 (activation="Relu",
     two_mul=False) fully-connected pattern.  Returns the int8/uint8 output
-    tensor name."""
+    tensor name.
+
+    Sub-8-bit weights (``p.bits == 4``) codify QONNX-style: the weight
+    initializer stays an (unpacked) int8 tensor with values in [-8, 7] and
+    the bitwidth rides as a ``weight_bits`` attribute on the integer-matmul
+    node — the reference runtime ignores it, the compiler packs on it."""
     w = gb.add_initializer(f"{prefix}_weight_q", p.weight_q)
-    acc = gb.op("MatMulInteger", [x, w], out_hint=f"{prefix}_acc")
+    attrs = {"weight_bits": p.bits} if p.bits != 8 else {}
+    acc = gb.op("MatMulInteger", [x, w], out_hint=f"{prefix}_acc", **attrs)
     if p.bias_q is not None:
         b = gb.add_initializer(f"{prefix}_bias_q", p.bias_q)
         acc = gb.op("Add", [acc, b], out_hint=f"{prefix}_biased")
@@ -116,6 +122,8 @@ def fc_layer_gemm(
     if p.bias_q is not None:
         ins.append(gb.add_initializer(f"{prefix}_bias_q", p.bias_q))
     attrs = {"transB": 1} if trans_b else {}
+    if p.bits != 8:
+        attrs["weight_bits"] = p.bits
     acc = gb.op("Gemm", ins, out_hint=f"{prefix}_acc", **attrs)
     f = emit_rescale(gb, acc, p.rescale, prefix, two_mul=two_mul)
     if activation is not None:
@@ -136,12 +144,19 @@ def conv_layer(
     two_mul: bool = False,
     activation: Optional[str] = None,
     out_dtype: str = "int8",
+    weight_bits: int = 8,
 ) -> str:
     """Fig 3 convolution pattern.  ``weight_q`` is (M, C, kH, kW) int8;
     ``bias_q`` is int32 (M,), added broadcast as (1, M, 1, 1).  ``rescale``
-    may be per-channel (one multiplier per output channel M)."""
+    may be per-channel (one multiplier per output channel M).  ``weight_bits``
+    rides as a node attribute like the FC builders (conv stays unpacked —
+    only the matmul lane has a packed kernel today)."""
     w = gb.add_initializer(f"{prefix}_weight_q", weight_q)
-    acc = gb.op("ConvInteger", [x, w], out_hint=f"{prefix}_acc", strides=list(strides), pads=list(pads))
+    attrs = {"weight_bits": weight_bits} if weight_bits != 8 else {}
+    acc = gb.op(
+        "ConvInteger", [x, w], out_hint=f"{prefix}_acc",
+        strides=list(strides), pads=list(pads), **attrs,
+    )
     if bias_q is not None:
         b = gb.add_initializer(f"{prefix}_bias_q", bias_q.reshape(1, -1, 1, 1).astype(np.int32))
         acc = gb.op("Add", [acc, b], out_hint=f"{prefix}_biased")

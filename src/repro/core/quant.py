@@ -31,11 +31,20 @@ import numpy as np
 MAX_EXACT_FLOAT_INT = 2**24  # 16_777_216
 
 _INT_RANGES = {
+    "int4": (-8, 7),
     "int8": (-128, 127),
     "uint8": (0, 255),
     "int16": (-32768, 32767),
     "int32": (-(2**31), 2**31 - 1),
 }
+
+#: Sub-byte dtypes have no numpy representation; on the numpy side they are
+#: stored *unpacked* in the narrowest container that holds their range
+#: (QONNX-style: the bitwidth is metadata, the container is int8).
+_STORAGE_DTYPES = {"int4": "int8"}
+
+#: Weight bitwidths with a first-class lowering lane.
+SUPPORTED_WEIGHT_BITS = (4, 8)
 
 
 def qrange(dtype: str) -> Tuple[int, int]:
@@ -46,6 +55,21 @@ def qrange(dtype: str) -> Tuple[int, int]:
         raise ValueError(f"unsupported quantized dtype: {dtype!r}") from None
 
 
+def storage_dtype(dtype: str) -> str:
+    """The numpy container dtype for a quantized dtype name (int4 → int8)."""
+    qrange(dtype)  # validate
+    return _STORAGE_DTYPES.get(dtype, dtype)
+
+
+def weight_dtype_for_bits(bits: int) -> str:
+    """The quantized weight dtype name for a signed weight bitwidth."""
+    if bits == 8:
+        return "int8"
+    if bits == 4:
+        return "int4"
+    raise ValueError(f"unsupported weight bitwidth: {bits!r} (supported: {SUPPORTED_WEIGHT_BITS})")
+
+
 def round_half_even(x: np.ndarray) -> np.ndarray:
     """ONNX QuantizeLinear rounding: round half to even (numpy rint)."""
     return np.rint(x)
@@ -53,7 +77,7 @@ def round_half_even(x: np.ndarray) -> np.ndarray:
 
 def saturate(x: np.ndarray, dtype: str) -> np.ndarray:
     qmin, qmax = qrange(dtype)
-    return np.clip(x, qmin, qmax).astype(dtype)
+    return np.clip(x, qmin, qmax).astype(storage_dtype(dtype))
 
 
 def choose_scale(absmax: float, dtype: str = "int8") -> float:
@@ -256,7 +280,7 @@ def apply_rescale_reference(
 class QuantizedLinearParams:
     """Everything the artifact embeds for one pre-quantized linear layer."""
 
-    weight_q: np.ndarray  # int8, shape (in, out) for MatMulInteger(X, W)
+    weight_q: np.ndarray  # int8 container, shape (in, out) for MatMulInteger(X, W)
     bias_q: Optional[np.ndarray]  # int32, shape (out,)
     scale_x: float
     scale_w: np.ndarray  # scalar or per-channel (out,)
@@ -264,6 +288,7 @@ class QuantizedLinearParams:
     rescale: Union[Rescale, RescaleVector]  # RescaleVector iff per_channel
     in_dtype: str = "int8"  # int8 or uint8 activations
     out_dtype: str = "int8"
+    bits: int = 8  # weight bitwidth; 4 ⇒ weight_q values in [-8, 7], still int8-stored
 
     @property
     def per_channel(self) -> bool:
@@ -280,18 +305,25 @@ def quantize_linear_layer(
     in_dtype: str = "int8",
     out_dtype: str = "int8",
     reduce: bool = False,
+    bits: int = 8,
 ) -> QuantizedLinearParams:
     """Quantizer-side preparation of one FC layer (eqs. 2–6).
 
     ``w`` has shape (in, out) — MatMulInteger computes X(…,in) @ W(in,out).
     Per-channel scales are along the output-feature axis.
+
+    ``bits=4`` quantizes weights onto [-8, 7] (scale chosen against qmax=7);
+    the §3.1 rescale decomposition is elementwise on the int32 accumulator,
+    so it is untouched by the weight bitwidth — only the multiplier value
+    changes through the coarser ``scale_w``.
     """
+    w_dtype = weight_dtype_for_bits(bits)
     w = np.asarray(w, dtype=np.float32)
     if per_channel:
-        scale_w = choose_scales(np.abs(w).max(axis=0), "int8")
+        scale_w = choose_scales(np.abs(w).max(axis=0), w_dtype)
     else:
-        scale_w = np.float32(choose_scale(float(np.abs(w).max()), "int8"))
-    w_q = quantize(w, scale_w, "int8")
+        scale_w = np.float32(choose_scale(float(np.abs(w).max()), w_dtype))
+    w_q = quantize(w, scale_w, w_dtype)
     b_q = None if b is None else quantize_bias(b, scale_w, scale_x)
     if per_channel:
         # True per-channel rescale: every output channel carries its own
@@ -309,6 +341,7 @@ def quantize_linear_layer(
         rescale=rescale,
         in_dtype=in_dtype,
         out_dtype=out_dtype,
+        bits=bits,
     )
 
 

@@ -63,9 +63,14 @@ def quantize_mlp(
     two_mul: bool = True,
     per_channel: bool = False,
     tanh_mode: str = "int8",  # "int8" (Fig 4) or "fp16" (Fig 5)
+    weight_bits: int = 8,
 ) -> Model:
     """Produce a complete pre-quantized MLP artifact (the paper's §4 example
-    generalized to N layers)."""
+    generalized to N layers).
+
+    ``weight_bits=4`` codifies every FC layer's weights on [-8, 7] (QONNX-style
+    sub-8-bit lane): the graph carries a ``weight_bits`` attr per core op and
+    the backend packs two nibbles per byte at plan time."""
     n_layers = len(spec.weights)
     # ---- calibration pass (quantizer side, hardware-agnostic) ----
     obs_in = make_observer(observer)
@@ -92,7 +97,8 @@ def quantize_mlp(
             absmax = patterns.TANH_INPUT_ABSMAX if act == "Tanh" else patterns.SIGMOID_INPUT_ABSMAX
             # FC rescale maps accumulator onto the activation's input range.
             p = quantize_linear_layer(
-                w, b, cur_scale, absmax / 127.0, per_channel=per_channel, in_dtype=in_dtype, out_dtype="int8"
+                w, b, cur_scale, absmax / 127.0, per_channel=per_channel, in_dtype=in_dtype, out_dtype="int8",
+                bits=weight_bits,
             )
             if act == "Tanh":
                 fn = patterns.fc_int8_tanh if tanh_mode == "int8" else patterns.fc_fp16_tanh
@@ -102,7 +108,8 @@ def quantize_mlp(
         else:
             scale_y = choose_scale(_absmax_of(obs_layers[i]), out_dtype)
             p = quantize_linear_layer(
-                w, b, cur_scale, scale_y, per_channel=per_channel, in_dtype=in_dtype, out_dtype=out_dtype
+                w, b, cur_scale, scale_y, per_channel=per_channel, in_dtype=in_dtype, out_dtype=out_dtype,
+                bits=weight_bits,
             )
             x = patterns.fc_layer(gb, x, p, prefix, two_mul=two_mul, activation=act)
         cur_scale = scale_y

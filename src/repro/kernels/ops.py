@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import pack as _pack
 from . import qact_lut as _qact
 from . import qmatmul as _qmm
 from . import ref as _ref
@@ -44,10 +45,12 @@ def fold_uint8_input(w_q: jax.Array, bias_q: Optional[jax.Array]):
 
 
 def template_qmatmul_params(
-    w_q: np.ndarray,  # (K, N) int8
+    w_q: np.ndarray,  # (K, N) int8 (unpacked; values in [-8, 7] when weight_bits=4)
     bias_q: Optional[np.ndarray],  # (N,) int32
     quant_scale: np.ndarray,  # scalar or (N,) f32
     quant_shift: np.ndarray,  # scalar or (N,) f32
+    *,
+    weight_bits: int = 8,
 ):
     """The batch-*independent* half of qmatmul shape specialization.
 
@@ -62,12 +65,22 @@ def template_qmatmul_params(
     already shaped ``(kp, np)/(1, np)`` for the kernel, and ``shape`` the
     batch-open record ``{k, n, kp, np, bk, bn}`` (no ``m``/``bm`` yet).
     Zero padding is exact for integer matmul; scale/shift pad with 1.0 so the
-    padded epilogue stays finite."""
+    padded epilogue stays finite.
+
+    ``weight_bits=4`` packs the padded weight 2-per-byte along K *here, once
+    per template* (kp is always even — bk is a 128-multiple): ``w2`` becomes
+    a uint8 ``(kp // 2, np)`` nibble array and the shape record carries
+    ``bits: 4``; backends dispatch on it (the ref backend keeps the unpacked
+    consts as the oracle — see ``repro.backend.fused``)."""
+    if weight_bits not in (4, 8):
+        raise ValueError(f"unsupported weight_bits: {weight_bits!r}")
     k, n = int(w_q.shape[0]), int(w_q.shape[1])
     _, bk, bn = _qmm.choose_tiles(None, k, n)
     kp, np_ = _round_up(k, bk), _round_up(n, bn)
     w2 = np.zeros((kp, np_), np.int8)
     w2[:k, :n] = np.asarray(w_q, np.int8)
+    if weight_bits == 4:
+        w2 = _pack.pack_int4(w2)  # (kp // 2, np) uint8, zero rows pack to 0x00
     b2 = np.zeros((1, np_), np.int32)
     if bias_q is not None:
         b2[0, :n] = np.asarray(bias_q, np.int32).reshape(-1)
@@ -77,6 +90,8 @@ def template_qmatmul_params(
     qsh2[0, :n] = np.broadcast_to(np.asarray(quant_shift, np.float32).reshape(1, -1), (1, n))
     consts = (jnp.asarray(w2), jnp.asarray(b2), jnp.asarray(qs2), jnp.asarray(qsh2))
     shape = {"k": k, "n": n, "kp": kp, "np": np_, "bk": bk, "bn": bn}
+    if weight_bits != 8:
+        shape["bits"] = weight_bits  # omitted at 8: int8 records stay byte-identical
     return consts, shape
 
 
@@ -189,12 +204,15 @@ def specialize_qmatmul_params(
     quant_shift: np.ndarray,  # scalar or (N,) f32
     *,
     m: Optional[int] = None,  # static M if known, else None (dynamic batch)
+    weight_bits: int = 8,
 ):
     """Fully-static specialization (the ``batch="static"`` compile path):
     template + immediate batch binding in one step.  Returns the same
     ``(consts, params)`` contract as before the template split — ``params``
     is the closed record ``{m, k, n, kp, np, bm, bk, bn}``."""
-    consts, shape = template_qmatmul_params(w_q, bias_q, quant_scale, quant_shift)
+    consts, shape = template_qmatmul_params(
+        w_q, bias_q, quant_scale, quant_shift, weight_bits=weight_bits
+    )
     params = bind_qmatmul_batch({**shape, "lead": (m,)}, None)
     return consts, params
 
@@ -214,9 +232,13 @@ def quantized_matmul_planned(
 ) -> jax.Array:
     """Shape-specialized fused matmul: parameters arrive pre-padded, so the
     per-call work is at most an activation pad (skipped entirely when the
-    traced shape is already a tile multiple)."""
+    traced shape is already a tile multiple).
+
+    ``shape["bits"] == 4`` selects the packed-int4 kernel: ``w2`` is then the
+    uint8 ``(kp // 2, np)`` nibble array the template packed once."""
     k, n, kp = shape["k"], shape["n"], shape["kp"]
     bm, bk, bn = shape["bm"], shape["bk"], shape["bn"]
+    bits = shape.get("bits", 8)
     orig_shape = x_q.shape
     assert orig_shape[-1] == k, (orig_shape, k)
     x2 = x_q.reshape(-1, k)
@@ -224,11 +246,19 @@ def quantized_matmul_planned(
     mp = _round_up(max(m, 1), bm)
     if mp != m or kp != k:
         x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
-    out = _qmm.qmatmul(
-        x2, w2, b2, qs2, qsh2,
-        out_dtype=out_dtype, relu=relu, two_mul=two_mul,
-        bm=bm, bk=bk, bn=bn, interpret=interpret,
-    )
+    if bits == 4:
+        assert w2.dtype == jnp.uint8 and w2.shape[0] * 2 == kp, (w2.dtype, w2.shape, kp)
+        out = _qmm.qmatmul_packed(
+            x2, w2, b2, qs2, qsh2,
+            out_dtype=out_dtype, relu=relu, two_mul=two_mul,
+            bm=bm, bk=bk, bn=bn, interpret=interpret,
+        )
+    else:
+        out = _qmm.qmatmul(
+            x2, w2, b2, qs2, qsh2,
+            out_dtype=out_dtype, relu=relu, two_mul=two_mul,
+            bm=bm, bk=bk, bn=bn, interpret=interpret,
+        )
     return out[:m, :n].reshape(orig_shape[:-1] + (n,))
 
 

@@ -23,6 +23,11 @@ MXU busy (128×128 systolic array).  Shape padding is handled by
 Bit-exactness: the epilogue performs the *same f32 operations in the same
 order* as the ONNX-dialect ops, so results match the reference runtime
 bit-for-bit (asserted over shape/dtype sweeps in tests/test_kernels_qmatmul.py).
+
+The packed-int4 variant (:func:`qmatmul_packed`) streams weights 2-per-byte
+from HBM and unpacks per tile on the VPU before the same MXU product —
+halving weight traffic for the bandwidth-bound decode path (see
+docs/quantization.md and tests/test_int4.py for the bit-exactness pin).
 """
 from __future__ import annotations
 
@@ -118,6 +123,91 @@ def _qmatmul_kernel(x_ref, w_ref, b_ref, qs_ref, qsh_ref, o_ref, acc_ref, *, rel
             acc_ref[...], b_ref[...], qs_ref[...], qsh_ref[...],
             relu=relu, two_mul=two_mul, out_dtype=out_dtype,
         )
+
+
+def _unpack_int4_rows(p):
+    """(rows, bn) uint8 nibble-pairs → (2·rows, bn) int8, K-interleaved.
+
+    Mirrors :func:`repro.kernels.pack.unpack_int4` with pure VPU shift
+    arithmetic: the low nibble sign-extends via ``int8(p << 4) >> 4``, the
+    high nibble via ``int8(p) >> 4`` (conversion wraps mod 2⁸, then the
+    arithmetic right shift carries the sign).  The stack-reshape interleaves
+    along the sublane axis only — the 128-lane layout is untouched."""
+    lo = (p << 4).astype(jnp.int8) >> 4
+    hi = p.astype(jnp.int8) >> 4
+    return jnp.stack([lo, hi], axis=1).reshape(2 * p.shape[0], p.shape[1])
+
+
+def _qmatmul_packed_kernel(x_ref, wp_ref, b_ref, qs_ref, qsh_ref, o_ref, acc_ref, *, relu, two_mul, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Unpack the (bk//2, bn) packed tile to (bk, bn) int8 in VMEM, then the
+    # same int8 MXU product as the unpacked kernel — HBM only ever streamed
+    # half the weight bytes.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        _unpack_int4_rows(wp_ref[...]),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[...] = _epilogue(
+            acc_ref[...], b_ref[...], qs_ref[...], qsh_ref[...],
+            relu=relu, two_mul=two_mul, out_dtype=out_dtype,
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("out_dtype", "relu", "two_mul", "bm", "bk", "bn", "interpret"),
+)
+def qmatmul_packed(
+    x_q: jax.Array,  # (M, K) int8
+    w_p: jax.Array,  # (K // 2, N) uint8 — int4 nibble pairs along K
+    bias_q: jax.Array,  # (1, N) int32
+    quant_scale: jax.Array,  # (1, N) f32
+    quant_shift: jax.Array,  # (1, N) f32
+    *,
+    out_dtype=jnp.int8,
+    relu: bool = False,
+    two_mul: bool = True,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed-int4 variant of :func:`qmatmul`: weights arrive 2-per-byte
+    (packed once at plan time by :func:`repro.kernels.pack.pack_int4`) and
+    are unpacked per (bk, bn) tile inside the kernel.  Same grid, same
+    epilogue, bit-exact with the unpacked kernel on int4-range weights."""
+    m, k = x_q.shape
+    kp2, n = w_p.shape
+    assert k == 2 * kp2, (x_q.shape, w_p.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    assert bk % 2 == 0, bk
+
+    kernel = functools.partial(_qmatmul_packed_kernel, relu=relu, two_mul=two_mul, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_p, bias_q, quant_scale, quant_shift)
 
 
 @functools.partial(

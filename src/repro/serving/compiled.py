@@ -8,7 +8,11 @@ request-lifecycle and metrics discipline (submit → step → drain; timestamped
 requests; a flat ``metrics`` dict), specialized to single-shot inference:
 
 * **Coalescing** — each :meth:`~CompiledModelServer.step` takes up to
-  ``max_batch`` queued requests and runs them as one batch.  With a
+  ``max_batch`` queued requests and runs them as one batch.  Coalescing is
+  *axis-aware and multi-input*: a request carries one example per model
+  input (a bare ndarray is single-input sugar), every input is stacked
+  along the shared leading batch axis, and per-request named-axis extents
+  are validated consistent across the request's inputs at submit.  With a
   variable-length sequence axis the requests are right-padded to the longest
   sequence in the group first, so the whole group lands on one cell of the
   (batch-bucket × seq-bucket) grid; the compiled model pads batch and
@@ -61,16 +65,30 @@ from ..obs.metrics import MetricsRegistry
 
 @dataclasses.dataclass
 class CompiledRequest:
-    """One inference request: a single example (no batch dim).  With a
-    sequence axis the example's extent along it may vary per request."""
+    """One inference request: a single example per model input (no batch
+    dim).  With a sequence axis the extent along it may vary per request —
+    but every input of *one* request that carries the axis must agree on it
+    (validated at submit)."""
 
     uid: int
-    x: np.ndarray
+    feeds: Dict[str, np.ndarray]
+    # the request's extent along the server's variable-length axis, if any
+    seq_len: Optional[int] = None
     # filled by the server:
     outputs: Optional[Dict[str, np.ndarray]] = None
     done: bool = False
     t_submit: float = 0.0
     t_done: Optional[float] = None
+
+    @property
+    def x(self) -> np.ndarray:
+        """Single-input sugar: the example of a one-input request."""
+        if len(self.feeds) != 1:
+            raise AttributeError(
+                f"request has {len(self.feeds)} input examples "
+                f"({sorted(self.feeds)}); read .feeds instead of .x"
+            )
+        return next(iter(self.feeds.values()))
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -125,15 +143,23 @@ class CompiledModelServer:
                 "dynamic_axes={...}"
             )
         batch_inputs = cm.axis_input_pos.get(BATCH_AXIS, {})
-        if len(batch_inputs) != 1 or len(cm.input_names) != 1:
+        missing = [n for n in cm.input_names if n not in batch_inputs]
+        if not batch_inputs or missing:
             raise ValueError(
-                f"the micro-batching server coalesces over exactly one input, "
-                f"which must carry the batch dim — model has inputs "
-                f"{cm.input_names} (batch-carrying: {sorted(batch_inputs)})"
+                f"the micro-batching server coalesces every model input along "
+                f"the batch axis — inputs {missing or cm.input_names} do not "
+                f"carry it (batch-carrying: {sorted(batch_inputs)})"
             )
-        self.input_name = next(iter(batch_inputs))
-        if batch_inputs[self.input_name] != 0:
-            raise ValueError("the batch axis must be the input's leading dim")
+        bad = [n for n, pos in batch_inputs.items() if pos != 0]
+        if bad:
+            raise ValueError(
+                f"the batch axis must be the leading dim of every input, but "
+                f"it is not on {sorted(bad)}"
+            )
+        #: single-input sugar target; None on a multi-input artifact
+        self.input_name = (
+            cm.input_names[0] if len(cm.input_names) == 1 else None
+        )
         extra = [a for a in cm.dynamic_axes if a != BATCH_AXIS]
         if len(extra) > 1:
             raise ValueError(
@@ -144,29 +170,37 @@ class CompiledModelServer:
         self.cfg = cfg if cfg is not None else CompiledServerConfig()
         #: the variable-length (sequence) axis, if the artifact has one
         self.seq_axis: Optional[str] = extra[0] if extra else None
-        in_t = next(t for t in cm.model.graph.inputs if t.name == self.input_name)
-        self._example_shape = tuple(in_t.shape[1:])  # dims may be named/None
-        self._example_dtype = np.dtype(in_t.dtype)
-        stray = [
-            d for d in self._example_shape
-            if isinstance(d, str) and d not in cm.dynamic_axes
-        ]
-        if stray:
-            raise ValueError(
-                f"input {self.input_name!r} has named symbolic dims {stray} the "
-                "compile left static — the server cannot validate or bucket "
-                "them; compile them as dynamic_axes or pin them to ints"
-            )
-        if self.seq_axis is not None:
-            pos = cm.axis_input_pos[self.seq_axis].get(self.input_name)
-            if pos is None or pos == 0:
+        #: per-input example shape/dtype (batch dim stripped; dims may be
+        #: named symbolic or None)
+        self._example_shapes: Dict[str, Tuple] = {}
+        self._example_dtypes: Dict[str, np.dtype] = {}
+        for in_t in cm.model.graph.inputs:
+            self._example_shapes[in_t.name] = tuple(in_t.shape[1:])
+            self._example_dtypes[in_t.name] = np.dtype(in_t.dtype)
+            stray = [
+                d for d in in_t.shape[1:]
+                if isinstance(d, str) and d not in cm.dynamic_axes
+            ]
+            if stray:
                 raise ValueError(
-                    f"sequence axis {self.seq_axis!r} must sit on a non-leading "
-                    f"dim of the coalesced input {self.input_name!r}"
+                    f"input {in_t.name!r} has named symbolic dims {stray} the "
+                    "compile left static — the server cannot validate or bucket "
+                    "them; compile them as dynamic_axes or pin them to ints"
                 )
-            self._seq_pos = pos - 1  # example-local (batch dim stripped)
-        else:
-            self._seq_pos = None
+        #: example-local sequence-dim position per seq-carrying input
+        self._seq_pos: Dict[str, int] = {}
+        if self.seq_axis is not None:
+            for in_name, pos in cm.axis_input_pos[self.seq_axis].items():
+                if pos == 0:
+                    raise ValueError(
+                        f"sequence axis {self.seq_axis!r} must sit on a "
+                        f"non-leading dim of input {in_name!r}"
+                    )
+                self._seq_pos[in_name] = pos - 1  # batch dim stripped
+            if not self._seq_pos:
+                raise ValueError(
+                    f"sequence axis {self.seq_axis!r} is bound by no input"
+                )
         #: replica name when fronted by a router — stamps every span with a
         #: ``replica=`` attribute so fleet traces separate by owner
         self.name = name
@@ -215,32 +249,74 @@ class CompiledModelServer:
         self.registry.counter(f"serve.{key}").inc(n)
 
     # -- request lifecycle ----------------------------------------------------
-    def submit(self, x: np.ndarray) -> CompiledRequest:
-        """Enqueue one example (shape = model input shape without the batch
-        dim; the sequence dim, if any, may vary per request); returns the
-        request handle whose ``outputs`` fill on completion.
+    def submit(self, x) -> CompiledRequest:
+        """Enqueue one request: a dict mapping every model input to its
+        example (shapes = input shapes without the batch dim; the sequence
+        dim, if any, may vary per request), or — single-input sugar — a bare
+        ndarray.  Returns the request handle whose ``outputs`` fill on
+        completion.
 
-        Shape/dtype are validated here, at admission — a bad example must be
+        Shape/dtype *and axis-binding consistency* are validated here, at
+        admission: every input of one request that carries the same named
+        dynamic axis must agree on its extent.  A bad example must be
         rejected up front, not blow up a coalesced batch mid-``step`` and
         take its co-batched requests down with it."""
-        x = np.asarray(x)
-        ok = len(x.shape) == len(self._example_shape) and all(
-            not isinstance(want, int) or got == want
-            for got, want in zip(x.shape, self._example_shape)
-        )
-        if ok and self._seq_pos is not None and x.shape[self._seq_pos] < 1:
-            ok = False
-        if not ok or x.dtype != self._example_dtype:
-            raise ValueError(
-                f"request example must have shape {self._example_shape} and "
-                f"dtype {self._example_dtype}, got {x.shape} {x.dtype}"
+        if isinstance(x, dict):
+            feeds = {str(k): np.asarray(v) for k, v in x.items()}
+            if set(feeds) != set(self.cm.input_names):
+                raise ValueError(
+                    f"request must feed exactly the model inputs "
+                    f"{sorted(self.cm.input_names)}, got {sorted(feeds)}"
+                )
+        else:
+            if self.input_name is None:
+                raise ValueError(
+                    f"multi-input artifact: submit a dict of examples for "
+                    f"inputs {sorted(self.cm.input_names)}"
+                )
+            feeds = {self.input_name: np.asarray(x)}
+        bound: Dict[str, int] = {}  # named axis -> extent this request binds
+        for name, arr in feeds.items():
+            want = self._example_shapes[name]
+            ok = len(arr.shape) == len(want) and all(
+                not isinstance(w, int) or got == w
+                for got, w in zip(arr.shape, want)
             )
-        req = CompiledRequest(uid=self._uid, x=x, t_submit=time.monotonic())
+            if not ok or arr.dtype != self._example_dtypes[name]:
+                raise ValueError(
+                    f"example for input {name!r} must have shape {want} and "
+                    f"dtype {self._example_dtypes[name]}, got {arr.shape} {arr.dtype}"
+                )
+            for got, w in zip(arr.shape, want):
+                if not isinstance(w, str):
+                    continue
+                if got < 1:
+                    raise ValueError(
+                        f"example for input {name!r} has empty extent along "
+                        f"axis {w!r}"
+                    )
+                prev = bound.setdefault(w, got)
+                if prev != got:
+                    raise ValueError(
+                        f"inconsistent axis bindings within one request: "
+                        f"axis {w!r} is {prev} on one input but {got} on "
+                        f"{name!r} — all inputs of a request must agree"
+                    )
+        req = CompiledRequest(
+            uid=self._uid,
+            feeds=feeds,
+            seq_len=bound.get(self.seq_axis) if self.seq_axis else None,
+            t_submit=time.monotonic(),
+        )
         self._uid += 1
         self.queue.append(req)
         self._count("requests")
         if _trace.enabled:
-            _trace.async_begin("serve.request", req.uid, shape=str(x.shape))
+            _trace.async_begin(
+                "serve.request",
+                req.uid,
+                shape="|".join(str(feeds[n].shape) for n in sorted(feeds)),
+            )
         return req
 
     # -- main loop ------------------------------------------------------------
@@ -281,26 +357,35 @@ class CompiledModelServer:
             # retry/triage
             try:
                 with _trace.span("serve.coalesce"):
-                    if self._seq_pos is None:
-                        batch = np.stack([r.x for r in reqs])
+                    if self.seq_axis is None:
                         seq_lens: Optional[List[int]] = None
                     else:
-                        # right-pad every example to the longest sequence in
-                        # the group, so it lands on one (batch-bucket ×
-                        # seq-bucket) cell
-                        seq_lens = [int(r.x.shape[self._seq_pos]) for r in reqs]
+                        seq_lens = [int(r.seq_len) for r in reqs]
+                    batch_feeds: Dict[str, np.ndarray] = {}
+                    for name in self.cm.input_names:
+                        seq_pos = self._seq_pos.get(name)
+                        if seq_pos is None:
+                            batch_feeds[name] = np.stack([r.feeds[name] for r in reqs])
+                            continue
+                        # right-pad every example of every seq-carrying input
+                        # to the longest sequence in the group, so the whole
+                        # group lands on one (batch-bucket × seq-bucket) cell
                         s_max = max(seq_lens)
                         rows = []
                         for r in reqs:
-                            widths = [(0, 0)] * r.x.ndim
-                            widths[self._seq_pos] = (0, s_max - r.x.shape[self._seq_pos])
-                            rows.append(np.pad(r.x, widths) if widths[self._seq_pos][1] else r.x)
-                        batch = np.stack(rows)
+                            ex = r.feeds[name]
+                            pad = s_max - ex.shape[seq_pos]
+                            if pad:
+                                widths = [(0, 0)] * ex.ndim
+                                widths[seq_pos] = (0, pad)
+                                ex = np.pad(ex, widths)
+                            rows.append(ex)
+                        batch_feeds[name] = np.stack(rows)
                 # the compiled model pads each axis to its bucket and serves
                 # the cell from its PlanCache; we only account for the
                 # coalescing here
                 with _trace.span("serve.compute"):
-                    outs = self.cm.run({self.input_name: batch})
+                    outs = self.cm.run(batch_feeds)
             except Exception:
                 # back to the head of the queue in original order; their
                 # serve.request async spans stay open — each closes exactly

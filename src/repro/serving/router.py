@@ -192,14 +192,19 @@ class ShardedRouter:
         return cls(servers, registry=registry, cfg=cfg)
 
     # -- routing --------------------------------------------------------------
-    def _cell_of(self, x: np.ndarray) -> Tuple:
+    def _cell_of(self, x) -> Tuple:
         """The per-request-knowable half of the scenario cell: the sequence
         bucket for two-axis artifacts, or the empty cell (batch-only — the
-        batch bucket only exists once a batch is coalesced)."""
+        batch bucket only exists once a batch is coalesced).  ``x`` is one
+        request's example — a dict of per-input examples or the bare-ndarray
+        single-input sugar — and any seq-carrying input yields the extent
+        (the server validates cross-input consistency at submit)."""
         srv = self.replicas[0].server
         if self._seq_axis is None:
             return ()
-        extent = int(np.asarray(x).shape[srv._seq_pos])
+        in_name, pos = next(iter(srv._seq_pos.items()))
+        ex = x[in_name] if isinstance(x, dict) else x
+        extent = int(np.asarray(ex).shape[pos])
         return (self._seq_axis, srv.cm.bucket_for(self._seq_axis, extent))
 
     def _healthy(self) -> List[_Replica]:
@@ -230,8 +235,9 @@ class ShardedRouter:
         self._cell_owner[cell] = self.replicas.index(chosen)
         return chosen
 
-    def submit(self, x: np.ndarray) -> RoutedRequest:
-        """Route one example to its cell's replica; returns the fleet-level
+    def submit(self, x) -> RoutedRequest:
+        """Route one request (dict of per-input examples, or the bare-ndarray
+        single-input sugar) to its cell's replica; returns the fleet-level
         request handle (``outputs`` fill on completion, like the server's)."""
         cell = self._cell_of(x)
         rep = self._owner_of(cell)

@@ -1,0 +1,273 @@
+"""Sub-8-bit weight lane: packed-int4 vs unpacked-int4 vs reference.
+
+The lane's correctness story is a chain of bit-exact equalities, pinned here
+end to end:
+
+* ``pack_int4``/``unpack_int4`` round-trip (and reject malformed inputs);
+* the *unpacked* int4 reference path (int8 storage, values in [-8, 7]) is
+  the oracle — the packed Pallas kernel and the plan-time packed templates
+  must reproduce it exactly, across scalar and per-channel rescales, both
+  rescale decompositions, ragged shapes, and every backend;
+* the ``weight_bits`` attr survives the optimization passes (the gates
+  rewrite Mul/Add/DQL→QL chains, never the core integer matmul);
+* a w4 model round-trips through the AOT artifact (packed uint8 sidecar,
+  zero re-lowering, pre-seeded plan cache) and renders its precision
+  (``bits=4`` in the plan, ``w4/a8`` in the provenance cell records).
+"""
+import numpy as np
+import pytest
+
+from repro.core import pqir
+from repro.core.compile import compile_model
+from repro.core.patterns import fc_layer, fc_layer_gemm
+from repro.core.quant import quantize_linear_layer
+from repro.core.runtime import ReferenceRuntime
+from repro.kernels import ops as kops
+from repro.kernels.pack import pack_int4, unpack_int4
+
+
+def _int4_fc_model(rng, k=48, n=24, *, per_channel=False, gemm=False,
+                   activation="Relu", two_mul=True, name="int4_fc"):
+    w = rng.normal(size=(k, n)).astype(np.float32) * 0.2
+    b = rng.normal(size=(n,)).astype(np.float32) * 0.1
+    p = quantize_linear_layer(w, b, 0.05, 0.08, bits=4, per_channel=per_channel)
+    gb = pqir.GraphBuilder(name)
+    x = gb.add_input("x", "int8", (None, k))
+    if gemm:
+        y = fc_layer_gemm(gb, x, p, "fc0", activation=activation)
+    else:
+        y = fc_layer(gb, x, p, "fc0", two_mul=two_mul, activation=activation)
+    gb.add_output(y, "int8", (None, n))
+    return gb.build(), p
+
+
+class TestPackInt4:
+    def test_round_trip_all_values(self):
+        rng = np.random.default_rng(0)
+        w = rng.integers(-8, 8, (64, 12)).astype(np.int8)
+        packed = pack_int4(w)
+        assert packed.dtype == np.uint8 and packed.shape == (32, 12)
+        np.testing.assert_array_equal(unpack_int4(packed), w)
+
+    def test_trim_to_odd_k(self):
+        rng = np.random.default_rng(1)
+        w = rng.integers(-8, 8, (10, 4)).astype(np.int8)
+        np.testing.assert_array_equal(unpack_int4(pack_int4(w), k=7), w[:7])
+
+    def test_every_nibble_pair(self):
+        """Exhaustive over the 16x16 value pairs: sign extension is exact."""
+        lo, hi = np.meshgrid(np.arange(-8, 8), np.arange(-8, 8))
+        w = np.stack([lo.ravel(), hi.ravel()]).astype(np.int8)  # (2, 256)
+        np.testing.assert_array_equal(unpack_int4(pack_int4(w)), w)
+
+    def test_rejects_malformed(self):
+        w = np.zeros((4, 4), np.int8)
+        with pytest.raises(ValueError, match="even"):
+            pack_int4(w[:3])
+        with pytest.raises(ValueError, match="int8"):
+            pack_int4(w.astype(np.int16))
+        with pytest.raises(ValueError, match="2-D"):
+            pack_int4(w[0])
+        with pytest.raises(ValueError, match=r"\[-8, 7\]"):
+            pack_int4(np.full((2, 2), 8, np.int8))
+        with pytest.raises(ValueError, match="uint8"):
+            unpack_int4(w)
+        with pytest.raises(ValueError, match="k="):
+            unpack_int4(pack_int4(w), k=9)
+
+
+class TestQuantizeInt4:
+    def test_weights_land_on_int4_range(self):
+        rng = np.random.default_rng(2)
+        w = rng.normal(size=(32, 16)).astype(np.float32)
+        for per_channel in (False, True):
+            p = quantize_linear_layer(w, None, 0.05, 0.1, bits=4,
+                                      per_channel=per_channel)
+            assert p.bits == 4
+            assert p.weight_q.dtype == np.int8  # int4 is int8-stored
+            assert p.weight_q.min() >= -8 and p.weight_q.max() <= 7
+            # the scale is chosen against qmax=7, so the range is used
+            assert p.weight_q.max() == 7 or p.weight_q.min() == -8
+
+    def test_rejects_unsupported_bits(self):
+        w = np.zeros((4, 4), np.float32)
+        with pytest.raises(ValueError, match="bitwidth"):
+            quantize_linear_layer(w, None, 0.05, 0.1, bits=3)
+
+
+class TestDifferentialSweep:
+    """Packed plan == unpacked reference, across the whole config lattice."""
+
+    @pytest.mark.parametrize("per_channel", [False, True])
+    @pytest.mark.parametrize("two_mul", [False, True])
+    @pytest.mark.parametrize("backend", ["ref", "interpret"])
+    def test_packed_matches_reference(self, per_channel, two_mul, backend):
+        rng = np.random.default_rng(7)
+        model, _ = _int4_fc_model(
+            rng, per_channel=per_channel, two_mul=two_mul,
+            name=f"int4_{backend}_{per_channel}_{two_mul}",
+        )
+        xq = rng.integers(-128, 128, (16, 48)).astype(np.int8)
+        want = ReferenceRuntime(model).run({"x": xq})
+        for batch in ("static", "dynamic"):
+            cm = compile_model(model, backend=backend, batch=batch)
+            assert cm.stats["generic"] == 0
+            got = cm.run({"x": xq})
+            for key in want:
+                np.testing.assert_array_equal(
+                    np.asarray(got[key]), want[key],
+                    err_msg=f"{backend}/{batch}",
+                )
+
+    def test_kernel_level_packed_vs_unpacked(self):
+        """qmatmul_packed == qmatmul on the same int4-valued operands, in
+        Pallas interpret mode, over ragged tile-boundary shapes."""
+        from repro.kernels import qmatmul as qmm
+
+        rng = np.random.default_rng(11)
+        for m, k, n in [(8, 128, 128), (32, 256, 128), (16, 384, 256)]:
+            x = rng.integers(-128, 128, (m, k)).astype(np.int8)
+            w = rng.integers(-8, 8, (k, n)).astype(np.int8)
+            b = rng.integers(-2000, 2000, (1, n)).astype(np.int32)
+            qs = np.full((1, n), 2.0 ** -9, np.float32)
+            qsh = np.full((1, n), 2.0 ** -2, np.float32)
+            base = qmm.qmatmul(x, w, b, qs, qsh, relu=True,
+                               bm=8, bk=128, bn=128, interpret=True)
+            packed = qmm.qmatmul_packed(x, pack_int4(w), b, qs, qsh, relu=True,
+                                        bm=8, bk=128, bn=128, interpret=True)
+            np.testing.assert_array_equal(np.asarray(packed), np.asarray(base))
+
+
+class TestPassGates:
+    def test_weight_bits_attr_survives_optimization(self):
+        """qdq_cancel / mul_fold / add_fold rewrite the rescale chains around
+        the core op; the codified bitwidth must ride through untouched."""
+        from repro.passes import optimize
+
+        rng = np.random.default_rng(13)
+        model, _ = _int4_fc_model(rng, name="int4_passes")
+        opt, report = optimize(model)
+        cores = [nd for nd in opt.graph.nodes if nd.op_type == "MatMulInteger"]
+        assert len(cores) == 1
+        assert int(cores[0].attrs.get("weight_bits", 8)) == 4
+        # and the passes did actually fire on the surrounding chain
+        assert report.nodes_after < report.nodes_before
+
+    def test_mixed_int4_int8_layers_coexist(self):
+        """A 2-layer stack with one w4 and one w8 layer: each core op keeps
+        its own precision and the whole model stays bit-exact."""
+        rng = np.random.default_rng(17)
+        w1 = rng.normal(size=(32, 24)).astype(np.float32) * 0.2
+        b1 = rng.normal(size=(24,)).astype(np.float32) * 0.1
+        w2 = rng.normal(size=(24, 8)).astype(np.float32) * 0.2
+        b2 = rng.normal(size=(8,)).astype(np.float32) * 0.1
+        p1 = quantize_linear_layer(w1, b1, 0.05, 0.08, bits=4)
+        p2 = quantize_linear_layer(w2, b2, 0.08, 0.1, bits=8)
+        gb = pqir.GraphBuilder("mixed_bits")
+        x = gb.add_input("x", "int8", (None, 32))
+        h = fc_layer(gb, x, p1, "fc0", activation="Relu")
+        y = fc_layer(gb, h, p2, "fc1")
+        gb.add_output(y, "int8", (None, 8))
+        model = gb.build()
+        xq = rng.integers(-128, 128, (8, 32)).astype(np.int8)
+        want = ReferenceRuntime(model).run({"x": xq})
+        for backend in ("ref", "interpret"):
+            cm = compile_model(model, backend=backend, batch="dynamic")
+            if backend == "interpret":
+                # tiled templates carry the precision on the shape record
+                shapes = [s.params["shape"] for s in cm.plan.steps
+                          if isinstance(s.params.get("shape"), dict)]
+                assert [sh.get("bits", 8) for sh in shapes] == [4, 8]
+            got = cm.run({"x": xq})
+            for key in want:
+                np.testing.assert_array_equal(np.asarray(got[key]), want[key])
+
+
+class TestPlanAndArtifact:
+    def test_packed_template_halves_weight_bytes(self):
+        rng = np.random.default_rng(19)
+        model, p = _int4_fc_model(rng, k=64, n=32, name="int4_tmpl")
+        cm = compile_model(model, backend="interpret", batch="dynamic")
+        step = next(s for s in cm.plan.steps
+                    if isinstance(s.params.get("shape"), dict))
+        sh = step.params["shape"]
+        assert sh["bits"] == 4
+        wq = np.asarray(step.consts[0])
+        assert wq.dtype == np.uint8 and wq.shape[0] * 2 == sh["kp"]
+        assert "bits=4" in cm.plan.pretty()
+
+    def test_w4_artifact_round_trip_zero_relowering(self, tmp_path):
+        from repro.backend.artifact import load_artifact, save_artifact
+        from repro.obs import trace as _trace
+
+        rng = np.random.default_rng(23)
+        model, _ = _int4_fc_model(rng, k=64, n=32, name="int4_art")
+        cm = compile_model(model, backend="interpret", batch="dynamic")
+        xq = rng.integers(-128, 128, (8, 64)).astype(np.int8)
+        want = cm.run({"x": xq})
+        path = str(tmp_path / "w4.json")
+        save_artifact(cm, path)
+
+        tracer = _trace.install()
+        try:
+            cm2 = load_artifact(path, warm=True)
+            got = cm2.run({"x": xq})
+        finally:
+            _trace.uninstall()
+        relower = len(tracer.spans("compile.fuse")) + len(tracer.spans("compile.lower"))
+        assert relower == 0
+        stats = cm2.plan_cache.stats
+        assert stats["misses"] == 0 and stats["hits"] == 1
+        for key in want:
+            np.testing.assert_array_equal(np.asarray(got[key]), np.asarray(want[key]))
+        # the packed uint8 weights round-tripped through the npz sidecar
+        step = next(s for s in cm2.plan.steps
+                    if isinstance(s.params.get("shape"), dict))
+        assert np.asarray(step.consts[0]).dtype == np.uint8
+        # hot-cell records carry the precision for plan_diff
+        import json
+        cells = json.load(open(path))["cells"]
+        assert cells and all(
+            rec.get("bits") == 4 for c in cells for rec in c["tiles"].values()
+        )
+
+    def test_provenance_cells_render_w4_a8(self):
+        rng = np.random.default_rng(29)
+        model, _ = _int4_fc_model(rng, name="int4_prov")
+        cm = compile_model(model, backend="interpret", batch="dynamic")
+        cm.run({"x": rng.integers(-128, 128, (4, 48)).astype(np.int8)})
+        recs = [r for ev in cm.plan.provenance.specializations for _, r in ev.tiles]
+        assert recs and all("w4/a8" in r for r in recs)
+
+    def test_plan_diff_surfaces_bitwidth(self, tmp_path):
+        """A w4 artifact and its w8 twin must never diff as identical."""
+        import importlib.util
+        import os
+
+        from repro.backend.artifact import save_artifact
+
+        spec = importlib.util.spec_from_file_location(
+            "plan_diff",
+            os.path.join(os.path.dirname(__file__), "..", "scripts", "plan_diff.py"),
+        )
+        plan_diff = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(plan_diff)
+
+        rng = np.random.default_rng(31)
+        paths = {}
+        for bits, name in ((8, "w8"), (4, "w4")):
+            rng_b = np.random.default_rng(31)
+            w = rng_b.normal(size=(48, 24)).astype(np.float32) * 0.2
+            b = rng_b.normal(size=(24,)).astype(np.float32) * 0.1
+            p = quantize_linear_layer(w, b, 0.05, 0.08, bits=bits)
+            gb = pqir.GraphBuilder("bits_twin")
+            x = gb.add_input("x", "int8", (None, 48))
+            y = fc_layer(gb, x, p, "fc0", activation="Relu")
+            gb.add_output(y, "int8", (None, 24))
+            cm = compile_model(gb.build(), backend="ref", batch="dynamic")
+            cm.run({"x": rng.integers(-128, 128, (4, 48)).astype(np.int8)})
+            paths[name] = str(tmp_path / f"{name}.json")
+            save_artifact(cm, paths[name])
+        # self-diff stays clean; w4-vs-w8 is structurally different
+        assert plan_diff.main([paths["w4"], paths["w4"]]) == 0
+        assert plan_diff.main([paths["w8"], paths["w4"]]) == 1

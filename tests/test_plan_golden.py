@@ -201,3 +201,49 @@ def test_two_axis_specialization_renders_bindings():
     head = plan.pretty().splitlines()[0]
     assert "batch=(N=4,S=32)" in head
     assert "m=128" in plan.pretty()  # flat M = 4 × 32
+
+
+def quickstart_mlp_int4():
+    """The quickstart model re-quantized onto the sub-8-bit weight lane:
+    same seeds/spec, ``weight_bits=4`` (weights on [-8, 7], packed two
+    nibbles per byte at plan time)."""
+    rng = np.random.default_rng(0)
+    spec = MLPSpec(
+        weights=[
+            rng.normal(size=(64, 128)).astype(np.float32) * 0.2,
+            rng.normal(size=(128, 128)).astype(np.float32) * 0.15,
+            rng.normal(size=(128, 10)).astype(np.float32) * 0.2,
+        ],
+        biases=[
+            rng.normal(size=(128,)).astype(np.float32) * 0.1,
+            rng.normal(size=(128,)).astype(np.float32) * 0.1,
+            rng.normal(size=(10,)).astype(np.float32) * 0.1,
+        ],
+        activations=["Relu", "Relu", None],
+    )
+    calib = rng.normal(size=(512, 64)).astype(np.float32)
+    return quantize_mlp(
+        spec, calib, observer="percentile", name="quickstart_mlp_int4",
+        weight_bits=4,
+    )
+
+
+def test_quickstart_mlp_int4_plan_golden():
+    """The w4 plan rendering: every fused step carries ``bits=4`` and its
+    packed uint8 weight template (kp/2 rows)."""
+    cm = compile_model(quickstart_mlp_int4(), backend="interpret")
+    assert cm.stats["fused_qlinear"] == 3 and cm.stats["generic"] == 0
+    text = cm.plan.pretty()
+    assert text.count("bits=4") == 3
+    _check_golden("quickstart_mlp_int4.plan.txt", text + "\n")
+
+
+def test_quickstart_mlp_int4_provenance_golden():
+    """The w4 provenance rendering: every specialized cell's tile record
+    carries the ``w4/a8`` precision tag."""
+    cm = compile_model(quickstart_mlp_int4(), backend="interpret", batch="dynamic")
+    cm.specialized(1)
+    cm.specialized(8)
+    text = cm.plan.pretty(verbose=True)
+    assert "w4/a8" in text and "specializations: 2" in text
+    _check_golden("quickstart_mlp_int4.provenance.txt", text + "\n")

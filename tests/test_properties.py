@@ -137,6 +137,8 @@ class TestRandomGraphConformance:
             "with_bias": st.booleans(),
             "activation": st.sampled_from([None, "Relu", "Tanh"]),
             "width": st.integers(min_value=1, max_value=48),
+            # mixed-precision graphs: w4 and w8 layers coexist in one model
+            "bits": st.sampled_from([4, 8]),
         }
     )
 
@@ -160,11 +162,14 @@ class TestRandomGraphConformance:
             b = rng.normal(size=(cfg["width"],)).astype(np.float32) * 0.1 if cfg["with_bias"] else None
             if cfg["activation"] == "Tanh":
                 p = quant.quantize_linear_layer(
-                    w, b, 0.05, patterns.TANH_INPUT_ABSMAX / 127.0, per_channel=cfg["per_channel"]
+                    w, b, 0.05, patterns.TANH_INPUT_ABSMAX / 127.0,
+                    per_channel=cfg["per_channel"], bits=cfg["bits"],
                 )
                 x = patterns.fc_int8_tanh(gb, x, p, f"l{i}")
             else:
-                p = quant.quantize_linear_layer(w, b, 0.05, 0.1, per_channel=cfg["per_channel"])
+                p = quant.quantize_linear_layer(
+                    w, b, 0.05, 0.1, per_channel=cfg["per_channel"], bits=cfg["bits"]
+                )
                 if cfg["gemm"]:
                     x = patterns.fc_layer_gemm(
                         gb, x, p, f"l{i}", two_mul=cfg["two_mul"],

@@ -126,9 +126,10 @@ class TestCompiledModelServer:
         with pytest.raises(ValueError, match="dynamic"):
             CompiledModelServer(cm)
 
-    def test_rejects_multi_input_artifacts_at_construction(self):
-        """A second (even static) input can't be fed by the coalescing loop —
-        fail at construction, not with a KeyError mid-serving."""
+    def test_rejects_non_batch_carrying_inputs_at_construction(self):
+        """Multi-input artifacts coalesce fine, but every input must carry
+        the leading batch dim — a static side input can't be stacked per
+        request; fail at construction, not with a KeyError mid-serving."""
         from repro.core import pqir
 
         gb = pqir.GraphBuilder("two_in")
@@ -137,7 +138,7 @@ class TestCompiledModelServer:
         y = gb.op("MatMul", [a, b])
         gb.add_output(y, "float32", (None, 4))
         cm = compile_model(gb.build(), backend="ref", batch="dynamic", fuse=False)
-        with pytest.raises(ValueError, match="exactly one input"):
+        with pytest.raises(ValueError, match="do not carry"):
             CompiledModelServer(cm)
 
     def test_summary_snapshots_do_not_alias_live_state(self):
@@ -279,7 +280,7 @@ class TestSequenceGridServer:
         srv = CompiledModelServer(cm, CompiledServerConfig(max_batch=4))
         a = srv.submit(rng.integers(-128, 128, (3, 16)).astype(np.int8))
         b = srv.submit(rng.integers(-128, 128, (5, 16)).astype(np.int8))
-        srv._seq_pos = None  # simulate a server that can't right-pad
+        srv._seq_pos = {}  # simulate a server that can't right-pad
         with pytest.raises(ValueError):
             srv.step()  # np.stack of ragged examples
         assert [r.uid for r in srv.queue] == [a.uid, b.uid]  # nothing lost
@@ -290,7 +291,7 @@ class TestSequenceGridServer:
         srv = CompiledModelServer(cm)
         with pytest.raises(ValueError, match="shape"):
             srv.submit(rng.integers(-128, 128, (5, 32)).astype(np.int8))  # wrong width
-        with pytest.raises(ValueError, match="shape"):
+        with pytest.raises(ValueError, match="empty extent"):
             srv.submit(rng.integers(-128, 128, (0, 16)).astype(np.int8))  # empty seq
         srv.submit(rng.integers(-128, 128, (5, 16)).astype(np.int8))  # seq len is free
         assert srv.metrics["requests"] == 1
@@ -538,3 +539,86 @@ class TestUniformCacheMetrics:
         assert s["plan_cache"]["hit_rate"] == pytest.approx(0.75)
         assert s["plan_cache_hit_rate"] == s["plan_cache"]["hit_rate"]
         assert cm.cache_stats["hit_rate"] == pytest.approx(0.75)
+
+
+def _two_input_model():
+    """Two batch-carrying inputs, both also carrying the 'S' sequence axis:
+    the server must stack both and right-pad both to the group's longest."""
+    from repro.core import patterns, pqir, quant
+
+    rng = np.random.default_rng(41)
+    pa = quant.quantize_linear_layer(
+        rng.normal(size=(16, 8)).astype(np.float32) * 0.2,
+        rng.normal(size=(8,)).astype(np.float32) * 0.1, 0.05, 0.1,
+    )
+    pb = quant.quantize_linear_layer(
+        rng.normal(size=(12, 8)).astype(np.float32) * 0.2,
+        rng.normal(size=(8,)).astype(np.float32) * 0.1, 0.05, 0.1,
+    )
+    gb = pqir.GraphBuilder("served_two_in")
+    xa = gb.add_input("xa", "int8", ("N", "S", 16))
+    xb = gb.add_input("xb", "int8", ("N", "S", 12))
+    ya = patterns.fc_layer(gb, xa, pa, "fca", two_mul=True, activation="Relu")
+    yb = patterns.fc_layer(gb, xb, pb, "fcb", two_mul=True, activation="Relu")
+    gb.add_output(ya, "int8", ("N", "S", 8))
+    gb.add_output(yb, "int8", ("N", "S", 8))
+    return gb.build(), rng
+
+
+class TestMultiInputCoalescing:
+    def _server(self, max_batch=4):
+        model, rng = _two_input_model()
+        cm = compile_model(model, backend="ref", dynamic_axes={"N": None, "S": 8})
+        return model, rng, CompiledModelServer(cm, CompiledServerConfig(max_batch=max_batch))
+
+    def _example(self, rng, s):
+        return {
+            "xa": rng.integers(-128, 128, (s, 16)).astype(np.int8),
+            "xb": rng.integers(-128, 128, (s, 12)).astype(np.int8),
+        }
+
+    def test_multi_input_requests_bit_exact_per_request(self):
+        model, rng, srv = self._server()
+        rt = ReferenceRuntime(model)
+        lens = [3, 7, 5, 7, 2, 9]
+        reqs = [srv.submit(self._example(rng, s)) for s in lens]
+        srv.run_until_drained()
+        for r, s in zip(reqs, lens):
+            assert r.done and r.seq_len == s
+            solo = rt.run({k: v[None] for k, v in r.feeds.items()})
+            for name, want in solo.items():
+                np.testing.assert_array_equal(r.outputs[name], want[0], err_msg=name)
+
+    def test_bare_ndarray_rejected_on_multi_input_artifact(self):
+        _, rng, srv = self._server()
+        with pytest.raises(ValueError, match="multi-input"):
+            srv.submit(rng.integers(-128, 128, (4, 16)).astype(np.int8))
+
+    def test_missing_or_unknown_inputs_rejected(self):
+        _, rng, srv = self._server()
+        ex = self._example(rng, 4)
+        with pytest.raises(ValueError, match="exactly the model inputs"):
+            srv.submit({"xa": ex["xa"]})
+        with pytest.raises(ValueError, match="exactly the model inputs"):
+            srv.submit({**ex, "stray": ex["xa"]})
+
+    def test_inconsistent_axis_bindings_rejected_at_submit(self):
+        """One request binding S=4 on one input and S=6 on the other must be
+        rejected at admission, not mis-coalesced."""
+        _, rng, srv = self._server()
+        with pytest.raises(ValueError, match="inconsistent axis bindings"):
+            srv.submit(
+                {
+                    "xa": rng.integers(-128, 128, (4, 16)).astype(np.int8),
+                    "xb": rng.integers(-128, 128, (6, 12)).astype(np.int8),
+                }
+            )
+        assert srv.metrics["requests"] == 0
+
+    def test_single_input_sugar_still_works(self):
+        model, rng = _seq_artifact()
+        cm = compile_model(model, backend="ref", dynamic_axes={"N": None, "S": 8})
+        srv = CompiledModelServer(cm)
+        req = srv.submit(rng.integers(-128, 128, (5, 16)).astype(np.int8))
+        srv.run_until_drained()
+        assert req.done and req.x.shape == (5, 16)  # .x sugar on 1-input reqs
