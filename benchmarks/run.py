@@ -43,6 +43,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
                            HBM-byte ratio; asserts packed-int4 bit-exact vs
                            the unpacked reference and w4 weight bytes ≤
                            0.55× w8)
+  sys_attn_decode        — the compiled token path (docs/token_path.md):
+                           transformer decode through the specialized
+                           ("N",1,…) ExecutionPlan with int8 KV state slots
+                           and fused attention, vs the opaque-JAX engine at
+                           the same geometry, decode cells M ∈ {1,8}
+                           (derived: tokens/s both ways per cell; asserts
+                           compiled decode bit-exact vs the jnp mirror and
+                           exactly one specialization per visited cell)
   sys_w8a8_decode        — reduced-arch decode step: bf16 vs W8A8+int8-KV
   sys_grad_compress      — int8 cross-pod gradient all-reduce (derived: wire-
                            bytes ratio vs f32)
@@ -51,7 +59,7 @@ Run:  PYTHONPATH=src python -m benchmarks.run [--smoke] [--json PATH]
 
 ``--smoke`` runs the fast subset (fig1, pass pipeline, plan overhead,
 per-channel overhead, serving-compiled, seq buckets, autotune, fleet,
-int4 decode) for CI.  ``--json BENCH_<n>.json``
+int4 decode, attn decode) for CI.  ``--json BENCH_<n>.json``
 additionally persists the rows as JSON so the perf trajectory survives
 across PRs (CI uploads the file as a build artifact).
 """
@@ -659,6 +667,99 @@ def bench_int4_decode():
     )
 
 
+def bench_attn_decode():
+    """The compiled token path on the decode hot loop: the transformer block
+    (QKV/O + int8-KV update + fused attention + MLP) executing through the
+    specialized ``("N",1,…)`` ExecutionPlan — int8 KV cache in state slots,
+    mixed w4/w8 projections — vs the opaque jitted-JAX engine path at the
+    same geometry, at decode cells M ∈ {1, 8}.  Before timing: the compiled
+    step must be bit-exact against the jnp mirror (``decode_jax``) at every
+    cell, and the shared PlanCache must hold exactly one specialization per
+    visited cell (zero per-step re-lowering).  See docs/token_path.md."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ModelConfig
+    from repro.models import model as M
+    from repro.serving.engine import OpaqueModelAdapter
+    from repro.serving.token_path import (
+        CompiledTokenAdapter,
+        CompiledTokenPath,
+        TokenPathConfig,
+        decode_jax,
+        make_token_params,
+    )
+
+    cfg = TokenPathConfig()
+    params = make_token_params(cfg, seed=3)
+    tp = CompiledTokenPath(cfg, params, backend="ref", s_granularity=8)
+    ad = CompiledTokenAdapter(tp)
+
+    # opaque baseline: a decoder of the same geometry on the bf16 JAX path
+    ocfg = ModelConfig(
+        name="tiny-opaque", family="decoder", n_layers=cfg.n_layers,
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_heads,
+        d_ff=cfg.d_ff, vocab_size=cfg.vocab, mlp_type="gelu",
+    )
+    oparams = M.init_params(jax.random.PRNGKey(0), ocfg)
+    oad = OpaqueModelAdapter(oparams, ocfg, compute_dtype=jnp.bfloat16)
+
+    rng = np.random.default_rng(11)
+    s_max, pos0 = 32, 10
+    cells = (1, 8)
+    parts = []
+    for m in cells:
+        toks = rng.integers(1, cfg.vocab, (m, 1)).astype(np.int32)
+        pos = np.full((m,), pos0, np.int64)
+        cache = ad.init_cache(m, s_max)
+        for k in cache:  # a warm, non-trivial KV state
+            cache[k] = rng.integers(-128, 128, cache[k].shape).astype(np.int8)
+
+        # bit-exactness gate: compiled decode == jnp mirror, logits + states
+        onehot = np.zeros((m, s_max, 1), np.int8)
+        onehot[:, pos0, 0] = 1
+        mask = np.broadcast_to(
+            np.arange(s_max)[None, None, :] <= pos0, (m, 1, s_max)
+        ).astype(np.float32)
+        logits_c, nxt = tp.decode(toks, onehot, mask, cache)
+        states = [
+            (cache[tp.state_specs[2 * l].input], cache[tp.state_specs[2 * l + 1].input])
+            for l in range(cfg.n_layers)
+        ]
+        logits_j, jstates = decode_jax(cfg, params, toks, onehot, mask, states)
+        assert np.array_equal(logits_c, np.asarray(logits_j)), (
+            f"compiled decode diverged from the jnp mirror at M={m}"
+        )
+        for l, (kj, vj) in enumerate(jstates):
+            assert np.array_equal(nxt[tp.state_specs[2 * l].input], np.asarray(kj))
+            assert np.array_equal(nxt[tp.state_specs[2 * l + 1].input], np.asarray(vj))
+
+        us_c = _timeit(lambda: ad.decode(toks, pos, cache))
+        ocache = oad.init_cache(m, s_max)
+        us_o = _timeit(lambda: jax.block_until_ready(oad.decode(toks, pos, ocache)[0]))
+        parts.append(
+            f"tok_s_b{m}_compiled={m / (us_c * 1e-6):.0f};"
+            f"tok_s_b{m}_opaque={m / (us_o * 1e-6):.0f};"
+            f"speedup_b{m}={us_o / us_c:.2f}x"
+        )
+
+    # exactly one specialization per visited decode cell, all hits after
+    stats = tp.cache_stats()
+    assert stats["misses"] == len(cells), stats
+    us_c1 = _timeit(
+        lambda: ad.decode(
+            np.ones((1, 1), np.int32), np.full((1,), pos0, np.int64), ad.init_cache(1, s_max)
+        )
+    )
+    row(
+        "sys_attn_decode",
+        us_c1,
+        ";".join(parts)
+        + f";plan_misses={stats['misses']};cells={len(cells)};bitexact=True;"
+        f"d={cfg.d_model};layers={cfg.n_layers};heads={cfg.n_heads}",
+    )
+
+
 def bench_grad_compress():
     import jax
     import jax.numpy as jnp
@@ -730,6 +831,7 @@ def main(argv=None) -> None:
     bench_autotune()
     bench_fleet()
     bench_int4_decode()
+    bench_attn_decode()
     if not args.smoke:
         bench_w8a8_decode()
         bench_grad_compress()

@@ -27,7 +27,8 @@ SCHEMA = "repro-plan-v1"
 #: ``bits`` is the weight bitwidth of the sub-8-bit lane (absent = int8): a
 #: w4 plan and its w8 twin have identical logical shapes but different
 #: packed-weight layouts and HBM traffic, so they must never diff clean.
-_TILE_KEYS = ("m", "k", "n", "kp", "np", "bm", "bk", "bn", "bits")
+#: ``b/s/t/dh/bq`` are the fused-attention record (``bq`` = query row-block).
+_TILE_KEYS = ("m", "k", "n", "kp", "np", "bm", "bk", "bn", "bits", "b", "s", "t", "dh", "bq")
 
 
 def _load(path: str) -> Dict[str, Any]:
@@ -73,6 +74,19 @@ def _fmt_tiles(tiles: Dict[str, Any]) -> str:
     return ",".join(f"{k}={tiles[k]}" for k in _TILE_KEYS if k in tiles) or "-"
 
 
+def _state_sigs(plan: Dict[str, Any]) -> List[str]:
+    """Persistent state-slot records: name, pinned slots, dtype and shape
+    (the KV cache's seq extent rides in the shape — symbolic on a template,
+    bound on a specialized plan).  A KV-carrying plan therefore never diffs
+    clean against its stateless twin."""
+    sigs = []
+    for rec in plan.get("states", []):
+        name, _inp, _out, in_slot, out_slot, dtype, shape = rec
+        dims = "×".join(str(d) for d in shape) if shape else "?"
+        sigs.append(f"{name}: %{in_slot}->%{out_slot} {dtype}[{dims}]")
+    return sigs
+
+
 def _cells(doc: Dict[str, Any]) -> Dict[str, Dict[str, str]]:
     """cell label -> {step name -> tile record incl. source}."""
     out: Dict[str, Dict[str, str]] = {}
@@ -102,6 +116,7 @@ def diff(a: Dict[str, Any], b: Dict[str, Any]) -> Tuple[List[str], bool]:
     row("backend", pa["backend"], pb["backend"])
     row("buffer slots", pa["num_slots"], pb["num_slots"])
     row("axes", ",".join(pa.get("axes", [])) or "-", ",".join(pb.get("axes", [])) or "-")
+    row("state slots", "; ".join(_state_sigs(pa)) or "-", "; ".join(_state_sigs(pb)) or "-")
     row("steps", len(pa["steps"]), len(pb["steps"]))
 
     sa = [_step_sig(s) for s in pa["steps"]]

@@ -55,6 +55,7 @@ from .plan import (
     Arg,
     ExecutionPlan,
     PlanStep,
+    StateBinding,
     ValueInfo,
     bindings_key,
     resolve_bucketing,
@@ -71,7 +72,8 @@ ARTIFACT_SCHEMA = "repro-plan-v1"
 #: Shape-record tile fields recorded per hot cell (subset present per step).
 #: ``bits`` rides along for sub-8-bit weight cells (absent means int8), so a
 #: plan_diff of a w4 artifact against its w8 twin surfaces the precision.
-_TILE_KEYS = ("m", "bm", "bk", "bn", "bits")
+#: ``b/s/t/dh/bq`` are the fused-attention record (``bq`` is its tuned tile).
+_TILE_KEYS = ("m", "bm", "bk", "bn", "bits", "b", "s", "t", "dh", "bq")
 
 
 def sidecar_path(path: str) -> str:
@@ -141,13 +143,22 @@ def _cell_records(cm: "CompiledModel") -> List[Dict[str, Any]]:
     if cm.plan_cache is None:
         return []
     sources = _tile_sources(cm.plan.provenance)
+    shared = getattr(cm, "_shared_cache", False)
+    own = cm.model.graph.name
     cells = []
     for key in cm.plan_cache.keys():
+        bkey = key
+        if shared:
+            # fleet-shared cache: keys are (graph name, bindings key) — only
+            # this model's cells belong in its artifact
+            if not (isinstance(key, tuple) and len(key) == 2 and key[0] == own):
+                continue
+            bkey = key[1]
         entry = cm.plan_cache.peek(key)
         if entry is None:
             continue
         plan, _ = entry
-        bindings = dict(key)
+        bindings = dict(bkey)
         if plan.batch == "dynamic":
             # a partially-bound template in the cache cannot be replayed as a
             # warm cell (it has no tiles of its own); skip it
@@ -155,11 +166,11 @@ def _cell_records(cm: "CompiledModel") -> List[Dict[str, Any]]:
         tiles: Dict[str, Any] = {}
         for step in plan.steps:
             shape = step.params.get("shape")
-            if not isinstance(shape, dict) or "bm" not in shape:
+            if not isinstance(shape, dict) or not ("bm" in shape or "bq" in shape):
                 continue
             name = step.name or step.kernel
             rec = {k: int(shape[k]) for k in _TILE_KEYS if k in shape}
-            rec["source"] = sources.get((key, name), "heuristic")
+            rec["source"] = sources.get((bkey, name), "heuristic")
             tiles[name] = rec
         cells.append({"bindings": bindings, "tiles": tiles})
     return cells
@@ -240,6 +251,15 @@ def save_artifact(cm: "CompiledModel", path: str) -> str:
             "batch": plan.batch if isinstance(plan.batch, str) else _enc(plan.batch),
             "axes": list(plan.axes),
             "steps": steps_json,
+            # persistent state slots (the token path's int8 KV cache): name,
+            # tensor endpoints, pinned slots, dtype and (possibly symbolic)
+            # shape all round-trip, so a loaded plan still knows which
+            # buffers it carries across invocations
+            "states": [
+                [s.name, s.input, s.output, s.in_slot, s.out_slot,
+                 s.dtype, _shape_to_json(s.shape)]
+                for s in plan.states
+            ],
         },
         "provenance": None if plan.provenance is None else plan.provenance.to_dict(),
         "stats": {k: int(v) for k, v in cm.stats.items()},
@@ -298,12 +318,15 @@ class _ReplayTuner:
         rec = self._tiles.get((bindings_key(bindings), step.name or step.kernel))
         if rec is None:
             return shape, "heuristic"
-        shape = kops.with_tiles(
-            shape,
-            bm=rec.get("bm"),
-            bk=rec.get("bk"),
-            bn=rec.get("bn"),
-        )
+        if "bq" in rec:  # fused attention: the query row-block is the tile
+            shape = dict(shape, bq=int(rec["bq"]))
+        else:
+            shape = kops.with_tiles(
+                shape,
+                bm=rec.get("bm"),
+                bk=rec.get("bk"),
+                bn=rec.get("bn"),
+            )
         return shape, str(rec.get("source", "heuristic"))
 
 
@@ -347,6 +370,7 @@ def load_artifact(
     *,
     registry=None,
     autotuner=None,
+    plan_cache=None,
     warm: bool = False,
 ) -> "CompiledModel":
     """Reconstruct a :class:`CompiledModel` from an artifact — **zero
@@ -361,8 +385,10 @@ def load_artifact(
     feeds, forcing the jit trace/compile up front — a replica warm-started
     this way serves its first real batch at steady-state latency.
 
-    ``registry``/``autotuner`` attach exactly as on a fresh compile (the
-    tuner only engages for *new* cells beyond the recorded set).
+    ``registry``/``autotuner``/``plan_cache`` attach exactly as on a fresh
+    compile (the tuner only engages for *new* cells beyond the recorded set;
+    a shared ``plan_cache`` receives the pre-seeded cells under their
+    graph-qualified keys).
     """
     from ..core.compile import CompiledModel
 
@@ -414,6 +440,13 @@ def load_artifact(
         batch=batch,
         axes=tuple(p["axes"]),
         provenance=prov,
+        states=tuple(
+            StateBinding(
+                name=n, input=i, output=o, in_slot=int(isl), out_slot=int(osl),
+                dtype=d, shape=_shape_from_json(sh),
+            )
+            for n, i, o, isl, osl, d, sh in p.get("states", [])
+        ),
     )
     axis_specs = {
         a: (None if spec is None else int(spec))
@@ -428,6 +461,7 @@ def load_artifact(
         dynamic_axes={a: resolve_bucketing(spec) for a, spec in axis_specs.items()},
         axis_specs=axis_specs,
         autotuner=autotuner,
+        plan_cache=plan_cache,
     )
     cells = doc.get("cells", [])
     if cells and cm.plan_cache is not None:
@@ -437,8 +471,10 @@ def load_artifact(
             spec = specialize_plan(plan, bindings, tuner=replay)
             fn = jax.jit(spec.execute)
             # direct put — no lookup, so hit/miss counters stay untouched and
-            # "zero new specializations" is observable as misses == 0
-            cm.plan_cache.put(bindings_key(bindings), (spec, fn))
+            # "zero new specializations" is observable as misses == 0; routed
+            # through cache_key so a shared (fleet) cache gets the same
+            # graph-qualified key the model will look up with
+            cm.plan_cache.put(cm.cache_key(bindings), (spec, fn))
             if warm:
                 feeds = _zero_feeds(cm, bindings)
                 if feeds is not None:

@@ -105,6 +105,42 @@ _BM_LATTICE = (32, 64, 128, 256)
 _BK_LATTICE = (128, 256, 512)
 _BN_LATTICE = (128, 256, 512)
 
+#: Query row-block lattice for the fused attention kernel (its one tile).
+_BQ_LATTICE = (32, 64, 128, 256)
+
+
+def is_attention_shape(shape: Dict[str, Any]) -> bool:
+    """True for a fused-attention shape record (``{b, s, t, dh[, bq]}``) as
+    opposed to a qmatmul record (``{m, k, n, kp, np, ...}``)."""
+    return "dh" in shape and "t" in shape and "m" not in shape
+
+
+def attention_candidates(
+    s: int, t: int, dh: int, *, hw: cost.HardwareSpec = cost.TPU_V5E
+) -> List[int]:
+    """Legal ``bq`` values for a bound attention cell: sublane-aligned, no
+    larger than the 32-rounded query count (a bigger block only adds query
+    padding), working set within VMEM."""
+    sp = max(32, (int(s) + 31) // 32 * 32)
+    return [
+        bq for bq in _BQ_LATTICE
+        if bq <= sp and cost.qattention_vmem_bytes(t, dh, bq) <= hw.vmem_bytes
+    ]
+
+
+def seed_attention_candidates(
+    shape: Dict[str, Any], *, budget: int, hw: cost.HardwareSpec = cost.TPU_V5E
+) -> List[int]:
+    """Measurement list for one bound attention record: the heuristic ``bq``
+    first, then the rest of the lattice ranked by the analytic cost
+    (:func:`repro.backend.cost.qattention_tile_cost`), truncated to
+    ``budget``."""
+    b, s, t, dh = (int(shape[f]) for f in ("b", "s", "t", "dh"))
+    heuristic = int(shape["bq"])
+    rest = [c for c in attention_candidates(s, t, dh, hw=hw) if c != heuristic]
+    rest.sort(key=lambda c: (cost.qattention_tile_cost(b, s, t, dh, c, hw=hw), c))
+    return [heuristic] + rest[: max(0, budget - 1)]
+
 
 def tile_candidates(
     m: int, kp: int, np_: int, *, hw: cost.HardwareSpec = cost.TPU_V5E, weight_bits: int = 8
@@ -202,6 +238,8 @@ def shape_key(shape: Dict[str, Any]) -> str:
     *is* identity (an int4 cell runs a different kernel on half the weight
     bytes); it is appended only when sub-8 so existing int8 cache keys stay
     byte-identical."""
+    if is_attention_shape(shape):
+        return ",".join(f"{f}={int(shape[f])}" for f in ("b", "s", "t", "dh"))
     key = ",".join(f"{f}={int(shape[f])}" for f in ("m", "k", "n", "kp", "np"))
     if shape.get("bits", 8) != 8:
         key += f",bits={int(shape['bits'])}"
@@ -285,6 +323,8 @@ class Autotuner:
         """Resolve one bound step's tiles: session → disk cache → measured
         search (blocking).  Returns the (possibly re-tiled) shape record and
         its source tag."""
+        if is_attention_shape(shape):
+            return self._tune_attention(step, shape, backend, bindings)
         if not self.tunable(shape, backend):
             return shape, "heuristic"
         key = self.key_for(step, shape, backend, bindings)
@@ -304,6 +344,97 @@ class Autotuner:
                     res = self._run_search(key, step, shape, backend, cands)
                     sp.set(bm=res.tiles[0], bk=res.tiles[1], bn=res.tiles[2])
         return self._apply(shape, res), res.source
+
+    def _tune_attention(
+        self, step, shape: Dict[str, Any], backend: str, bindings: Dict[str, int]
+    ) -> Tuple[Dict[str, Any], str]:
+        """The fused attention kernel's one-dimensional search (``bq``),
+        sharing the session/disk-cache/measurement plumbing but none of the
+        qmatmul lattice: attention records have no flat M and no pre-padded
+        parameter arrays to stay divisor-compatible with."""
+        if backend == "ref":
+            return shape, "heuristic"  # the jnp oracle has no tiles
+        key = self.key_for(step, shape, backend, bindings)
+        res = self._session.get(key)
+        if res is None and self.cache is not None:
+            entry = self.cache.get(key)
+            if entry is not None:
+                self.registry.counter("autotune.cache_hits").inc()
+                res = self._session[key] = _Resolution((int(entry["bq"]),), "cache")
+            else:
+                self.registry.counter("autotune.cache_misses").inc()
+        if res is None:
+            cands = seed_attention_candidates(shape, budget=self.budget, hw=self.hw)
+            if len(cands) <= 1:
+                res = self._session[key] = _Resolution(None, "heuristic")
+            else:
+                with _trace.span(
+                    "backend.autotune",
+                    step=step.name or step.kernel,
+                    cell=cell_key(bindings),
+                    candidates=len(cands),
+                ) as sp:
+                    timings: Dict[int, float] = {}
+                    for bq in cands:
+                        cshape = {**shape, "bq": int(bq)}
+                        with _trace.span("autotune.candidate", tiles=f"bq={bq}") as csp:
+                            if self.measure_fn is not None:
+                                t = float(self.measure_fn(step, cshape, backend))
+                            else:
+                                t = self._measure_real_attention(step, cshape, backend)
+                            csp.set(us=round(t * 1e6, 3))
+                        self.measurements += 1
+                        self.registry.counter("autotune.measurements").inc()
+                        timings[int(bq)] = t
+                    heuristic = cands[0]
+                    best = min(timings, key=lambda c: (timings[c], c != heuristic, c))
+                    res = self._session[key] = _Resolution((best,), "tuned")
+                    self.registry.counter("autotune.cells").inc()
+                    sp.set(bq=best)
+                    if self.cache is not None:
+                        self.cache.put(
+                            key,
+                            {
+                                "bq": best,
+                                "best_us": round(timings[best] * 1e6, 3),
+                                "heuristic_us": round(timings[heuristic] * 1e6, 3),
+                                "measured": len(timings),
+                                "candidates_us": {
+                                    str(c): round(t * 1e6, 3)
+                                    for c, t in sorted(timings.items())
+                                },
+                            },
+                        )
+        if res.tiles is None:
+            return shape, res.source
+        return {**shape, "bq": int(res.tiles[0])}, res.source
+
+    def _measure_real_attention(self, step, shape: Dict[str, Any], backend: str) -> float:
+        import jax  # deferred: keep module import light
+
+        from ..core.pqir import DTYPES
+        from ..kernels import qattention as _qatt
+
+        (lut,) = step.consts
+        p = step.params
+        b, s, t, dh = (int(shape[f]) for f in ("b", "s", "t", "dh"))
+        rng = np.random.default_rng(self.seed)
+        q = jax.numpy.asarray(rng.integers(-127, 128, size=(b, s, dh), dtype=np.int8))
+        k = jax.numpy.asarray(rng.integers(-127, 128, size=(b, t, dh), dtype=np.int8))
+        v = jax.numpy.asarray(rng.integers(-127, 128, size=(b, t, dh), dtype=np.int8))
+        mask = jax.numpy.ones((b, s, t), jax.numpy.float32)
+
+        def thunk():
+            y = _qatt.qattention(
+                q, k, v, mask, lut,
+                qk_scale=p["qk_scale"], big=p["big"], lut_scale=p["lut_scale"],
+                p_scale=p["p_scale"], rescale=p["rescale"],
+                out_dtype=DTYPES[p["out_dtype"]], bq=int(shape["bq"]),
+                interpret=(backend == "interpret"),
+            )
+            jax.block_until_ready(y)
+
+        return measure_median(thunk, repeat=self.repeat, warmup=self.warmup)
 
     def _resolve_cached(self, key: str) -> Optional[_Resolution]:
         res = self._session.get(key)

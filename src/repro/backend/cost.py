@@ -134,6 +134,53 @@ def qmatmul_vmem_bytes(bm: int, bk: int, bn: int, *, weight_bits: int = 8) -> in
     return streamed + acc
 
 
+def qattention_hbm_bytes(b: int, s: int, t: int, dh: int, bq: int) -> float:
+    """Analytic HBM traffic for the fused int8 attention kernel under its
+    ``(B, Sp/bq)`` grid (:mod:`repro.kernels.qattention`): per batch element
+    the int8 Q tile streams once, the full-length int8 K and V blocks are
+    resident per batch element but re-streamed once per query row-block
+    (K/V block specs index on the batch dim only), the f32 mask streams
+    once, and the int8 context output is written once.  The 256-entry exp
+    LUT is noise and is not counted."""
+    sp, tp, dp = _round_up(s, max(bq, 1)), _round_up(t, 128), _round_up(dh, 128)
+    blocks = sp // max(bq, 1)
+    q_bytes = sp * dp
+    kv_bytes = 2 * tp * dp * blocks
+    mask_bytes = 4 * sp * tp
+    out_bytes = sp * dp
+    return float(b * (q_bytes + kv_bytes + mask_bytes + out_bytes))
+
+
+def qattention_vmem_bytes(t: int, dh: int, bq: int) -> int:
+    """Resident VMEM working set of one grid step of the fused attention
+    kernel: the int8 Q/out tiles and f32 mask tile (double-buffered streams),
+    the full-length int8 K/V blocks, and the f32 score + int32 weight
+    scratch rows."""
+    tp, dp = _round_up(t, 128), _round_up(dh, 128)
+    streamed = 2 * (bq * dp + 4 * bq * tp + bq * dp)
+    resident = 2 * tp * dp
+    scratch = (4 + 4) * bq * tp
+    return streamed + resident + scratch
+
+
+def qattention_tile_cost(
+    b: int, s: int, t: int, dh: int, bq: int, *, hw: HardwareSpec = TPU_V5E
+) -> float:
+    """Analytic cost (seconds) of one fused attention launch at query tile
+    ``bq``: ``max(T_comp, T_mem)`` over the padded problem.  Both int8
+    contractions (QK^T and PV) count at the int8 MXU peak; the masked
+    LUT-softmax between them is VPU work, charged as ~8 elementwise ops per
+    score at the bf16 peak (coarse, but it penalizes tiny bq the same way
+    re-streamed K/V traffic does, which is what the ranking needs)."""
+    sp, tp, dp = _round_up(s, max(bq, 1)), _round_up(t, 128), _round_up(dh, 128)
+    mxu_flops = 2.0 * b * sp * tp * dp * 2
+    vpu_flops = 8.0 * b * sp * tp
+    terms = roofline_terms(
+        mxu_flops, qattention_hbm_bytes(b, s, t, dh, bq), hw=hw, peak=hw.peak_int8_flops
+    )
+    return max(terms["t_comp_s"] + vpu_flops / hw.peak_bf16_flops, terms["t_mem_s"])
+
+
 def qmatmul_tile_cost(
     m: int, k: int, n: int, bm: int, bk: int, bn: int,
     *, hw: HardwareSpec = TPU_V5E, weight_bits: int = 8,

@@ -1,6 +1,6 @@
 """Fused-kernel implementations for the backend registry.
 
-Three kernel ids cover the paper's fusion patterns:
+Four kernel ids cover the paper's fusion patterns:
 
 * ``qlinear_matmul`` — MatMulInteger→…→QuantizeLinear chain.  The ``ref``
   backend runs the pure-jnp oracle on the *unpadded* parameters; the
@@ -11,6 +11,11 @@ Three kernel ids cover the paper's fusion patterns:
 * ``qlinear_conv2d`` — ConvInteger chain on XLA's int8 conv (shared impl:
   the epilogue is plain jnp on every backend).
 * ``qact_lut`` — the exact 256-entry int8 activation LUT.
+* ``qattention`` — the fused int8 attention region (score MatMulInteger,
+  additive masking, max-shifted LUT-softmax, context MatMulInteger).  The
+  ``ref`` backend runs the jnp oracle; ``interpret``/``pallas`` run the
+  tiled kernel (:mod:`repro.kernels.qattention`).  Scalar constants ride in
+  ``step.params`` (static under jit); the LUT is the one array const.
 
 Step contract (see :mod:`repro.backend.plan`): ``args = [x]`` (the single
 graph-tensor input), parameters in ``step.consts``, static config in
@@ -85,6 +90,54 @@ def _qlinear_conv2d(step, args):
         out_dtype=DTYPES[p["out_dtype"]], relu=p["relu"], two_mul=p["two_mul"],
     )
     return [y]
+
+
+@register("qattention", backend="ref")
+def _qattention_ref(step, args):
+    q, k, v, mask = args
+    (lut,) = step.consts
+    p = step.params
+    y = _ref.qattention_ref(
+        q, k, v, mask,
+        jnp.float32(p["qk_scale"]), jnp.float32(p["big"]),
+        jnp.float32(p["lut_scale"]), lut,
+        jnp.float32(p["p_scale"]), jnp.float32(p["rescale"]),
+        out_dtype=DTYPES[p["out_dtype"]],
+    )
+    return [y]
+
+
+def _qattention_tiled(step, args, *, interpret: bool):
+    from ..kernels import qattention as _qatt
+
+    q, k, v, mask = args
+    (lut,) = step.consts
+    p = step.params
+    if p.get("dynamic_attn"):
+        raise RuntimeError(
+            "axis-open attention template cannot execute directly: bind it to "
+            "a bucket first (repro.backend.lowering.specialize_plan, or run "
+            "through CompiledModel which caches specializations per bucket)"
+        )
+    y = _qatt.qattention(
+        q, k, v, mask, lut,
+        qk_scale=p["qk_scale"], big=p["big"], lut_scale=p["lut_scale"],
+        p_scale=p["p_scale"], rescale=p["rescale"],
+        out_dtype=DTYPES[p["out_dtype"]],
+        bq=p["shape"].get("bq", _qatt.BQ),
+        interpret=interpret,
+    )
+    return [y]
+
+
+@register("qattention", backend="interpret")
+def _qattention_interpret(step, args):
+    return _qattention_tiled(step, args, interpret=True)
+
+
+@register("qattention", backend="pallas")
+def _qattention_pallas(step, args):
+    return _qattention_tiled(step, args, interpret=False)
 
 
 def _qact_lut(step, args, *, backend: str):

@@ -51,6 +51,10 @@ def _j_matmuli(attrs, ins):
     a, b = ins[0], ins[1]
     a32 = a.astype(jnp.int32) - (ins[2].astype(jnp.int32) if len(ins) > 2 and ins[2] is not None else 0)
     b32 = b.astype(jnp.int32) - (ins[3].astype(jnp.int32) if len(ins) > 3 and ins[3] is not None else 0)
+    if b32.ndim > 2:
+        # stacked (batched) matmul — e.g. the attention QK^T / PV contractions;
+        # jnp.matmul broadcasts leading dims with int32 accumulation (exact)
+        return [jnp.matmul(a32, b32)]
     return [jax.lax.dot_general(a32, b32, (((a32.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.int32)]
 
 
@@ -143,6 +147,8 @@ for _name, _fn in {
     "Gather": lambda attrs, ins: [jnp.take(ins[0], ins[1].astype(jnp.int32), axis=int(attrs.get("axis", 0)))],
     "GlobalAveragePool": lambda attrs, ins: [ins[0].mean(axis=(2, 3), keepdims=True).astype(ins[0].dtype)],
     "ReduceMean": lambda attrs, ins: [ins[0].mean(axis=tuple(attrs.get("axes")) if attrs.get("axes") else None, keepdims=bool(attrs.get("keepdims", 1))).astype(ins[0].dtype)],
+    "ReduceMax": lambda attrs, ins: [ins[0].max(axis=tuple(attrs.get("axes")) if attrs.get("axes") else None, keepdims=bool(attrs.get("keepdims", 1))).astype(ins[0].dtype)],
+    "ReduceSum": lambda attrs, ins: [ins[0].sum(axis=tuple(attrs.get("axes")) if attrs.get("axes") else None, keepdims=bool(attrs.get("keepdims", 1)), dtype=ins[0].dtype)],
 }.items():
     _JOPS[_name] = _fn
 

@@ -31,7 +31,7 @@ from ..kernels import ops as kops
 from ..obs import trace as _trace
 from ..obs.provenance import PlanProvenance
 from ..passes.analysis import BATCH_AXIS, GraphAnalysis, bind
-from .plan import CONST, NONE, SLOT, Arg, ExecutionPlan, PlanStep, ValueInfo
+from .plan import CONST, NONE, SLOT, Arg, ExecutionPlan, PlanStep, StateBinding, ValueInfo
 
 #: Draft operand kinds: ("tensor", name) | ("const", value) | ("none", None)
 DraftArg = Tuple[str, Any]
@@ -77,8 +77,17 @@ def build_plan(
     named ``axes`` (the drafts must then carry axis-open shape records — see
     the compiler's fused builders); slot planning, liveness and value typing
     are identical either way, which is exactly the point: they are
-    independent of every dynamic axis."""
+    independent of every dynamic axis.
+
+    Graph ``states`` (the declared KV-cache pairs) lower to *persistent*
+    slots: a state's input slot is pinned — excluded from liveness release —
+    so its buffer identity survives the whole invocation (and, by contract,
+    across invocations: the executor's caller feeds each state output back
+    into its paired input).  The pairs are recorded as
+    :class:`repro.backend.plan.StateBinding` on the plan."""
     out_names = {t.name for t in graph.outputs}
+    state_inputs = {s.input for s in graph.states}
+    pinned = out_names | state_inputs
 
     uses: Dict[str, int] = {}
     for d in drafts:
@@ -101,7 +110,7 @@ def build_plan(
         return s
 
     def release(name: str) -> None:
-        if name not in out_names and name in slot_of:
+        if name not in pinned and name in slot_of:
             free.append(slot_of.pop(name))
 
     inputs = tuple((t.name, alloc(t.name)) for t in graph.inputs)
@@ -153,6 +162,19 @@ def build_plan(
     if missing:
         raise ValueError(f"graph outputs never lowered: {missing}")
     outputs = tuple((t.name, slot_of[t.name]) for t in graph.outputs)
+    in_specs = {t.name: t for t in graph.inputs}
+    states = tuple(
+        StateBinding(
+            name=s.name,
+            input=s.input,
+            output=s.output,
+            in_slot=slot_of[s.input],
+            out_slot=slot_of[s.output],
+            dtype=in_specs[s.input].dtype,
+            shape=tuple(in_specs[s.input].shape),
+        )
+        for s in graph.states
+    )
     if batch == "dynamic" and not axes:
         axes = (BATCH_AXIS,)
     return ExecutionPlan(
@@ -164,6 +186,7 @@ def build_plan(
         batch=batch,
         axes=axes if batch == "dynamic" else (),
         provenance=provenance,
+        states=states,
     )
 
 
@@ -229,7 +252,32 @@ def specialize_plan(
         tiles: Dict[str, str] = {}
         for step in template.steps:
             params = step.params
-            if params.get("dynamic_batch"):
+            if params.get("dynamic_attn"):
+                # fused attention carries its own axis-open record (b/s/t/dh
+                # rather than lead/m) and its own binder — it must NOT take
+                # the qmatmul dynamic_batch path, whose binder and tuner
+                # assume the (w2,b2,qs2,qsh2) consts layout
+                if remaining:
+                    params = dict(params)
+                    params["shape"] = kops.bind_qattention_axes(
+                        step.params["shape"], bindings, partial=True
+                    )
+                else:
+                    params = {k: v for k, v in params.items() if k != "dynamic_attn"}
+                    shape = kops.bind_qattention_axes(step.params["shape"], bindings)
+                    source = "heuristic"
+                    if tuner is not None:
+                        shape, source = tuner.tune_step(
+                            step, shape, backend=template.backend, bindings=bindings
+                        )
+                    params["shape"] = shape
+                    rec = ",".join(
+                        f"{k}={shape[k]}" for k in ("b", "s", "t", "dh", "bq") if k in shape
+                    )
+                    if source != "heuristic":
+                        rec += f" [{source}]"
+                    tiles[step.name or step.kernel] = rec
+            elif params.get("dynamic_batch"):
                 if remaining:
                     params = dict(params)
                     params["shape"] = kops.bind_qmatmul_axes(
@@ -259,8 +307,15 @@ def specialize_plan(
                 for info in step.out_info
             )
             steps.append(dataclasses.replace(step, params=params, out_info=out_info))
+        # state buffers bind their seq extent like any other value: the
+        # specialized plan knows the concrete KV-cache bucket it carries
+        states = tuple(
+            dataclasses.replace(s, shape=bind(s.shape, bindings)) for s in template.states
+        )
         if remaining:
-            return dataclasses.replace(template, steps=steps, batch="dynamic", axes=remaining)
+            return dataclasses.replace(
+                template, steps=steps, batch="dynamic", axes=remaining, states=states
+            )
         sp.set(**tiles)
         # a full bind is one visited scenario cell: record it on the shared
         # provenance so template *and* specializations show the history
@@ -270,4 +325,4 @@ def specialize_plan(
             bound: Union[int, Tuple[Tuple[str, int], ...]] = bindings[BATCH_AXIS]
         else:
             bound = tuple(sorted(bindings.items()))
-        return dataclasses.replace(template, steps=steps, batch=bound, axes=())
+        return dataclasses.replace(template, steps=steps, batch=bound, axes=(), states=states)

@@ -165,6 +165,32 @@ def _arr_sig(c: Any) -> str:
     return type(c).__name__
 
 
+@dataclasses.dataclass(frozen=True)
+class StateBinding:
+    """A planned persistent state slot: the lowered form of a PQ-IR
+    :class:`repro.core.pqir.StateSpec`.
+
+    The incoming state lands in buffer slot ``in_slot`` (a *pinned* slot —
+    liveness planning never returns it to the free pool, so the buffer
+    identity is stable across invocations) and the next state is produced at
+    ``out_slot``.  ``shape`` may carry named symbolic dims (the KV cache's
+    seq axis); ``specialize_plan`` binds them per bucket like any other
+    value, so a specialized plan knows the concrete byte size of every
+    state buffer it carries."""
+
+    name: str
+    input: str
+    output: str
+    in_slot: int
+    out_slot: int
+    dtype: Optional[str]
+    shape: Optional[Tuple[Optional[Any], ...]]
+
+    def describe(self) -> str:
+        info = str(ValueInfo(self.dtype, self.shape))
+        return f"{self.name}: %{self.in_slot} -> %{self.out_slot} {info}"
+
+
 @dataclasses.dataclass
 class ExecutionPlan:
     """A lowered, buffer-planned program for one backend.
@@ -175,6 +201,9 @@ class ExecutionPlan:
                to liveness-driven slot reuse)
     inputs     (graph-input name, slot) feeds land here
     outputs    (graph-output name, slot) results are read from here
+    states     persistent state slots (:class:`StateBinding`) carried across
+               invocations — the int8 KV cache of the token path; () on
+               stateless plans
     batch      "static" | "dynamic" (an unbound template) | int (a batch-
                bucket specialization) | tuple of (axis, bucket) pairs (a
                multi-axis specialization) — see the module docstring
@@ -195,6 +224,7 @@ class ExecutionPlan:
     batch: Union[str, int, Tuple[Tuple[str, int], ...]] = "static"
     axes: Tuple[str, ...] = ()
     provenance: Optional[PlanProvenance] = None
+    states: Tuple[StateBinding, ...] = ()
 
     # -- execution -----------------------------------------------------------
     def execute(self, feeds: Dict[str, Any]) -> Dict[str, Any]:
@@ -222,6 +252,11 @@ class ExecutionPlan:
             for slot, val in zip(step.out_slots, outs):
                 env[slot] = val
         return {name: env[slot] for name, slot in self.outputs}
+
+    def next_state_feeds(self, outputs: Dict[str, Any]) -> Dict[str, Any]:
+        """Map one invocation's outputs to the next invocation's state feeds
+        (the functional carry: ``present.* -> past_key_values.*``)."""
+        return {s.input: outputs[s.output] for s in self.states}
 
     def execute_dict_env(self, feeds: Dict[str, Any]) -> Dict[str, Any]:
         """Name-keyed dict-env interpretation — the pre-plan execution model,
@@ -274,6 +309,8 @@ class ExecutionPlan:
         )
         ins = "  inputs:  " + ", ".join(f"{n} -> %{s}" for n, s in self.inputs)
         outs = "  outputs: " + ", ".join(f"%{s} -> {n}" for n, s in self.outputs)
+        if self.states:
+            outs += "\n  states:  " + ", ".join(s.describe() for s in self.states)
         body = [f"  {i:3d}: {s.describe()}" for i, s in enumerate(self.steps)]
         if verbose and self.provenance is not None:
             body.append(self.provenance.render(indent="  "))

@@ -395,6 +395,272 @@ FUSIONS = (
 )
 
 
+# ---------------------------------------------------------------------------
+# fused int8 attention: a DAG region, matched programmatically
+# ---------------------------------------------------------------------------
+#
+# The ~25-node attention region emitted by repro.core.patterns.emit_qattention
+# is a DAG, not a single-consumer chain (the mask fans into three nodes, the
+# masked scores fan into ReduceMax and Sub, the LUT weights fan into the
+# numerator and denominator branches), so the declarative chain matcher
+# cannot describe it.  _match_qattention walks the emitted structure
+# explicitly, anchored on the score MatMulInteger — the only MatMulInteger
+# whose *both* operands are non-const, which is also what keeps it disjoint
+# from QLINEAR_PATTERN's constant-weight anchor.
+
+
+def _f32_scalar(ga: GraphAnalysis, name: str) -> Optional[float]:
+    c = ga.const(name)
+    if c is None:
+        return None
+    c = np.asarray(c)
+    if c.size != 1 or c.dtype != np.float32:
+        return None
+    return float(c.reshape(()))
+
+
+def _scalar_operand(ga: GraphAnalysis, node: Node, data: str) -> Optional[float]:
+    """The f32 scalar constant operand of a binary node whose other operand
+    is ``data`` (either position)."""
+    ins = list(node.inputs)
+    if data not in ins:
+        return None
+    other = ins[1] if ins[0] == data else ins[0]
+    return _f32_scalar(ga, other)
+
+
+def _is_zero_zp_ql(ga: GraphAnalysis, node: Node, scale: Optional[float], dtype: str = "int8") -> bool:
+    """QuantizeLinear with the given scalar scale (None = any scalar) and a
+    zero zero-point of the given dtype."""
+    s, zp = ql_params(ga, node)
+    if s is None or zp is None or np.asarray(s).size != 1 or np.asarray(zp).size != 1:
+        return False
+    if scale is not None and float(np.asarray(s)) != scale:
+        return False
+    return str(np.asarray(zp).dtype) == dtype and int(np.asarray(zp)) == 0
+
+
+def _match_qattention(ga: GraphAnalysis, anchor: Node) -> Optional[dict]:
+    """Match the codified int8 attention region rooted at its score
+    MatMulInteger.  Strict by construction: every internal tensor must be
+    consumed only inside the region (single_consumer, or the exact expected
+    fan-out for the mask / masked-scores / LUT-weight tensors), every
+    epilogue constant must be the expected scalar, and the LUT must satisfy
+    ``lut[0] == 0`` — the property zero-padding exactness rests on.  Returns
+    the capture dict for :func:`_build_qattention`, or None."""
+
+    def nxt(tensor: str, op: str) -> Optional[Node]:
+        n = ga.single_consumer(tensor)
+        return n if n is not None and n.op_type == op else None
+
+    if anchor.op_type != "MatMulInteger" or len(anchor.inputs) != 2:
+        return None
+    q, kt = anchor.inputs
+    if ga.is_const(q) or ga.is_const(kt):
+        return None
+    tr = ga.producers.get(kt)
+    if tr is None or tr.op_type != "Transpose" or ga.single_consumer(kt) is not anchor:
+        return None
+    if list(tr.attrs.get("perm", [])) != [0, 2, 1]:
+        return None
+    k = tr.inputs[0]
+    if ga.dtype(q) != "int8" or ga.dtype(k) != "int8":
+        return None
+
+    cast1 = nxt(anchor.outputs[0], "Cast")
+    if cast1 is None or cast1.attrs.get("to") != "float32":
+        return None
+    mul_c = nxt(cast1.outputs[0], "Mul")
+    if mul_c is None:
+        return None
+    qk_scale = _scalar_operand(ga, mul_c, cast1.outputs[0])
+    if qk_scale is None:
+        return None
+    sm = nxt(mul_c.outputs[0], "Mul")
+    if sm is None:
+        return None
+    mask = sm.inputs[1] if sm.inputs[0] == mul_c.outputs[0] else sm.inputs[0]
+    if ga.is_const(mask) or ga.dtype(mask) != "float32":
+        return None
+    masked = nxt(sm.outputs[0], "Add")
+    if masked is None:
+        return None
+    pen_t = masked.inputs[1] if masked.inputs[0] == sm.outputs[0] else masked.inputs[0]
+    pen = ga.producers.get(pen_t)
+    if pen is None or pen.op_type != "Mul" or ga.single_consumer(pen_t) is not masked:
+        return None
+    sub1_t = pen.inputs[0] if _f32_scalar(ga, pen.inputs[1]) is not None else pen.inputs[1]
+    big = _scalar_operand(ga, pen, sub1_t)
+    sub1 = ga.producers.get(sub1_t)
+    if big is None or sub1 is None or sub1.op_type != "Sub":
+        return None
+    if ga.single_consumer(sub1_t) is not pen:
+        return None
+    if sub1.inputs[0] != mask or _f32_scalar(ga, sub1.inputs[1]) != 1.0:
+        return None
+
+    # masked scores fan into exactly {ReduceMax, Sub}
+    mt = masked.outputs[0]
+    cons = ga.consumers.get(mt, [])
+    if mt in ga.out_names or len(cons) != 2:
+        return None
+    mx = next((n for n in cons if n.op_type == "ReduceMax"), None)
+    d = next((n for n in cons if n.op_type == "Sub"), None)
+    if mx is None or d is None:
+        return None
+    if list(mx.attrs.get("axes", [])) != [2] or not mx.attrs.get("keepdims", 1):
+        return None
+    if ga.single_consumer(mx.outputs[0]) is not d or list(d.inputs) != [mt, mx.outputs[0]]:
+        return None
+
+    dq = nxt(d.outputs[0], "QuantizeLinear")
+    if dq is None or not _is_zero_zp_ql(ga, dq, None, "int8"):
+        return None
+    lut_scale = float(np.asarray(ga.const(dq.inputs[1])))
+    idx32 = nxt(dq.outputs[0], "Cast")
+    if idx32 is None or idx32.attrs.get("to") != "int32":
+        return None
+    idxadd = nxt(idx32.outputs[0], "Add")
+    if idxadd is None:
+        return None
+    off_t = idxadd.inputs[1] if idxadd.inputs[0] == idx32.outputs[0] else idxadd.inputs[0]
+    off = ga.const(off_t)
+    if off is None or np.asarray(off).size != 1 or int(np.asarray(off)) != 128:
+        return None
+    gather = nxt(idxadd.outputs[0], "Gather")
+    if gather is None or int(gather.attrs.get("axis", 0)) != 0:
+        return None
+    lut = ga.const(gather.inputs[0])
+    if lut is None or lut.shape != (256,) or lut.dtype != np.uint8 or lut[0] != 0:
+        return None
+
+    # LUT weights fan into exactly the int32 (denominator) and f32
+    # (numerator) casts
+    wt = gather.outputs[0]
+    wcons = ga.consumers.get(wt, [])
+    if wt in ga.out_names or len(wcons) != 2 or any(n.op_type != "Cast" for n in wcons):
+        return None
+    wi = next((n for n in wcons if n.attrs.get("to") == "int32"), None)
+    wf = next((n for n in wcons if n.attrs.get("to") == "float32"), None)
+    if wi is None or wf is None:
+        return None
+    den = nxt(wi.outputs[0], "ReduceSum")
+    if den is None or list(den.attrs.get("axes", [])) != [2] or not den.attrs.get("keepdims", 1):
+        return None
+    denf = nxt(den.outputs[0], "Cast")
+    if denf is None or denf.attrs.get("to") != "float32":
+        return None
+    p = nxt(wf.outputs[0], "Div")
+    if p is None or ga.single_consumer(denf.outputs[0]) is not p:
+        return None
+    if list(p.inputs) != [wf.outputs[0], denf.outputs[0]]:
+        return None
+    pmul = nxt(p.outputs[0], "Mul")
+    if pmul is None:
+        return None
+    p_scale = _scalar_operand(ga, pmul, p.outputs[0])
+    if p_scale is None:
+        return None
+    pq = nxt(pmul.outputs[0], "QuantizeLinear")
+    if pq is None or not _is_zero_zp_ql(ga, pq, 1.0, "int8"):
+        return None
+
+    ctx = nxt(pq.outputs[0], "MatMulInteger")
+    if ctx is None or ctx.inputs[0] != pq.outputs[0]:
+        return None
+    v = ctx.inputs[1]
+    if ga.is_const(v) or ga.dtype(v) != "int8":
+        return None
+    cf = nxt(ctx.outputs[0], "Cast")
+    if cf is None or cf.attrs.get("to") != "float32":
+        return None
+    cmul = nxt(cf.outputs[0], "Mul")
+    if cmul is None:
+        return None
+    rescale = _scalar_operand(ga, cmul, cf.outputs[0])
+    if rescale is None:
+        return None
+    out_ql = ga.single_consumer(cmul.outputs[0])
+    if out_ql is None or out_ql.op_type != "QuantizeLinear":
+        return None
+    s_out, zp_out = ql_params(ga, out_ql)
+    if (
+        s_out is None or zp_out is None or np.asarray(s_out).size != 1
+        or float(np.asarray(s_out)) != 1.0 or int(np.asarray(zp_out)) != 0
+    ):
+        return None
+
+    sq, sk = ga.shape(q), ga.shape(k)
+    if sq is None or sk is None or len(sq) != 3 or len(sk) != 3:
+        return None
+    if not isinstance(sq[2], int):
+        return None
+    nodes = (
+        tr, anchor, cast1, mul_c, sm, sub1, pen, masked, mx, d, dq, idx32,
+        idxadd, gather, wi, den, denf, wf, p, pmul, pq, ctx, cf, cmul, out_ql,
+    )
+    return {
+        "nodes": nodes,
+        "q": q, "k": k, "v": v, "mask": mask,
+        "out": out_ql.outputs[0],
+        "out_dtype": str(np.asarray(zp_out).dtype),
+        "qk_scale": qk_scale, "big": big, "lut_scale": lut_scale,
+        "p_scale": p_scale, "rescale": rescale, "lut": lut,
+        "b": tuple(sq[:1]), "s": sq[1], "t": sk[1], "dh": int(sq[2]),
+        "anchor": anchor,
+    }
+
+
+def qattention_exempt_nodes(ga: GraphAnalysis) -> frozenset:
+    """Names of every node inside a matched attention region — the regions
+    the per-axis elementwise proof skips (see
+    :func:`repro.passes.analysis.axis_mixing_nodes`).  The skip is sound
+    because the region's own masking semantics make zero padding exact along
+    any axis: a zero-padded key carries a zero mask, its score is driven to
+    −big, and its LUT weight is exactly ``lut[0] == 0`` (the matcher checks
+    this), so padded positions contribute nothing to the softmax denominator
+    or the context; padded query rows produce finite garbage (the
+    denominator can never be 0) that run-time slicing discards."""
+    exempt = set()
+    for node in ga.graph.nodes:
+        if node.op_type != "MatMulInteger":
+            continue
+        m = _match_qattention(ga, node)
+        if m is not None:
+            exempt.update(n.name for n in m["nodes"])
+    return frozenset(exempt)
+
+
+def _build_qattention(compiler: "Compiler", m: dict) -> Optional[StepDraft]:
+    """Lower a matched attention region onto the fused ``qattention`` kernel.
+    Scalar constants ride in ``params`` (static under jit); the LUT is the
+    step's one array const.  With dynamic axes the shape record stays open
+    (``dynamic_attn``) and is bound per bucket by ``specialize_plan``; a
+    static compile with symbolic dims falls back unfused instead."""
+    shape = {"b": m["b"], "s": m["s"], "t": m["t"], "dh": m["dh"]}
+    params = {
+        "out_dtype": m["out_dtype"],
+        "qk_scale": m["qk_scale"], "big": m["big"],
+        "lut_scale": m["lut_scale"], "p_scale": m["p_scale"],
+        "rescale": m["rescale"],
+    }
+    if compiler.batch == "dynamic":
+        params["shape"] = shape
+        params["dynamic_attn"] = True
+    else:
+        dims = list(m["b"]) + [m["s"], m["t"]]
+        if not all(isinstance(d, int) for d in dims):
+            return None  # symbolic dims without dynamic axes: stay unfused
+        params["shape"] = kops.bind_qattention_axes(shape, {})
+    return StepDraft(
+        "qattention",
+        [tensor_arg(m["q"]), tensor_arg(m["k"]), tensor_arg(m["v"]), tensor_arg(m["mask"])],
+        [m["out"]],
+        params=params, consts=(jnp.asarray(m["lut"]),),
+        kind="fused_qattention", name=m["anchor"].name,
+    )
+
+
 class Compiler:
     def __init__(
         self,
@@ -407,6 +673,7 @@ class Compiler:
         batch: str = "static",
         dynamic_axes: Optional[Dict[str, object]] = None,
         plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
+        plan_cache: Optional[PlanCache] = None,
         autotune=None,
     ) -> None:
         model.validate()
@@ -428,13 +695,9 @@ class Compiler:
                     "declare them as named dims, e.g. ('N', 'S', 64), or use a "
                     "(None, ...) leading dim for the implicit batch axis"
                 )
-            for t in model.graph.inputs:
-                for axis in dynamic_axes:
-                    if sum(1 for d in t.shape if d == axis) > 1:
-                        raise ValueError(
-                            f"axis {axis!r} appears more than once in input "
-                            f"{t.name!r} signature {tuple(t.shape)}"
-                        )
+            # an axis may appear at several positions of one signature (an
+            # attention mask is ("N", "S", "S")): run-time padding/slicing
+            # handles every occurrence (axis_input_positions below)
         if optimize:
             model, self.pass_report = PassManager(verify=verify_passes).run(model)
         else:
@@ -471,16 +734,24 @@ class Compiler:
             self.dynamic_axes = {}
             self.axis_specs = {}
         self.plan_cache_capacity = plan_cache_capacity
+        self.plan_cache = plan_cache
         self.inits = {k: v for k, v in self.graph.initializers.items()}
         self.analysis = GraphAnalysis(self.graph)
         if batch == "dynamic":
             # zero padding along a dynamic axis is only exact when no op
             # mixes information across it — prove each requested axis
             # independently and reject (rather than silently mis-serve)
-            # graphs with e.g. a global ReduceMean or an axis-folding Reshape
+            # graphs with e.g. a global ReduceMean or an axis-folding Reshape.
+            # Matched attention regions are exempt: their masking semantics
+            # make zero padding exact by construction (the region reduces
+            # over keys whose padded LUT weight is exactly 0 — see
+            # qattention_exempt_nodes), which the per-op proof cannot see.
             implicit = implicit_batch_graph(self.graph)
+            exempt = qattention_exempt_nodes(self.analysis)
             for axis in self.dynamic_axes:
-                problems = axis_mixing_nodes(self.analysis, axis, implicit=implicit)
+                problems = axis_mixing_nodes(
+                    self.analysis, axis, implicit=implicit, exempt=exempt
+                )
                 if problems:
                     raise ValueError(
                         f"dynamic axis {axis!r} needs every op to be "
@@ -492,6 +763,7 @@ class Compiler:
             "fused_qlinear": 0,
             "fused_qconv": 0,
             "fused_lut": 0,
+            "fused_qattention": 0,
             "generic": 0,
             "folded": self.pass_report.total("folded"),
             "eliminated": self.pass_report.total("eliminated"),
@@ -502,13 +774,24 @@ class Compiler:
         order = self.graph.toposorted()
         consumed = set()
         drafts: List[StepDraft] = []
+        # attention regions are DAGs whose members straddle the anchor in
+        # topo order (the K-Transpose precedes it, V may be produced after
+        # it): match them up front, skip members as they stream past, and
+        # emit the fused step at the region's sink — the one position where
+        # every region input is guaranteed already produced
+        attn_emit, attn_skip = ({}, set())
+        if self.fuse:
+            attn_emit, attn_skip = self._qattention_regions()
         with _trace.span("compile.fuse", nodes=len(order)) as fuse_span:
             for node in order:
-                if id(node) in consumed:
+                if id(node) in consumed or id(node) in attn_skip:
                     continue
-                draft = self._fused_draft(node, consumed) if self.fuse else None
-                if draft is None:
-                    draft = self._generic_draft(node)
+                if id(node) in attn_emit:
+                    draft = attn_emit[id(node)]
+                else:
+                    draft = self._fused_draft(node, consumed) if self.fuse else None
+                    if draft is None:
+                        draft = self._generic_draft(node)
                 drafts.append(draft)
                 self.stats[draft.kind] += 1
             fuse_span.set(
@@ -526,10 +809,37 @@ class Compiler:
         return CompiledModel(
             self.model, plan, self.stats, self.pass_report,
             plan_cache_capacity=self.plan_cache_capacity,
+            plan_cache=self.plan_cache,
             dynamic_axes=self.dynamic_axes,
             axis_specs=self.axis_specs,
             autotuner=self.autotuner,
         )
+
+    def _qattention_regions(self):
+        """Match every attention region once, up front.  Returns
+        ``(emit, skip)``: ``emit`` maps the id of each region's sink node
+        (its final QuantizeLinear — last in any topo order, since every
+        other member is its ancestor) to the fused StepDraft; ``skip`` holds
+        the ids of all other member nodes."""
+        emit: Dict[int, StepDraft] = {}
+        skip: set = set()
+        for node in self.graph.nodes:
+            if node.op_type != "MatMulInteger":
+                continue
+            qm = _match_qattention(self.analysis, node)
+            if qm is None:
+                continue
+            draft = _build_qattention(self, qm)
+            if draft is None:
+                continue
+            sink = qm["nodes"][-1]
+            emit[id(sink)] = draft
+            skip.update(id(n) for n in qm["nodes"] if n is not sink)
+            self.provenance.add_fusion(
+                "qattention", node.name,
+                tuple(n.name for n in qm["nodes"]), qm["out"],
+            )
+        return emit, skip
 
     def _fused_draft(self, node: Node, consumed: set) -> Optional[StepDraft]:
         for pattern, builder in FUSIONS:
@@ -592,6 +902,7 @@ class CompiledModel:
         pass_report: Optional[PipelineReport] = None,
         *,
         plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
+        plan_cache: Optional[PlanCache] = None,
         dynamic_axes: Optional[Dict[str, object]] = None,
         axis_specs: Optional[Dict[str, object]] = None,
         autotuner=None,
@@ -617,22 +928,38 @@ class CompiledModel:
         self.input_names = [t.name for t in model.graph.inputs]
         self.output_names = [t.name for t in model.graph.outputs]
         if plan.batch == "dynamic":
-            self.plan_cache: Optional[PlanCache] = PlanCache(plan_cache_capacity, scope="plan")
+            # a shared cache (plan_cache=) pools specializations across
+            # several artifacts (e.g. a prefill and a decode plan serving one
+            # token path); cache_key() then prefixes the graph name so the
+            # artifacts never collide on identical bindings
+            self._shared_cache = plan_cache is not None
+            self.plan_cache: Optional[PlanCache] = (
+                plan_cache if plan_cache is not None
+                else PlanCache(plan_cache_capacity, scope="plan")
+            )
             self.dynamic_axes: Dict[str, object] = {
                 a: resolve_bucketing(None) for a in plan.axes
             }
             if dynamic_axes:
                 self.dynamic_axes.update(dynamic_axes)
             implicit = implicit_batch_graph(model.graph)
-            # where each dynamic axis sits in each input: axis -> {input: pos}
-            self.axis_input_pos: Dict[str, Dict[str, int]] = {}
+            # where each dynamic axis sits in each input: axis -> {input:
+            # (pos, ...)} — every occurrence (a mask signature like
+            # ("N", "S", "S") carries an axis twice and every position must
+            # be padded); the single-int *_pos views keep the first position
+            # for backward compatibility
+            self.axis_input_positions: Dict[str, Dict[str, tuple]] = {}
             for axis in self.dynamic_axes:
                 by_input = {}
                 for t in model.graph.inputs:
                     pos = axis_positions(tuple(t.shape), axis, implicit=implicit)
                     if pos:
-                        by_input[t.name] = pos[0]
-                self.axis_input_pos[axis] = by_input
+                        by_input[t.name] = pos
+                self.axis_input_positions[axis] = by_input
+            self.axis_input_pos: Dict[str, Dict[str, int]] = {
+                axis: {name: pos[0] for name, pos in by_input.items()}
+                for axis, by_input in self.axis_input_positions.items()
+            }
             # axis-carrying outputs get sliced back to the true extents;
             # positions come from the declared signature with the plan's
             # inferred value shapes as fallback, so an output mis-declared
@@ -642,7 +969,7 @@ class CompiledModel:
                 for step in plan.steps
                 for name, info in zip(step.outputs, step.out_info)
             }
-            self.output_axis_pos: Dict[str, Dict[str, int]] = {}
+            self.output_axis_positions: Dict[str, Dict[str, tuple]] = {}
             for t in model.graph.outputs:
                 by_axis = {}
                 for axis in self.dynamic_axes:
@@ -650,14 +977,21 @@ class CompiledModel:
                     if not pos:
                         pos = axis_positions(inferred.get(t.name), axis, implicit=implicit)
                     if pos:
-                        by_axis[axis] = pos[0]
+                        by_axis[axis] = pos
                 if by_axis:
-                    self.output_axis_pos[t.name] = by_axis
+                    self.output_axis_positions[t.name] = by_axis
+            self.output_axis_pos: Dict[str, Dict[str, int]] = {
+                name: {axis: pos[0] for axis, pos in by_axis.items()}
+                for name, by_axis in self.output_axis_positions.items()
+            }
             self._jitted = None  # a template is only executable once bound
         else:
+            self._shared_cache = False
             self.plan_cache = None
             self.dynamic_axes = {}
+            self.axis_input_positions = {}
             self.axis_input_pos = {}
+            self.output_axis_positions = {}
             self.output_axis_pos = {}
             self._jitted = jax.jit(self._execute)
 
@@ -707,6 +1041,17 @@ class CompiledModel:
         axis's bucketing policy."""
         return int(self.dynamic_axes[axis](int(extent)))
 
+    def cache_key(self, bindings) -> tuple:
+        """The plan-cache key for a bucket combination.  On a private cache
+        this is exactly :func:`~repro.backend.plan.bindings_key` (existing
+        keys, artifacts and tests stay valid); on a shared cache the graph
+        name is prefixed so two artifacts pooling one cache (prefill +
+        decode) never collide on identical bindings."""
+        if not isinstance(bindings, dict):
+            bindings = {BATCH_AXIS: int(bindings)}
+        key = bindings_key(bindings)
+        return (self.model.graph.name, key) if self._shared_cache else key
+
     def specialized(self, bindings):
         """The (plan, jitted executor) pair for a bucket combination,
         specializing lazily through the bounded plan cache.  ``bindings`` is
@@ -724,7 +1069,7 @@ class CompiledModel:
                 f"unknown dynamic axes {unknown}: this artifact is open over "
                 f"{list(self.dynamic_axes)}"
             )
-        key = bindings_key(bindings)
+        key = self.cache_key(bindings)
         entry = self.plan_cache.get(key)
         if entry is None:
             plan = specialize_plan(self.plan, bindings, tuner=self.autotuner)
@@ -751,11 +1096,12 @@ class CompiledModel:
 
     def _run_dynamic(self, feeds: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
         extents: Dict[str, int] = {}
-        for axis, by_input in self.axis_input_pos.items():
+        for axis, by_input in self.axis_input_positions.items():
             vals = {
                 int(np.asarray(feeds[name]).shape[pos])
-                for name, pos in by_input.items()
+                for name, positions in by_input.items()
                 if name in feeds
+                for pos in positions
             }
             if len(vals) != 1:
                 raise ValueError(
@@ -771,14 +1117,15 @@ class CompiledModel:
                 v = np.asarray(v)
                 widths = [(0, 0)] * v.ndim
                 grow = False
-                for axis, by_input in self.axis_input_pos.items():
-                    pos = by_input.get(name)
-                    if pos is not None and v.shape[pos] != bindings[axis]:
-                        # zero slabs are exact: dynamic compilation proved every
-                        # op elementwise along the axis, and the padding is
-                        # sliced away below
-                        widths[pos] = (0, bindings[axis] - v.shape[pos])
-                        grow = True
+                for axis, by_input in self.axis_input_positions.items():
+                    for pos in by_input.get(name, ()):
+                        if v.shape[pos] != bindings[axis]:
+                            # zero slabs are exact: dynamic compilation proved
+                            # every op elementwise along the axis (or the
+                            # region's masking makes padding inert), and the
+                            # padding is sliced away below
+                            widths[pos] = (0, bindings[axis] - v.shape[pos])
+                            grow = True
                 padded[name] = jnp.asarray(np.pad(v, widths) if grow else v)
         with _trace.span("run.execute") as ex_span:
             if _trace.enabled:
@@ -788,11 +1135,12 @@ class CompiledModel:
             out: Dict[str, np.ndarray] = {}
             for k, v in res.items():
                 v = np.asarray(v)
-                by_axis = self.output_axis_pos.get(k)
+                by_axis = self.output_axis_positions.get(k)
                 if by_axis:
                     slicer = [slice(None)] * v.ndim
-                    for axis, pos in by_axis.items():
-                        slicer[pos] = slice(0, extents[axis])
+                    for axis, positions in by_axis.items():
+                        for pos in positions:
+                            slicer[pos] = slice(0, extents[axis])
                     v = v[tuple(slicer)]
                 out[k] = v
             return out
@@ -825,6 +1173,7 @@ def compile_model(
     batch: str = "static",
     dynamic_axes: Optional[Dict[str, object]] = None,
     plan_cache_capacity: int = PlanCache.DEFAULT_CAPACITY,
+    plan_cache: Optional[PlanCache] = None,
     autotune=None,
 ) -> CompiledModel:
     """Compile a PQ-IR artifact for the TPU backend.
@@ -854,6 +1203,12 @@ def compile_model(
     plan_cache_capacity:
                    bound on resident per-bucket specializations (dynamic
                    mode; LRU-evicted beyond this).
+    plan_cache:    an existing :class:`~repro.backend.plan.PlanCache` to
+                   share across artifacts (e.g. one cache serving a prefill
+                   and a decode plan of the same token path).  Keys are then
+                   prefixed with the graph name (``cm.cache_key``), so pooled
+                   artifacts never collide; capacity/accounting are the
+                   shared cache's.
     autotune:      measured per-cell tile search (dynamic mode, tiled
                    backends): ``True`` → an in-memory
                    :class:`repro.backend.autotune.Autotuner` session, a path
@@ -871,5 +1226,6 @@ def compile_model(
         return Compiler(
             model, backend=backend, fuse=fuse, optimize=optimize,
             verify_passes=verify_passes, batch=batch, dynamic_axes=dynamic_axes,
-            plan_cache_capacity=plan_cache_capacity, autotune=autotune,
+            plan_cache_capacity=plan_cache_capacity, plan_cache=plan_cache,
+            autotune=autotune,
         ).compile()

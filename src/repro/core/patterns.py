@@ -27,6 +27,95 @@ from .quant import QuantizedLinearParams, Rescale
 TANH_INPUT_ABSMAX = 4.0  # |tanh(4)| ≈ 0.9993: "full input range of tanh"
 SIGMOID_INPUT_ABSMAX = 8.0
 
+# Attention-region codification constants, shared by the emitter below, the
+# kernel oracle (repro.kernels.ref.qattention_ref), the Pallas kernel and the
+# compiler's region matcher.  The chain is bit-exact only because all four
+# agree on these values and on the op order.
+ATTN_BIG = 30000.0  # additive penalty driving masked scores below any real one
+ATTN_LUT_SCALE = 0.125  # score-delta quantization step; must keep lut[0] == 0
+ATTN_P_SCALE = 127.0  # probability quantization scale
+
+
+def build_exp_lut(lut_scale: float = ATTN_LUT_SCALE) -> np.ndarray:
+    """The 256-entry uint8 exp table the attention region gathers from:
+    ``lut[i] = round(exp((i - 128) · lut_scale) · 255)`` clipped to uint8.
+    Index 128 (score delta 0, the row max) maps to 255.  Index 0 (a delta
+    clipped at −128 steps — masked or far-off keys) must map to exactly 0:
+    that is what makes zero-padded keys contribute nothing to the softmax
+    denominator, i.e. what makes bucket padding bit-exact."""
+    i = np.arange(256, dtype=np.float64)
+    vals = np.rint(np.exp(np.minimum(i - 128.0, 0.0) * float(lut_scale)) * 255.0)
+    lut = np.clip(vals, 0, 255).astype(np.uint8)
+    if lut[0] != 0:
+        raise ValueError(
+            f"lut_scale={lut_scale} too small: lut[0]={lut[0]} != 0 breaks "
+            "zero-padding exactness (need exp(-128*scale)*255 < 0.5)"
+        )
+    return lut
+
+
+def emit_qattention(
+    gb: GraphBuilder,
+    q: str,  # ("N", S, dh) int8 per-head queries
+    k: str,  # ("N", T, dh) int8 per-head keys
+    v: str,  # ("N", T, dh) int8 per-head values
+    mask: str,  # ("N", S, T) f32 {0, 1} validity/causality mask
+    prefix: str,
+    *,
+    qk_scale: float,  # s_q * s_k / sqrt(dh)
+    rescale: float,  # s_v / (p_scale * s_out)
+    big: float = ATTN_BIG,
+    lut_scale: float = ATTN_LUT_SCALE,
+    p_scale: float = ATTN_P_SCALE,
+    out_dtype: str = "int8",
+) -> str:
+    """The codified int8 attention region: MatMulInteger score accumulation,
+    additive {0, −big} masking, max-shifted LUT-softmax (exp as a 256-entry
+    uint8 Gather — no transcendentals anywhere in the artifact), integer
+    renormalization, and a second MatMulInteger against V.  Every op is
+    integer or IEEE-exact f32 elementwise, so the region evaluates bit-
+    identically on the numpy reference runtime, the jnp oracle and the fused
+    Pallas kernel — which is what lets the compiler collapse all ~25 nodes
+    into one ``qattention`` kernel step without a tolerance budget.
+
+    Returns the int8 per-head context tensor name."""
+    kt = gb.op("Transpose", [k], out_hint=f"{prefix}_kT", perm=[0, 2, 1])
+    acc = gb.op("MatMulInteger", [q, kt], out_hint=f"{prefix}_scores_acc")
+    f = gb.op("Cast", [acc], out_hint=f"{prefix}_scores_f32", to="float32")
+    c = gb.add_initializer(f"{prefix}_qk_scale", np.float32(qk_scale))
+    f = gb.op("Mul", [f, c], out_hint=f"{prefix}_scores")
+    sm = gb.op("Mul", [f, mask], out_hint=f"{prefix}_scores_masked")
+    one = gb.add_initializer(f"{prefix}_one", np.float32(1.0))
+    big_c = gb.add_initializer(f"{prefix}_big", np.float32(big))
+    pen = gb.op("Sub", [mask, one], out_hint=f"{prefix}_mask_m1")
+    pen = gb.op("Mul", [pen, big_c], out_hint=f"{prefix}_penalty")
+    masked = gb.op("Add", [sm, pen], out_hint=f"{prefix}_masked")
+    mx = gb.op("ReduceMax", [masked], out_hint=f"{prefix}_rowmax", axes=[2], keepdims=1)
+    d = gb.op("Sub", [masked, mx], out_hint=f"{prefix}_delta")
+    ls = gb.add_initializer(f"{prefix}_lut_scale", np.float32(lut_scale))
+    zp8 = gb.add_initializer(f"{prefix}_zp_i8", np.zeros((), dtype="int8"))
+    dq = gb.op("QuantizeLinear", [d, ls, zp8], out_hint=f"{prefix}_delta_q")
+    idx = gb.op("Cast", [dq], out_hint=f"{prefix}_idx32", to="int32")
+    off = gb.add_initializer(f"{prefix}_idx_off", np.int32(128))
+    idx = gb.op("Add", [idx, off], out_hint=f"{prefix}_idx")
+    lut = gb.add_initializer(f"{prefix}_exp_lut", build_exp_lut(lut_scale))
+    w = gb.op("Gather", [lut, idx], out_hint=f"{prefix}_w", axis=0)
+    wi = gb.op("Cast", [w], out_hint=f"{prefix}_w_i32", to="int32")
+    den = gb.op("ReduceSum", [wi], out_hint=f"{prefix}_den", axes=[2], keepdims=1)
+    denf = gb.op("Cast", [den], out_hint=f"{prefix}_den_f32", to="float32")
+    wf = gb.op("Cast", [w], out_hint=f"{prefix}_w_f32", to="float32")
+    p = gb.op("Div", [wf, denf], out_hint=f"{prefix}_p")
+    ps = gb.add_initializer(f"{prefix}_p_scale", np.float32(p_scale))
+    pf = gb.op("Mul", [p, ps], out_hint=f"{prefix}_p_scaled")
+    one_q = gb.add_initializer(f"{prefix}_pq_scale", np.float32(1.0))
+    pq = gb.op("QuantizeLinear", [pf, one_q, zp8], out_hint=f"{prefix}_p_q")
+    ctx = gb.op("MatMulInteger", [pq, v], out_hint=f"{prefix}_ctx_acc")
+    cf = gb.op("Cast", [ctx], out_hint=f"{prefix}_ctx_f32", to="float32")
+    r = gb.add_initializer(f"{prefix}_att_rescale", np.float32(rescale))
+    cf = gb.op("Mul", [cf, r], out_hint=f"{prefix}_ctx_scaled")
+    out_zp = gb.add_initializer(f"{prefix}_out_zp", np.zeros((), dtype=out_dtype))
+    return gb.op("QuantizeLinear", [cf, one_q, out_zp], out_hint=f"{prefix}_ctx_q")
+
 
 def _codify_scale(value, channel_tail: int) -> np.ndarray:
     """A rescale constant as codified in the artifact: a f32 scalar, or — per

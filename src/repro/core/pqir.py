@@ -63,6 +63,8 @@ STANDARD_OPS = frozenset(
         "AveragePool",
         "GlobalAveragePool",
         "ReduceMean",
+        "ReduceMax",
+        "ReduceSum",
         "Sqrt",
         "Pow",
         "Clip",
@@ -166,12 +168,38 @@ def _decode_array(d: dict) -> np.ndarray:
 
 
 @dataclasses.dataclass
+class StateSpec:
+    """A named state slot: a (graph input, graph output) pair the runtime
+    carries across invocations — ONNX's past/present KV-cache convention
+    (``past_key_values.*`` → ``present.*``) codified on the graph itself.
+
+    The graph stays purely functional: a state is *declared*, not mutated.
+    Each invocation reads the current state through ``input`` and produces
+    the next state at ``output``; the serving layer (or the plan executor)
+    feeds each ``output`` back into its ``input`` on the next call.  Both
+    ends are ordinary declared tensors, so every standard tool that ignores
+    ``states`` still executes the graph correctly one call at a time."""
+
+    name: str
+    input: str
+    output: str
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "input": self.input, "output": self.output}
+
+    @staticmethod
+    def from_json(d: dict) -> "StateSpec":
+        return StateSpec(d["name"], d["input"], d["output"])
+
+
+@dataclasses.dataclass
 class Graph:
     name: str
     inputs: List[TensorInfo]
     outputs: List[TensorInfo]
     nodes: List[Node]
     initializers: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    states: List[StateSpec] = dataclasses.field(default_factory=list)
 
     # -- validation ---------------------------------------------------------
     def validate(self, *, standard_ops_only: bool = True) -> None:
@@ -214,6 +242,26 @@ class Graph:
             seen_outputs.add(t.name)
             if t.name not in produced:
                 raise ValueError(f"graph output {t.name!r} never produced")
+        in_specs = {t.name: t for t in self.inputs}
+        out_specs = {t.name: t for t in self.outputs}
+        seen_states: set = set()
+        for s in self.states:
+            if s.name in seen_states:
+                raise ValueError(f"duplicate state {s.name!r}")
+            seen_states.add(s.name)
+            ti, to = in_specs.get(s.input), out_specs.get(s.output)
+            if ti is None:
+                raise ValueError(f"state {s.name!r} reads {s.input!r}, which is not a graph input")
+            if to is None:
+                raise ValueError(f"state {s.name!r} writes {s.output!r}, which is not a graph output")
+            if ti.dtype != to.dtype:
+                raise ValueError(
+                    f"state {s.name!r} dtype mismatch: reads {ti.dtype}, writes {to.dtype}"
+                )
+            if len(ti.shape) != len(to.shape):
+                raise ValueError(
+                    f"state {s.name!r} rank mismatch: reads {ti.shape}, writes {to.shape}"
+                )
         self.toposorted()  # raises on cycles
 
     def toposorted(self) -> List[Node]:
@@ -253,13 +301,16 @@ class Graph:
         return out
 
     def to_json(self) -> dict:
-        return {
+        doc = {
             "name": self.name,
             "inputs": [t.to_json() for t in self.inputs],
             "outputs": [t.to_json() for t in self.outputs],
             "nodes": [n.to_json() for n in self.nodes],
             "initializers": {k: _encode_array(v) for k, v in self.initializers.items()},
         }
+        if self.states:  # stateless graphs stay byte-identical to pre-state JSON
+            doc["states"] = [s.to_json() for s in self.states]
+        return doc
 
     @staticmethod
     def from_json(d: dict) -> "Graph":
@@ -269,6 +320,7 @@ class Graph:
             outputs=[TensorInfo.from_json(t) for t in d["outputs"]],
             nodes=[Node.from_json(n) for n in d["nodes"]],
             initializers={k: _decode_array(v) for k, v in d.get("initializers", {}).items()},
+            states=[StateSpec.from_json(s) for s in d.get("states", [])],
         )
 
 
@@ -325,6 +377,7 @@ class GraphBuilder:
         self.outputs: List[TensorInfo] = []
         self.nodes: List[Node] = []
         self.initializers: Dict[str, np.ndarray] = {}
+        self.states: List[StateSpec] = []
         self._counter = 0
 
     def fresh(self, hint: str) -> str:
@@ -356,8 +409,15 @@ class GraphBuilder:
         self.add_node(op_type, inputs, [out], name=name, **attrs)
         return out
 
+    def add_state(self, name: str, input: str, output: str) -> StateSpec:
+        """Declare a persistent state slot pairing an existing graph input
+        (the incoming state) with an existing graph output (the next state)."""
+        spec = StateSpec(name, input, output)
+        self.states.append(spec)
+        return spec
+
     def build(self, validate: bool = True, **model_kwargs) -> Model:
-        g = Graph(self.name, self.inputs, self.outputs, self.nodes, self.initializers)
+        g = Graph(self.name, self.inputs, self.outputs, self.nodes, self.initializers, states=self.states)
         m = Model(graph=g, **model_kwargs)
         if validate:
             m.validate()

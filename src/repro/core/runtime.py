@@ -380,6 +380,23 @@ def _reduce_mean(node: Node, inputs):
     return [x.mean(axis=axes, keepdims=keep).astype(x.dtype)]
 
 
+@op("ReduceMax")
+def _reduce_max(node: Node, inputs):
+    axes = tuple(node.attrs.get("axes", None) or range(inputs[0].ndim))
+    keep = bool(node.attrs.get("keepdims", 1))
+    x = inputs[0]
+    return [x.max(axis=axes, keepdims=keep).astype(x.dtype)]
+
+
+@op("ReduceSum")
+def _reduce_sum(node: Node, inputs):
+    axes = tuple(node.attrs.get("axes", None) or range(inputs[0].ndim))
+    keep = bool(node.attrs.get("keepdims", 1))
+    x = inputs[0]
+    # accumulate in the input dtype (int32 sums stay int32, exact)
+    return [x.sum(axis=axes, keepdims=keep, dtype=x.dtype)]
+
+
 # ---------------------------------------------------------------------------
 
 

@@ -197,6 +197,47 @@ def bind_qmatmul_batch(shape: dict, batch: Optional[int]) -> dict:
     return bind_qmatmul_axes(shape, {} if batch is None else {"N": int(batch)})
 
 
+def _bind_dim(d, bindings: dict):
+    """One dim of an attention shape record: named axes substitute from
+    ``bindings``, ints pass through, still-symbolic names stay as-is."""
+    if isinstance(d, str) and d in bindings:
+        return int(bindings[d])
+    return d
+
+
+def bind_qattention_axes(shape: dict, bindings: Optional[dict], *, partial: bool = False) -> dict:
+    """Close a fused-attention template shape record over concrete buckets.
+
+    The template record is ``{"b": lead-dims, "s": S, "t": T, "dh": int}``
+    where ``b`` is the stacked batch×heads leading dims tuple and any entry
+    (or ``s``/``t``) may be a named symbolic axis (``"N"``, ``"S"``).  A full
+    bind substitutes the bindings, flattens ``b`` to its product, and picks
+    the query row-tile ``bq`` via :func:`repro.kernels.qattention.choose_bq`
+    (the autotuner may override it afterwards).  ``partial=True`` substitutes
+    the given axes but keeps the record open — the step then stays a
+    template for the remaining axes."""
+    from . import qattention as _qatt
+
+    bindings = bindings or {}
+    out = dict(shape)
+    lead = tuple(_bind_dim(d, bindings) for d in shape.get("b", ()))
+    out["s"] = _bind_dim(shape.get("s"), bindings)
+    out["t"] = _bind_dim(shape.get("t"), bindings)
+    if partial:
+        out["b"] = lead
+        return out
+    b = 1
+    for d in lead:
+        if not isinstance(d, int):
+            raise ValueError(f"unbound attention batch dim {d!r} in {shape!r}")
+        b *= int(d)
+    if not isinstance(out["s"], int) or not isinstance(out["t"], int):
+        raise ValueError(f"unbound attention seq dims in {out!r}")
+    out["b"] = b
+    out.setdefault("bq", _qatt.choose_bq(out["s"]))
+    return out
+
+
 def specialize_qmatmul_params(
     w_q: np.ndarray,  # (K, N) int8
     bias_q: Optional[np.ndarray],  # (N,) int32

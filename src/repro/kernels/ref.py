@@ -44,3 +44,46 @@ def qmatmul_ref(
 def qact_lut_ref(x_q: jax.Array, lut: jax.Array) -> jax.Array:
     """256-entry LUT gather oracle."""
     return jnp.take(lut, x_q.astype(jnp.int32) + 128)
+
+
+def qattention_ref(
+    q_q: jax.Array,  # (..., S, dh) int8
+    k_q: jax.Array,  # (..., T, dh) int8
+    v_q: jax.Array,  # (..., T, dh) int8
+    mask: jax.Array,  # (..., S, T) f32 {0, 1} validity/causality mask
+    qk_scale: jax.Array,  # scalar f32: s_q * s_k / sqrt(dh)
+    big: jax.Array,  # scalar f32: the additive mask penalty
+    lut_scale: jax.Array,  # scalar f32: score-delta quantization step
+    lut: jax.Array,  # (256,) uint8 exp table (lut[0] must be 0)
+    p_scale: jax.Array,  # scalar f32: probability quantization (127.0)
+    rescale: jax.Array,  # scalar f32: s_v / (p_scale * s_out)
+    *,
+    out_dtype=jnp.int8,
+) -> jax.Array:
+    """Fused int8 attention oracle: the exact op chain the PQ-IR attention
+    region codifies (see ``repro.core.patterns.emit_qattention``), so that
+    ``reference runtime == ref == kernel(interpret=True)`` bit-for-bit.
+
+    Every step is either integer arithmetic or an IEEE-exact f32 elementwise
+    op, so the chain is deterministic across numpy / XLA / Pallas:
+
+        MatMulInteger(Q, K^T) → ×qk_scale → additive {0,-big} mask →
+        ReduceMax/Sub (running-max-free softmax shift) → QuantizeLinear(ls) →
+        exp via 256-entry LUT gather → ReduceSum (int32) → Div →
+        ×p_scale → QuantizeLinear → MatMulInteger(P, V) → ×rescale →
+        QuantizeLinear(out_dtype)
+    """
+    acc = jnp.matmul(q_q.astype(jnp.int32), jnp.swapaxes(k_q.astype(jnp.int32), -1, -2))
+    s_f = acc.astype(jnp.float32) * qk_scale
+    masked = s_f * mask + (mask - 1.0) * big
+    mx = jnp.max(masked, axis=-1, keepdims=True)
+    d = masked - mx  # ≤ 0 everywhere
+    d_q = jnp.clip(jnp.rint(d / lut_scale), -128, 127).astype(jnp.int32)
+    w = jnp.take(lut, d_q + 128)  # uint8 weights; masked positions hit lut[0] == 0
+    den = jnp.sum(w.astype(jnp.int32), axis=-1, keepdims=True)
+    p = w.astype(jnp.float32) / den.astype(jnp.float32)
+    p_q = jnp.clip(jnp.rint(p * p_scale), -128, 127).astype(jnp.int32)
+    ctx = jnp.matmul(p_q, v_q.astype(jnp.int32))
+    f = ctx.astype(jnp.float32) * rescale
+    info = jnp.iinfo(out_dtype)
+    return jnp.clip(jnp.rint(f), info.min, info.max).astype(out_dtype)

@@ -170,9 +170,18 @@ def _node_shape(node: Node, sh, const) -> Shape:  # noqa: C901 (dispatch table)
         return _broadcast(s0, sh(node.inputs[1]))
     if t in ("MatMul", "MatMulInteger"):
         s1 = sh(node.inputs[1])
-        if s0 is None or s1 is None or len(s1) != 2 or len(s0) < 1:
+        if s0 is None or s1 is None or len(s0) < 1:
             return None
-        return tuple(s0[:-1]) + (s1[1],)
+        if len(s1) == 2:
+            return tuple(s0[:-1]) + (s1[1],)
+        # stacked matmul (both operands ≥ 2-D): leading dims broadcast, the
+        # trailing two contract as (…, M, K) @ (…, K, N) -> (…, M, N)
+        if len(s0) < 2 or len(s1) < 2:
+            return None
+        lead = _broadcast(tuple(s0[:-2]), tuple(s1[:-2]))
+        if lead is None:
+            return None
+        return tuple(lead) + (s0[-2], s1[-1])
     if t == "Gemm":
         s1 = sh(node.inputs[1])
         if s0 is None or s1 is None or len(s0) != 2 or len(s1) != 2:
@@ -291,7 +300,7 @@ def _node_shape(node: Node, sh, const) -> Shape:  # noqa: C901 (dispatch table)
         )
     if t == "GlobalAveragePool":
         return None if s0 is None else (s0[0], s0[1], 1, 1)
-    if t == "ReduceMean":
+    if t in ("ReduceMean", "ReduceMax", "ReduceSum"):
         if s0 is None:
             return None
         axes = node.attrs.get("axes")
@@ -401,7 +410,13 @@ _NCHW_OPS = frozenset(
 _BCAST_OPS = frozenset({"Mul", "Add", "Sub", "Div", "Pow"})
 
 
-def axis_mixing_nodes(ga: "GraphAnalysis", axis: str, *, implicit: Optional[bool] = None) -> List[str]:
+def axis_mixing_nodes(
+    ga: "GraphAnalysis",
+    axis: str,
+    *,
+    implicit: Optional[bool] = None,
+    exempt: frozenset = frozenset(),
+) -> List[str]:
     """Nodes that cannot be *proved* elementwise along the dynamic ``axis``.
 
     Scenario-specialized execution pads feeds with zero slabs along each
@@ -428,6 +443,13 @@ def axis_mixing_nodes(ga: "GraphAnalysis", axis: str, *, implicit: Optional[bool
     Conservative by construction: an op the proof cannot reason about
     (unknown shapes, unlisted op types touching an axis-carrying value) is
     reported, not assumed safe.
+
+    ``exempt`` lists node names the *caller* has already proven safe by a
+    stronger, region-level argument — e.g. a fused-attention region whose
+    masked softmax is exact under zero padding because a zero-padded mask
+    forces the padded keys' weights to exactly 0 (see
+    ``repro.core.compile.qattention_exempt_nodes``).  Exempted nodes are
+    skipped, everything else is still proven node-by-node.
     """
     if implicit is None:
         implicit = implicit_batch_graph(ga.graph)
@@ -454,6 +476,8 @@ def axis_mixing_nodes(ga: "GraphAnalysis", axis: str, *, implicit: Optional[bool
 
     problems: List[str] = []
     for node in ga.graph.toposorted():
+        if node.name and node.name in exempt:
+            continue
         ins = [i for i in node.inputs if i]
         carrying = [i for i in ins if carries(i)]
         if not carrying:
@@ -495,7 +519,7 @@ def axis_mixing_nodes(ga: "GraphAnalysis", axis: str, *, implicit: Optional[bool
                 reason = "axis is not on the Gemm row axis"
             elif t != "Gemm" and contraction is not None and p0 == contraction:
                 reason = "axis is the matmul contraction dim"
-            elif t == "MatMul":
+            elif t in ("MatMul", "MatMulInteger"):
                 s1 = ga.shape(node.inputs[1])
                 if s1 is None or len(s1) != 2:
                     reason = "rhs is not a known 2-D operand (stacked matmul may broadcast over the axis)"
@@ -509,7 +533,7 @@ def axis_mixing_nodes(ga: "GraphAnalysis", axis: str, *, implicit: Optional[bool
                 reason = "cannot normalize the softmax axis"
             elif int(node.attrs.get("axis", -1)) % rank == p0:
                 reason = "softmax normalizes over the axis"
-        elif t == "ReduceMean":
+        elif t in ("ReduceMean", "ReduceMax", "ReduceSum"):
             axes = node.attrs.get("axes")
             if axes is None or rank is None or p0 is None:
                 reason = "reduces over all axes (including the dynamic axis)"
@@ -537,7 +561,12 @@ def axis_mixing_nodes(ga: "GraphAnalysis", axis: str, *, implicit: Optional[bool
                 reason = "concatenates along the axis"
         elif t == "Gather":
             if not only_data:
-                reason = "axis rides the indices"
+                # a gather from a *constant* table is elementwise in the
+                # indices (out[..., i, ...] = table[idx[..., i, ...]]), so a
+                # dynamic axis riding the indices never mixes — this is the
+                # embedding-lookup / LUT-gather case of the token path
+                if not (ga.is_const(node.inputs[0]) and set(carrying) <= {node.inputs[1]}):
+                    reason = "axis rides the indices"
             elif rank is None or p0 is None or int(node.attrs.get("axis", 0)) % rank == p0:
                 reason = "gathers along the axis"
         elif t == "Slice":
@@ -668,6 +697,7 @@ def clone_graph(graph: Graph) -> Graph:
         outputs=[dataclasses.replace(t) for t in graph.outputs],
         nodes=[Node(n.op_type, list(n.inputs), list(n.outputs), dict(n.attrs), n.name) for n in graph.nodes],
         initializers=dict(graph.initializers),
+        states=[dataclasses.replace(s) for s in graph.states],
     )
 
 

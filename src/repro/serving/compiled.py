@@ -463,8 +463,10 @@ class CompiledModelServer:
             # so this specialization measures nothing — it just stamps the
             # tuned tiles (and their provenance source tags) into a new plan
             plan = specialize_plan(self.cm.plan, job.bindings, tuner=self.autotuner)
+            # cache_key: graph-qualified when the cache is fleet-shared, the
+            # plain bindings key otherwise — must match what step() looks up
             self.cm.plan_cache.put(
-                bindings_key(job.bindings), (plan, jax.jit(plan.execute))
+                self.cm.cache_key(job.bindings), (plan, jax.jit(plan.execute))
             )
             self._count("tuned_swaps")
             self.registry.counter("autotune.swaps").inc()

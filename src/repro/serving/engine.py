@@ -2,10 +2,24 @@
 
 * Fixed decode batch of ``slots``; finished/empty slots are refilled from the
   request queue each cycle (per-slot KV regions are written independently, so
-  admission is a host-side decision — the jitted decode step never re-compiles).
+  admission is a host-side decision — the decode step never re-compiles).
 * Prefill runs per admitted request (right-padded to a bucket length to bound
   recompiles), then its KV cache is scattered into the slot's region.
 * ``kv_cache_dtype="int8"`` serves with the paper's symmetric int8 cache.
+
+The engine core (queue, slot bookkeeping, sampling, metrics) is model-
+agnostic: all model execution goes through a *token-path adapter* with four
+methods — ``init_cache`` / ``prefill`` / ``decode`` / ``scatter``.  Two
+adapters exist:
+
+* :class:`OpaqueModelAdapter` (default) — the original jitted-JAX seam:
+  ``repro.models.model`` prefill/decode with one jitted prefill per prompt
+  bucket and a single jitted decode step.
+* :class:`repro.serving.token_path.CompiledTokenAdapter` — the PQ-IR lane:
+  prefill and decode are :class:`~repro.core.compile.CompiledModel` plans
+  sharing one :class:`~repro.backend.plan.PlanCache`, the KV cache is the
+  plan's persistent int8 state slots, and every decode step executes a
+  pre-specialized ExecutionPlan (zero per-step re-lowering).
 
 At fleet scale the same structure runs per model replica with the scheduler
 sharded by a front-end router; the engine here is single-replica but the
@@ -109,48 +123,132 @@ def sample_token(
     return int(rng.choice(z.size, p=p))
 
 
-class ServeEngine:
+class OpaqueModelAdapter:
+    """The engine's original jitted-JAX token path, behind the adapter seam.
+
+    One jitted prefill per prompt bucket (bounded LRU — adversarial
+    prompt-length traffic would otherwise pin one jitted fn per bucket
+    forever; sizes surface in the engine metrics), one jitted decode step.
+    The prefill cache is the same :class:`PlanCache` (LRU + uniform
+    hit/miss/hit_rate accounting) the compiled-model path uses for its
+    per-bucket plan specializations — the prefill path is the token engine's
+    instance of exactly that per-shape discipline.
+    """
+
     def __init__(
         self,
         params,
         cfg: ModelConfig,
-        ecfg: EngineConfig,
         *,
         compute_dtype=jnp.float32,
-        registry: Optional[MetricsRegistry] = None,
+        prefill_cache_capacity: int = 8,
     ) -> None:
         self.params = params
         self.cfg = cfg
+        self.compute_dtype = compute_dtype
+        self._decode = jax.jit(
+            lambda p, t, pos, c: M.decode_step(p, t, pos, c, cfg, compute_dtype=compute_dtype)
+        )
+        self.prefill_cache: PlanCache = PlanCache(prefill_cache_capacity, scope="prefill")
+
+    def init_cache(self, slots: int, max_len: int):
+        return M.init_cache(self.cfg, slots, max_len)
+
+    def _prefill_fn(self, plen: int):
+        jitted = self.prefill_cache.get(plen)
+        if jitted is None:
+            cfg, dt = self.cfg, self.compute_dtype
+
+            def fn(params, tokens, cache):
+                return M.prefill(params, {"tokens": tokens}, cfg, cache, compute_dtype=dt, q_chunk=min(plen, 512), kv_chunk=min(plen, 512))
+
+            jitted = jax.jit(fn)
+            self.prefill_cache.put(plen, jitted)
+        return jitted
+
+    def prefill(self, padded: np.ndarray, plen: int, max_len: int):
+        """Run one right-padded prompt ``(1, bucket)``; returns the logits row
+        for the true last prompt token and the single-request KV cache."""
+        bucket = padded.shape[1]
+        pcache = M.init_cache(self.cfg, 1, max_len)
+        logits, pcache = self._prefill_fn(bucket)(self.params, jnp.asarray(padded), pcache)
+        return self._logits_at(padded, plen, logits, pcache)
+
+    def _logits_at(self, padded, plen, last_logits, pcache):
+        """Logits for the true last prompt token (bucket may extend past it)."""
+        if plen == padded.shape[1]:
+            return last_logits[0], pcache
+        # re-run a single decode on position plen-1's token? simpler: prefill
+        # returns last-position logits; for bucketed prompts recompute from the
+        # cached hidden is avoided by decoding token plen-1 explicitly.
+        tok = jnp.asarray(padded[:, plen - 1 : plen])
+        pos = jnp.full((1,), plen - 1, jnp.int32)
+        logits, _ = self._decode(self.params, tok, pos, pcache)
+        return logits[0], pcache
+
+    def decode(self, toks: np.ndarray, pos: np.ndarray, cache):
+        """One batched decode step over all slots; positions are per-slot."""
+        return self._decode(self.params, jnp.asarray(toks), jnp.asarray(pos), cache)
+
+    def scatter(self, cache, slot: int, pcache):
+        """Write a prefilled single-request cache into one slot's region."""
+        def scat(dst, src):
+            if dst.ndim == src.ndim and dst.shape[1:] == src.shape[1:] and src.shape[0] == 1:
+                return dst.at[slot : slot + 1].set(src)
+            # stacked layer dim first: (L, B, ...) — batch is axis 1
+            return dst.at[:, slot : slot + 1].set(src)
+
+        return jax.tree.map(scat, cache, pcache)
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        params=None,
+        cfg: Optional[ModelConfig] = None,
+        ecfg: EngineConfig = None,
+        *,
+        compute_dtype=jnp.float32,
+        registry: Optional[MetricsRegistry] = None,
+        adapter=None,
+    ) -> None:
+        if ecfg is None:
+            raise ValueError("ServeEngine requires an EngineConfig")
         # cache length must cover the largest prefill bucket (same round-up-
         # to-multiple policy the compiled-model grid uses for sequence axes)
         ecfg = dataclasses.replace(
             ecfg, max_len=bucket_multiple(ecfg.max_len, ecfg.prefill_bucket)
         )
         self.ecfg = ecfg
+        if adapter is None:
+            if params is None or cfg is None:
+                raise ValueError(
+                    "ServeEngine needs either (params, cfg) for the default "
+                    "OpaqueModelAdapter or an explicit adapter="
+                )
+            adapter = OpaqueModelAdapter(
+                params, cfg, compute_dtype=compute_dtype,
+                prefill_cache_capacity=_prefill_capacity(ecfg),
+            )
+        self.adapter = adapter
+        self.params = getattr(adapter, "params", params)
+        self.cfg = getattr(adapter, "cfg", cfg)
         self.compute_dtype = compute_dtype
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
         self.slot_pos = np.zeros((ecfg.slots,), np.int32)
         self.slot_live = np.zeros((ecfg.slots,), bool)
         self.slot_budget = np.zeros((ecfg.slots,), np.int32)
-        self.cache = M.init_cache(cfg, ecfg.slots, ecfg.max_len)
-        self._decode = jax.jit(
-            lambda p, t, pos, c: M.decode_step(p, t, pos, c, cfg, compute_dtype=compute_dtype)
-        )
-        # bounded: adversarial prompt-length traffic would otherwise pin one
-        # jitted prefill per bucket forever (sizes surface in self.metrics);
-        # the default bound covers every reachable bucket, so it only evicts
-        # when explicitly configured tighter.  Same PlanCache (LRU + uniform
-        # hit/miss/hit_rate accounting) the compiled-model path uses for its
-        # per-bucket plan specializations — the prefill path is the token
-        # engine's instance of exactly that per-shape discipline.
-        self._prefill_cache: PlanCache = PlanCache(_prefill_capacity(ecfg), scope="prefill")
+        self.cache = adapter.init_cache(ecfg.slots, ecfg.max_len)
         self._rng = np.random.default_rng(ecfg.seed)
         # per-instance registry unless the caller injects a shared one; the
-        # prefill cache publishes its canonical cache.prefill.* gauges and
-        # the flat prefill_cache_* keys below stay as read-only aliases
+        # adapter's prefill cache (when it keeps one) publishes its canonical
+        # cache.prefill.* gauges and the flat prefill_cache_* keys below stay
+        # as read-only aliases
         self.registry = registry if registry is not None else MetricsRegistry()
-        self._prefill_cache.attach_metrics(self.registry)
+        self._prefill_cache: Optional[PlanCache] = getattr(adapter, "prefill_cache", None)
+        if self._prefill_cache is not None:
+            self._prefill_cache.attach_metrics(self.registry)
         self.metrics = {
             "decode_steps": 0,
             "prefills": 0,
@@ -203,22 +301,14 @@ class ServeEngine:
         req.generated = []
         self.queue.append(req)
 
-    def _prefill_fn(self, plen: int):
-        jitted = self._prefill_cache.get(plen)
-        if jitted is None:
-            cfg, dt = self.cfg, self.compute_dtype
-
-            def fn(params, tokens, cache):
-                return M.prefill(params, {"tokens": tokens}, cfg, cache, compute_dtype=dt, q_chunk=min(plen, 512), kv_chunk=min(plen, 512))
-
-            jitted = jax.jit(fn)
-            self._prefill_cache.put(plen, jitted)
+    def _sync_cache_metrics(self) -> None:
+        if self._prefill_cache is None:
+            return
         stats = self._prefill_cache.stats
         self.metrics["prefill_cache_size"] = stats["size"]
         self.metrics["prefill_cache_hits"] = stats["hits"]
         self.metrics["prefill_cache_evictions"] = stats["evictions"]
         self.metrics["prefill_cache_hit_rate"] = stats["hit_rate"]
-        return jitted
 
     def _admit(self) -> None:
         for slot in range(self.ecfg.slots):
@@ -230,13 +320,14 @@ class ServeEngine:
                 bucket = bucket_multiple(plen, self.ecfg.prefill_bucket)
                 padded = np.zeros((1, bucket), np.int32)
                 padded[0, :plen] = req.prompt
-                pcache = M.init_cache(self.cfg, 1, self.ecfg.max_len)
-                with _trace.span("engine.prefill", uid=req.uid, plen=plen, bucket=bucket):
-                    logits, pcache = self._prefill_fn(bucket)(self.params, jnp.asarray(padded), pcache)
-                # prefill wrote [0, bucket); only [0, plen) is meaningful — the
+                # prefill writes [0, bucket); only [0, plen) is meaningful — the
                 # causal mask means padding beyond plen is never attended by
                 # positions < plen, and decode continues exactly at plen.
-                first_logits, _ = self._logits_at(padded, plen, logits, pcache)
+                with _trace.span("engine.prefill", uid=req.uid, plen=plen, bucket=bucket):
+                    first_logits, pcache = self.adapter.prefill(
+                        padded, plen, self.ecfg.max_len
+                    )
+                self._sync_cache_metrics()
                 tok = self._select(first_logits)
                 req.generated.append(tok)
                 req.t_first = time.monotonic()
@@ -249,32 +340,11 @@ class ServeEngine:
                     req.t_done = req.t_first
                     self._count("completed")
                     continue
-                self._scatter_cache(slot, pcache)
+                self.cache = self.adapter.scatter(self.cache, slot, pcache)
                 self.active[slot] = req
                 self.slot_pos[slot] = plen
                 self.slot_live[slot] = True
                 self.slot_budget[slot] = req.max_new_tokens - 1
-
-    def _logits_at(self, padded, plen, last_logits, pcache):
-        """Logits for the true last prompt token (bucket may extend past it)."""
-        if plen == padded.shape[1]:
-            return last_logits[0], pcache
-        # re-run a single decode on position plen-1's token? simpler: prefill
-        # returns last-position logits; for bucketed prompts recompute from the
-        # cached hidden is avoided by decoding token plen-1 explicitly.
-        tok = jnp.asarray(padded[:, plen - 1 : plen])
-        pos = jnp.full((1,), plen - 1, jnp.int32)
-        logits, _ = self._decode(self.params, tok, pos, pcache)
-        return logits[0], pcache
-
-    def _scatter_cache(self, slot: int, pcache) -> None:
-        def scat(dst, src):
-            if dst.ndim == src.ndim and dst.shape[1:] == src.shape[1:] and src.shape[0] == 1:
-                return dst.at[slot : slot + 1].set(src)
-            # stacked layer dim first: (L, B, ...) — batch is axis 1
-            return dst.at[:, slot : slot + 1].set(src)
-
-        self.cache = jax.tree.map(scat, self.cache, pcache)
 
     # -- main loop --------------------------------------------------------------
     def step(self) -> None:
@@ -285,9 +355,8 @@ class ServeEngine:
         toks = np.zeros((self.ecfg.slots, 1), np.int32)
         for slot, req in self.active.items():
             toks[slot, 0] = req.generated[-1]
-        pos = jnp.asarray(self.slot_pos)
         with _trace.span("engine.decode", live=int(self.slot_live.sum())):
-            logits, self.cache = self._decode(self.params, jnp.asarray(toks), pos, self.cache)
+            logits, self.cache = self.adapter.decode(toks, self.slot_pos, self.cache)
         self._count("decode_steps")
         if self.ecfg.greedy:
             # argmax on device: transfers `slots` ints, not slots×vocab floats

@@ -259,6 +259,23 @@ def _case_reduce_mean(rng):
     return _finish(gb, y, "float32"), {"x": _rngf(rng, (2, 3, 5))}
 
 
+def _case_reduce_max(rng):
+    # keepdims on the last axis — the attention max-subtract shape
+    gb = _g("rmax")
+    x = gb.add_input("x", "float32", (2, 4, 7))
+    y = gb.op("ReduceMax", [x], axes=(2,), keepdims=1)
+    return _finish(gb, y, "float32"), {"x": _rngf(rng, (2, 4, 7))}
+
+
+def _case_reduce_sum(rng):
+    # int32 accumulator reduction, as the attention probability normalizer
+    gb = _g("rsum")
+    x = gb.add_input("x", "int32", (2, 4, 7))
+    y = gb.op("ReduceSum", [x], axes=(2,), keepdims=1)
+    feeds = {"x": rng.integers(0, 255, (2, 4, 7)).astype(np.int32)}
+    return _finish(gb, y, "int32"), feeds
+
+
 CASES = {
     "MatMulInteger": _case_matmul_integer,
     "ConvInteger": _case_conv_integer,
@@ -291,6 +308,8 @@ CASES = {
     "AveragePool": _pool("AveragePool"),
     "GlobalAveragePool": _case_gap,
     "ReduceMean": _case_reduce_mean,
+    "ReduceMax": _case_reduce_max,
+    "ReduceSum": _case_reduce_sum,
 }
 
 

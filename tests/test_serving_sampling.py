@@ -5,7 +5,13 @@ prefill-function cache.
 import numpy as np
 
 from repro.core.cache import LruCache
-from repro.serving.engine import EngineConfig, ServeEngine, sample_token, seed_sampler
+from repro.serving.engine import (
+    EngineConfig,
+    OpaqueModelAdapter,
+    ServeEngine,
+    sample_token,
+    seed_sampler,
+)
 
 
 def _logits(rng, vocab=32):
@@ -119,33 +125,39 @@ class TestPrefillCapacityDefault:
 
 
 class TestPrefillCacheBounded:
-    def _engine(self, capacity):
+    def _pair(self, capacity):
         # _prefill_fn only touches cfg/compute_dtype inside the (untraced)
-        # closure, the cache, and metrics — skip the heavy model setup
+        # closure and the cache — skip the heavy model setup; the engine stub
+        # carries just enough state for _sync_cache_metrics
+        ad = object.__new__(OpaqueModelAdapter)
+        ad.cfg = None
+        ad.compute_dtype = None
+        ad.prefill_cache = LruCache(capacity)
         eng = object.__new__(ServeEngine)
-        eng.cfg = None
-        eng.compute_dtype = None
-        eng._prefill_cache = LruCache(capacity)
+        eng.adapter = ad
+        eng._prefill_cache = ad.prefill_cache
         eng.metrics = {}
-        return eng
+        return ad, eng
 
     def test_repeat_bucket_reuses_jitted_fn(self):
-        eng = self._engine(capacity=4)
-        f32 = eng._prefill_fn(32)
-        assert eng._prefill_fn(32) is f32
+        ad, eng = self._pair(capacity=4)
+        f32 = ad._prefill_fn(32)
+        assert ad._prefill_fn(32) is f32
+        eng._sync_cache_metrics()
         assert eng.metrics["prefill_cache_size"] == 1
         assert eng.metrics["prefill_cache_evictions"] == 0
         # uniform hit accounting: the engine surfaces LruCache's own
         # hits/hit_rate, same numbers CompiledModel.cache_stats reports
         assert eng.metrics["prefill_cache_hits"] == 1
-        assert eng.metrics["prefill_cache_hit_rate"] == eng._prefill_cache.hit_rate == 0.5
+        assert eng.metrics["prefill_cache_hit_rate"] == ad.prefill_cache.hit_rate == 0.5
 
     def test_lru_eviction_and_metrics(self):
-        eng = self._engine(capacity=2)
-        f32 = eng._prefill_fn(32)
-        eng._prefill_fn(64)
-        eng._prefill_fn(96)  # evicts bucket 32
+        ad, eng = self._pair(capacity=2)
+        f32 = ad._prefill_fn(32)
+        ad._prefill_fn(64)
+        ad._prefill_fn(96)  # evicts bucket 32
+        eng._sync_cache_metrics()
         assert eng.metrics["prefill_cache_size"] == 2
         assert eng.metrics["prefill_cache_evictions"] == 1
-        assert 32 not in eng._prefill_cache
-        assert eng._prefill_fn(32) is not f32  # rebuilt after eviction
+        assert 32 not in ad.prefill_cache
+        assert ad._prefill_fn(32) is not f32  # rebuilt after eviction
